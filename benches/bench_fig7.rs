@@ -1,0 +1,60 @@
+//! Fig. 7 — expected convergence profiles (best quality vs ERT) of the
+//! three algorithms on four illustrative BBOB functions, dim 40.
+//!
+//! `cargo bench --bench bench_fig7` — writes bench_out/fig7_f<id>.csv.
+
+use ipopcma::harness::{ert_per_target, Campaign, RunKey, Scale};
+use ipopcma::metrics::paper_targets;
+use ipopcma::report::{ascii_table, fmt_val, Csv};
+use ipopcma::strategies::Algo;
+
+fn main() {
+    let dim = 40;
+    let cost_ms = 0.0;
+    let fids = [1usize, 7, 10, 17]; // sphere, step-ellipsoid, ellipsoid, Schaffers
+    let targets = paper_targets();
+    let scale = Scale::for_dim(dim);
+    let mut campaign = Campaign::open();
+
+    for &fid in &fids {
+        eprintln!("fig7: f{fid} …");
+        let mut csv = Csv::new(&["target", "seq_ert_s", "krep_ert_s", "kdist_ert_s"]);
+        let mut rows = Vec::new();
+        let per_algo: Vec<Vec<_>> = Algo::ALL
+            .iter()
+            .map(|&algo| {
+                (0..scale.seeds)
+                    .map(|seed| campaign.run(RunKey { algo, fid, dim, cost_ms, seed }))
+                    .collect()
+            })
+            .collect();
+        for (ti, tgt) in targets.iter().enumerate() {
+            let erts: Vec<Option<f64>> = per_algo
+                .iter()
+                .map(|runs| ert_per_target(&runs.iter().collect::<Vec<_>>(), ti))
+                .collect();
+            csv.row(&[
+                format!("{tgt:.1e}"),
+                erts[0].map(|v| format!("{v:.6e}")).unwrap_or_default(),
+                erts[1].map(|v| format!("{v:.6e}")).unwrap_or_default(),
+                erts[2].map(|v| format!("{v:.6e}")).unwrap_or_default(),
+            ]);
+            rows.push(vec![
+                format!("{tgt:.1e}"),
+                fmt_val(erts[0]),
+                fmt_val(erts[1]),
+                fmt_val(erts[2]),
+            ]);
+        }
+        csv.write_to(format!("bench_out/fig7_f{fid}.csv")).expect("write csv");
+        println!(
+            "{}",
+            ascii_table(
+                &format!("Fig. 7 — ERT (virtual s) to each target, f{fid} dim {dim}"),
+                &["target".into(), "sequential".into(), "k-replicated".into(), "k-distributed".into()],
+                &rows,
+            )
+        );
+    }
+    println!("paper shape: relative order depends on function and target; parallel variants\ndominate the deeper targets. CSV: bench_out/fig7_f*.csv");
+}

@@ -1,0 +1,161 @@
+//! Fig. 5 — performance gains of the linear-algebra rewrites (§3.1/§4.2):
+//! eigendecomposition (reference Jacobi vs `syev`), covariance
+//! adaptation and sampling (naive vs Level-2 vs Level-3), for dims
+//! {10, 40, 200, 1000} and K ∈ {1, big}.
+//!
+//! `cargo bench --bench bench_linalg` — writes bench_out/fig5.csv.
+
+use ipopcma::cmaes::{CmaState, Compute, NativeCompute};
+use ipopcma::harness::time_median;
+use ipopcma::linalg::{EigKind, Matrix};
+use ipopcma::report::{ascii_table, fmt_val, Csv};
+use ipopcma::rng::NormalSource;
+
+const LAMBDA_START: usize = 12; // the paper's λ_start
+
+fn random_state(n: usize, seed: u64) -> CmaState {
+    // A mildly anisotropic SPD covariance so eig/gemm see real work.
+    let mut g = NormalSource::new(seed);
+    let mut st = CmaState::new(vec![0.0; n], 1.0);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = 0.05 * g.sample();
+            st.c[(i, j)] = v;
+            st.c[(j, i)] = v;
+        }
+        st.c[(i, i)] = 1.0 + 0.5 * (i as f64 / n as f64);
+    }
+    st.refresh_eigen(EigKind::Syev);
+    st
+}
+
+fn time_sample(tier: NativeCompute, st: &CmaState, lambda: usize, reps: usize) -> f64 {
+    let n = st.dim();
+    let mut g = NormalSource::new(7);
+    let z = Matrix::from_fn(n, lambda, |_, _| g.sample());
+    let mut y = Matrix::zeros(n, lambda);
+    let mut t = tier;
+    time_median(reps, || {
+        t.sample_y(st, &z, &mut y);
+        y[(0, 0)]
+    })
+}
+
+fn time_update(tier: NativeCompute, n: usize, lambda: usize, reps: usize) -> f64 {
+    let mu = lambda / 2;
+    let mut g = NormalSource::new(9);
+    let y_sel = Matrix::from_fn(n, mu, |_, _| g.sample());
+    let w: Vec<f64> = {
+        let mut w: Vec<f64> = (0..mu).map(|i| ((mu - i) as f64).ln() + 1.0).collect();
+        let s: f64 = w.iter().sum();
+        w.iter_mut().for_each(|v| *v /= s);
+        w
+    };
+    let c0 = Matrix::eye(n);
+    let mut t = tier;
+    time_median(reps, || {
+        let mut c = c0.clone();
+        t.rank_mu_update(&mut c, 0.9, 0.08, &y_sel, &w);
+        c[(0, 0)]
+    })
+}
+
+fn time_eig(kind: EigKind, st: &CmaState, reps: usize) -> f64 {
+    time_median(reps, || {
+        let e = kind.decompose(&st.c);
+        e.values[0]
+    })
+}
+
+fn main() {
+    let dims: &[usize] = &[10, 40, 200, 1000];
+    let mut csv = Csv::new(&[
+        "dim", "k", "lambda", "eig_ref_s", "eig_syev_s", "adapt_naive_s", "adapt_l2_s",
+        "adapt_l3_s", "sample_naive_s", "sample_l2_s", "sample_l3_s",
+    ]);
+    let mut rows = Vec::new();
+
+    for &n in dims {
+        // Paper columns: K = 1 and K = 2⁸ (scaled down for n > 40 to keep
+        // naive-tier timing tractable on one core).
+        let k_big = if n <= 40 { 256 } else { 16 };
+        let reps = if n >= 1000 { 1 } else if n >= 200 { 3 } else { 9 };
+        let st = random_state(n, 3);
+
+        for (klabel, lambda) in [("1", LAMBDA_START), ("big", k_big * LAMBDA_START)] {
+            // Eig is λ-independent; time it once per dim (K=1 row).
+            let (eig_ref, eig_syev) = if klabel == "1" {
+                let syev = time_eig(EigKind::Syev, &st, reps);
+                // Cyclic Jacobi at n=1000 takes minutes; extrapolate from
+                // n=200 cubically (marked * in the table).
+                let jac = if n <= 200 {
+                    time_eig(EigKind::Jacobi, &st, reps.min(3))
+                } else {
+                    let st200 = random_state(200, 3);
+                    time_eig(EigKind::Jacobi, &st200, 1) * (n as f64 / 200.0).powi(3)
+                };
+                (jac, syev)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+
+            let adapt_naive = time_update(NativeCompute::reference(), n, lambda, reps);
+            let adapt_l2 = time_update(NativeCompute::level2(), n, lambda, reps);
+            let adapt_l3 = time_update(NativeCompute::level3(), n, lambda, reps);
+            let sample_naive = time_sample(NativeCompute::reference(), &st, lambda, reps);
+            let sample_l2 = time_sample(NativeCompute::level2(), &st, lambda, reps);
+            let sample_l3 = time_sample(NativeCompute::level3(), &st, lambda, reps);
+
+            csv.row(&[
+                n.to_string(),
+                klabel.to_string(),
+                lambda.to_string(),
+                format!("{eig_ref:.3e}"),
+                format!("{eig_syev:.3e}"),
+                format!("{adapt_naive:.3e}"),
+                format!("{adapt_l2:.3e}"),
+                format!("{adapt_l3:.3e}"),
+                format!("{sample_naive:.3e}"),
+                format!("{sample_l2:.3e}"),
+                format!("{sample_l3:.3e}"),
+            ]);
+
+            rows.push(vec![
+                n.to_string(),
+                klabel.to_string(),
+                if eig_ref.is_nan() {
+                    "-".into()
+                } else {
+                    format!(
+                        "{}{}",
+                        fmt_val(Some(eig_ref / eig_syev)),
+                        if n > 200 { "*" } else { "" }
+                    )
+                },
+                fmt_val(Some(adapt_naive / adapt_l2)),
+                fmt_val(Some(adapt_naive / adapt_l3)),
+                fmt_val(Some(sample_naive / sample_l2)),
+                fmt_val(Some(sample_naive / sample_l3)),
+            ]);
+        }
+    }
+
+    csv.write_to("bench_out/fig5.csv").expect("write csv");
+    println!(
+        "{}",
+        ascii_table(
+            "Fig. 5 — linalg speedups over the reference tier (K 'big' = 2^8 for n<=40, 2^4 beyond; * = Jacobi extrapolated)",
+            &[
+                "dim".into(),
+                "K".into(),
+                "eig x".into(),
+                "adapt L2 x".into(),
+                "adapt L3 x".into(),
+                "sample L2 x".into(),
+                "sample L3 x".into(),
+            ],
+            &rows,
+        )
+    );
+    println!("paper shape: eig gain grows with dim; adaptation L3 >> L2 ~ 1; sampling L3 > L2;\nall GEMM gains grow with K. CSV: bench_out/fig5.csv");
+}

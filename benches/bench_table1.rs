@@ -1,0 +1,74 @@
+//! Table 1 — proportion of linear-algebra runtime within sequential
+//! IPOP-CMA-ES, with the reference tier vs the Level-3/LAPACK tier
+//! (paper §4.2), per dimension.
+//!
+//! `cargo bench --bench bench_table1` — writes bench_out/table1.csv.
+
+use ipopcma::bbob::Instance;
+use ipopcma::cmaes::{FnEvaluator, NativeCompute, StopConfig, Timings};
+use ipopcma::ipop::{make_descent, IpopConfig};
+use ipopcma::report::{ascii_table, Csv};
+
+/// Accumulate timings of a short sequential IPOP ladder on one function.
+fn measure(tier: NativeCompute, fid: usize, dim: usize, evals_per_descent: usize) -> Timings {
+    let mut cfg = IpopConfig::bbob(12, 8);
+    cfg.stop = StopConfig { max_evals: evals_per_descent, ..Default::default() };
+    let inst = Instance::new(fid, dim, 1);
+    let mut total = Timings::default();
+    for (i, k) in cfg.ladder().into_iter().enumerate() {
+        let mut d = make_descent(&cfg, dim, k, 40 + i as u64, Box::new(tier), evals_per_descent);
+        let mut e = FnEvaluator(|x: &[f64]| inst.eval(x));
+        let _ = d.run_to_stop(&mut e);
+        total.add(&d.timings);
+    }
+    total
+}
+
+fn main() {
+    let dims: &[usize] = &[10, 40, 200];
+    // A spread of functions across groups, averaged as in the paper.
+    let fids = [1usize, 6, 10, 15, 20];
+    let mut csv = Csv::new(&["dim", "tier", "linalg_s", "eval_s", "linalg_share"]);
+    let mut rows = Vec::new();
+
+    for &dim in dims {
+        // The reference tier's Jacobi eigensolver is O(n³) per refresh
+        // with a much larger constant: keep dim-200 budgets small so the
+        // bench stays tractable (shares are ratios, not absolute times).
+        let evals = if dim >= 200 { 1_200 } else { 10_000 };
+        let fids_here: &[usize] = if dim >= 200 { &fids[..3] } else { &fids };
+        for (label, tier) in [
+            ("reference", NativeCompute::reference()),
+            ("level3+syev", NativeCompute::level3()),
+        ] {
+            let mut acc = Timings::default();
+            for &fid in fids_here {
+                acc.add(&measure(tier, fid, dim, evals));
+            }
+            let share = acc.linalg_s() / acc.total_s();
+            csv.row(&[
+                dim.to_string(),
+                label.to_string(),
+                format!("{:.4}", acc.linalg_s()),
+                format!("{:.4}", acc.eval_s),
+                format!("{share:.4}"),
+            ]);
+            rows.push(vec![
+                dim.to_string(),
+                label.to_string(),
+                format!("{:.1}%", 100.0 * share),
+            ]);
+        }
+    }
+
+    csv.write_to("bench_out/table1.csv").expect("write csv");
+    println!(
+        "{}",
+        ascii_table(
+            "Table 1 — linalg share of sequential IPOP runtime (avg over 5 BBOB functions)",
+            &["dim".into(), "tier".into(), "linalg share".into()],
+            &rows,
+        )
+    );
+    println!("paper shape: the Level-3/LAPACK tier turns linalg from a majority share at high\ndim into a minority. CSV: bench_out/table1.csv");
+}

@@ -1,0 +1,143 @@
+//! Table 2 — speedups of K-Replicated and K-Distributed over sequential
+//! IPOP-CMA-ES, aggregated over (function, target) pairs (paper §4.3.2):
+//! avg / std / min / max speedup plus the i/i win counts, for
+//! dims {10, 40} × additional costs {0, 1, 10, 100 ms} and dim 200
+//! (cost 0). Dim 1000 is out of this testbed's real-compute reach; the
+//! dimension trend is carried by 10 → 40 → 200 (see DESIGN.md §2).
+//!
+//! `cargo bench --bench bench_table2` — writes bench_out/table2.csv.
+//! First run computes the shared campaign cache (bench_out/cache/);
+//! subsequent benches reuse it.
+
+use ipopcma::harness::{ert_per_target_strict, Campaign, RunSummary, Scale};
+use ipopcma::metrics::{paper_targets, SpeedupStats};
+use ipopcma::report::{ascii_table, fmt_val, Csv};
+use ipopcma::strategies::Algo;
+
+struct CellStats {
+    rep: SpeedupStats,
+    dist: SpeedupStats,
+    rep_wins: usize,
+    dist_wins: usize,
+}
+
+fn cell_stats(c: &mut Campaign, dim: usize, cost_ms: f64, fids: &[usize]) -> CellStats {
+    let scale = Scale::for_dim(dim);
+    let targets = paper_targets();
+    let mut rep_speedups = Vec::new();
+    let mut dist_speedups = Vec::new();
+    let mut rep_wins = 0;
+    let mut dist_wins = 0;
+
+    for &fid in fids {
+        // Group by algo across seeds.
+        let by_algo = |c: &mut Campaign, algo: Algo| -> Vec<RunSummary> {
+            (0..scale.seeds)
+                .map(|seed| {
+                    c.run(ipopcma::harness::RunKey { algo, fid, dim, cost_ms, seed })
+                })
+                .collect()
+        };
+        let seq = by_algo(c, Algo::Sequential);
+        let rep = by_algo(c, Algo::KReplicated);
+        let dist = by_algo(c, Algo::KDistributed);
+
+        for (ti, _) in targets.iter().enumerate() {
+            let e_seq = ert_per_target_strict(&seq.iter().collect::<Vec<_>>(), ti);
+            let e_rep = ert_per_target_strict(&rep.iter().collect::<Vec<_>>(), ti);
+            let e_dist = ert_per_target_strict(&dist.iter().collect::<Vec<_>>(), ti);
+            // Speedups only where both the sequential baseline and the
+            // parallel strategy hit the target (paper footnote 5).
+            if let (Some(s), Some(r)) = (e_seq, e_rep) {
+                rep_speedups.push(s / r);
+            }
+            if let (Some(s), Some(d)) = (e_seq, e_dist) {
+                dist_speedups.push(s / d);
+            }
+            // i/i: direct comparison of the two parallel strategies where
+            // both hit the target.
+            if let (Some(r), Some(d)) = (e_rep, e_dist) {
+                if r < d {
+                    rep_wins += 1;
+                } else if d < r {
+                    dist_wins += 1;
+                }
+            }
+        }
+    }
+
+    CellStats {
+        rep: SpeedupStats::from(&rep_speedups),
+        dist: SpeedupStats::from(&dist_speedups),
+        rep_wins,
+        dist_wins,
+    }
+}
+
+fn main() {
+    let fids: Vec<usize> = (1..=24).collect();
+    let cells: Vec<(usize, f64)> = vec![
+        (10, 0.0),
+        (10, 1.0),
+        (10, 10.0),
+        (10, 100.0),
+        (40, 0.0),
+        (40, 1.0),
+        (40, 10.0),
+        (40, 100.0),
+        (200, 0.0),
+    ];
+
+    let mut campaign = Campaign::open();
+    let mut csv = Csv::new(&[
+        "dim", "cost_ms", "algo", "avg", "std", "min", "max", "count", "rep_wins", "dist_wins",
+    ]);
+
+    let mut header = vec!["".to_string()];
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["K-Rep avg".into()],
+        vec!["K-Rep std".into()],
+        vec!["K-Rep min".into()],
+        vec!["K-Rep max".into()],
+        vec!["K-Dist avg".into()],
+        vec!["K-Dist std".into()],
+        vec!["K-Dist min".into()],
+        vec!["K-Dist max".into()],
+        vec!["i/i (rep/dist)".into()],
+    ];
+
+    for &(dim, cost) in &cells {
+        eprintln!("table2: computing cell dim={dim} cost={cost}ms …");
+        let s = cell_stats(&mut campaign, dim, cost, &fids);
+        header.push(format!("d{dim}/{cost}ms"));
+        for (row, v) in rows.iter_mut().zip([
+            s.rep.avg, s.rep.std, s.rep.min, s.rep.max, s.dist.avg, s.dist.std, s.dist.min,
+            s.dist.max,
+        ]) {
+            row.push(fmt_val(Some(v)));
+        }
+        rows[8].push(format!("{}/{}", s.rep_wins, s.dist_wins));
+
+        for (name, st) in [("k-replicated", &s.rep), ("k-distributed", &s.dist)] {
+            csv.row(&[
+                dim.to_string(),
+                cost.to_string(),
+                name.to_string(),
+                format!("{:.3}", st.avg),
+                format!("{:.3}", st.std),
+                format!("{:.3}", st.min),
+                format!("{:.3}", st.max),
+                st.count.to_string(),
+                s.rep_wins.to_string(),
+                s.dist_wins.to_string(),
+            ]);
+        }
+    }
+
+    csv.write_to("bench_out/table2.csv").expect("write csv");
+    println!(
+        "{}",
+        ascii_table("Table 2 — speedups over sequential IPOP-CMA-ES (scaled testbed)", &header, &rows)
+    );
+    println!("paper shape: K-Dist avg ≥ K-Rep avg in (almost) every cell; dist wins the vast\nmajority of i/i; speedups grow with cost and with dim (200 > 40 at cost 0);\nsuper-linear maxima appear for K-Dist. CSV: bench_out/table2.csv");
+}

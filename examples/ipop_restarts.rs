@@ -1,0 +1,75 @@
+//! Anatomy of the IPOP restart ladder (Algorithm 2): watch the stopping
+//! criteria fire and the population double, per BBOB function group, and
+//! compare against plain (fixed-λ) restarts.
+//!
+//!     cargo run --release --example ipop_restarts
+
+use ipopcma::bbob::Instance;
+use ipopcma::cmaes::{FnEvaluator, NativeCompute, StopConfig, StopReason};
+use ipopcma::ipop::{self, make_descent, IpopConfig};
+use ipopcma::report::ascii_table;
+
+fn main() {
+    let dim = 10;
+    let fid = 15; // rotated Rastrigin — needs large populations
+    let inst = Instance::new(fid, dim, 2);
+    let target = inst.fopt + 1e-8;
+
+    // --- IPOP ladder -----------------------------------------------------
+    let mut cfg = IpopConfig::bbob(8, 64);
+    cfg.stop = StopConfig { target_f: Some(target), ..Default::default() };
+    cfg.max_evals = 600_000;
+    let res = ipop::run(&cfg, dim, |x| inst.eval(x), 5);
+
+    let mut rows = Vec::new();
+    for d in &res.descents {
+        rows.push(vec![
+            d.k.to_string(),
+            d.lambda.to_string(),
+            d.iterations.to_string(),
+            d.evals.to_string(),
+            format!("{:.3e}", d.best_f - inst.fopt),
+            d.stop.name().to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &format!("IPOP-CMA-ES on f{fid} (rotated Rastrigin), dim {dim}"),
+            &["K".into(), "λ".into(), "iters".into(), "evals".into(), "Δf".into(), "stop".into()],
+            &rows,
+        )
+    );
+    println!(
+        "IPOP result: Δf = {:.3e} with {} evals\n",
+        res.best_f - inst.fopt,
+        res.total_evals
+    );
+
+    // --- Fixed-λ restarts (the ablation IPOP §2.2 argues against) --------
+    let mut best = f64::INFINITY;
+    let mut evals = 0usize;
+    let mut restarts = 0;
+    while evals < res.total_evals && best > 1e-8 {
+        let mut d = make_descent(
+            &cfg,
+            dim,
+            1,
+            1000 + restarts as u64,
+            Box::new(NativeCompute::level3()),
+            cfg.max_evals - evals,
+        );
+        let mut e = FnEvaluator(|x: &[f64]| inst.eval(x));
+        let (reason, _) = d.run_to_stop(&mut e);
+        evals += d.evals;
+        best = best.min(d.best_f - inst.fopt);
+        restarts += 1;
+        if reason == StopReason::TargetReached {
+            break;
+        }
+    }
+    println!(
+        "Fixed-λ restarts (same budget): Δf = {best:.3e} after {restarts} restarts, {evals} evals"
+    );
+    println!("IPOP's doubling typically reaches deeper targets on multimodal functions —\nthe effect the paper's Table 5 quantifies.");
+}

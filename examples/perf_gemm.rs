@@ -1,0 +1,27 @@
+//! §Perf probe: GFLOP/s of the three GEMM tiers and the two eigensolvers
+//! at CMA-ES-relevant shapes. Used for the EXPERIMENTS.md §Perf log.
+fn main() {
+    use ipopcma::harness::time_median;
+    use ipopcma::linalg::*;
+    use ipopcma::rng::Xoshiro256pp;
+    let mut rng = Xoshiro256pp::new(1);
+    for &(m, k, n, reps) in &[(1000usize, 1000usize, 1000usize, 3usize), (1000, 1000, 192, 5), (40, 40, 192, 50), (200, 200, 96, 20)] {
+        let a = Matrix::from_fn(m, k, |_, _| rng.uniform(-1.0, 1.0));
+        let b = Matrix::from_fn(k, n, |_, _| rng.uniform(-1.0, 1.0));
+        let mut c = Matrix::zeros(m, n);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        for kind in [GemmKind::Level3, GemmKind::Level2, GemmKind::Naive] {
+            if kind != GemmKind::Level3 && m >= 1000 && n >= 1000 { continue; }
+            let t = time_median(reps, || { gemm(kind, 1.0, &a, &b, 0.0, &mut c); c[(0,0)] });
+            println!("gemm {} {m}x{k}x{n}: {:.3}s  {:.2} GF/s", kind.name(), t, flops / t / 1e9);
+        }
+    }
+    for &n in &[40usize, 200] {
+        let mut a = Matrix::from_fn(n, n, |_, _| rng.uniform(-1.0, 1.0));
+        a.symmetrize();
+        let t = time_median(3, || syev(&a).values[0]);
+        println!("syev n={n}: {:.4}s", t);
+        let t = time_median(3, || jacobi_eig(&a).values[0]);
+        println!("jacobi n={n}: {:.4}s", t);
+    }
+}

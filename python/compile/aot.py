@@ -1,0 +1,130 @@
+"""AOT lowering: JAX/Pallas model → HLO **text** artifacts + manifest.
+
+Build-time only; Python never runs on the request path. The Rust runtime
+(`rust/src/runtime/`) loads `artifacts/manifest.json`, compiles each
+`.hlo.txt` with the PJRT CPU client and executes it from the hot path.
+
+HLO *text* is the interchange format, NOT serialized protos: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the
+xla_extension 0.5.1 bundled with the `xla` crate rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts [--dims 10,40] [--full]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F64 = jnp.float64
+
+
+def to_hlo_text(fn, *specs):
+    """Lower a jittable function at the given ShapeDtypeStructs to HLO
+    text with tupled outputs (the rust side unwraps with to_tuple)."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+# Default artifact matrix: paper-scaled IPOP ladders per dimension.
+DEFAULT_LADDERS = {
+    10: [12, 24, 48, 96],
+    40: [12, 48, 192],
+}
+FULL_LADDERS = {
+    10: [12, 24, 48, 96, 192, 384],
+    40: [12, 24, 48, 96, 192, 384, 768],
+    200: [12, 48],
+}
+
+
+def build(out_dir, ladders):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "artifacts": []}
+
+    def emit(name, kind, text, **meta):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"name": name, "kind": kind, "file": fname, **meta})
+        print(f"  {fname}: {len(text)} chars")
+
+    # Sacrificial warm-up module: the xla_extension 0.5.1 CPU compiler
+    # miscompiles the FIRST while-loop-bearing module it compiles in a
+    # process (bisected in EXPERIMENTS.md §Notes: identical HLO compiled
+    # second runs correctly). The Rust runtime compiles-and-discards this
+    # tiny while-loop module right after client creation so every real
+    # artifact compiles correctly.
+    import jax.numpy as _jnp
+    from jax import lax as _lax
+
+    def _warmup(x):
+        return (_lax.fori_loop(0, 8, lambda t, a: a + 1.0, x),)
+
+    emit("warmup", "warmup", to_hlo_text(_warmup, spec(4)), n=4)
+
+    for n, lams in sorted(ladders.items()):
+        # Eigendecomposition: one per dimension.
+        text = to_hlo_text(lambda c: model.jacobi_eigh(c), spec(n, n))
+        emit(f"eigh_n{n}", "eigh", text, n=n)
+
+        for lam in lams:
+            mu = lam // 2
+            # Y = BD·Z  (Compute::sample_y contract).
+            text = to_hlo_text(
+                lambda bd, z: (model.sample_y(bd, z),), spec(n, n), spec(n, lam)
+            )
+            emit(f"sample_y_n{n}_l{lam}", "sample_y", text, n=n, **{"lambda": lam})
+
+            # Full Eq. 1: X = m·1ᵀ + σ·BD·Z.
+            text = to_hlo_text(
+                lambda m, s, bd, z: (model.cma_sample(m, s, bd, z),),
+                spec(n), spec(), spec(n, n), spec(n, lam),
+            )
+            emit(f"cma_sample_n{n}_l{lam}", "cma_sample", text, n=n, **{"lambda": lam})
+
+            # Eq. 3 rank-μ update.
+            text = to_hlo_text(
+                lambda c, keep, c1, cmu, pc, ysel, w: (
+                    model.cma_update_c(c, keep, c1, cmu, pc, ysel, w),
+                ),
+                spec(n, n), spec(), spec(), spec(), spec(n), spec(n, mu), spec(mu),
+            )
+            emit(f"update_c_n{n}_l{lam}", "update_c", text, n=n, mu=mu, **{"lambda": lam})
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--dims", default=None, help="comma-separated dims to build")
+    ap.add_argument("--full", action="store_true", help="build the extended ladder")
+    args = ap.parse_args()
+
+    ladders = dict(FULL_LADDERS if args.full else DEFAULT_LADDERS)
+    if args.dims:
+        keep = {int(d) for d in args.dims.split(",")}
+        ladders = {n: l for n, l in ladders.items() if n in keep}
+    build(args.out, ladders)
+
+
+if __name__ == "__main__":
+    main()

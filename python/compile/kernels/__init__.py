@@ -1,0 +1,13 @@
+"""L1 — Pallas kernels for the CMA-ES dense hot spots.
+
+The paper's Level-3 BLAS rewrites (§3.1) map onto two tiled GEMM+add
+kernels (see ``gemm.py``):
+
+* batched sampling  X = M + (B·D)·(σZ)      (Eq. 1, rewritten)
+* rank-μ adaptation C' = base + (cμ·Y·W)·Yᵀ  (Eq. 3)
+
+``ref.py`` holds the pure-jnp oracles pytest checks the kernels against.
+"""
+
+from .gemm import gemm_add  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+These are the CORE correctness references: every kernel and every model
+function is asserted against them by pytest (with hypothesis sweeps over
+shapes and dtypes).
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_add_ref(base, a, b):
+    """O = Base + A @ B."""
+    dtype = jnp.result_type(base.dtype, a.dtype, b.dtype)
+    return base.astype(dtype) + a.astype(dtype) @ b.astype(dtype)
+
+
+def sample_ref(m, sigma, bd, z):
+    """Eq. 1 batched: X = m·1ᵀ + σ·(B·D)·Z, columns are points."""
+    return m[:, None] + sigma * (bd @ z)
+
+
+def rank_mu_ref(c, keep, c1, c_mu, p_c, y_sel, w):
+    """Eq. 3: C' = keep·C + c1·p_c·p_cᵀ + cμ·Σ_i w_i·y_i·y_iᵀ."""
+    base = keep * c + c1 * jnp.outer(p_c, p_c)
+    return base + c_mu * (y_sel * w[None, :]) @ y_sel.T
+
+
+def eigh_ref(c):
+    """Ascending eigendecomposition of a symmetric matrix."""
+    vals, vecs = jnp.linalg.eigh(c)
+    return vals, vecs

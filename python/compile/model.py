@@ -1,0 +1,155 @@
+"""L2 — the CMA-ES iteration compute as JAX functions calling the L1
+Pallas kernels.
+
+Three jit-able entry points, each lowered to its own AOT artifact by
+``aot.py`` and executed from the Rust coordinator via PJRT:
+
+* ``sample_y(bd, z)``                       — Y = (B·D)·Z (the descent
+  forms X = m + σY; the fused X form is ``cma_sample``);
+* ``cma_sample(m, sigma, bd, z)``           — Eq. 1 batched;
+* ``cma_update_c(c, keep, c1, cmu, pc, y_sel, w)`` — Eq. 3;
+* ``jacobi_eigh(c)``                        — B, D² by cyclic Jacobi
+  (pure lax: lowers to an HLO while-loop the CPU PJRT client runs).
+
+Everything is f64: CMA-ES trajectories are compared bit-tightly against
+the Rust native tiers. (On a real TPU one would drop to f32 with bf16
+MXU accumulation — see DESIGN.md §Hardware-Adaptation.)
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.gemm import gemm_add
+
+
+def sample_y(bd, z):
+    """Y = (B·D)·Z via the Pallas GEMM kernel (zero base)."""
+    n, lam = bd.shape[0], z.shape[1]
+    base = jnp.zeros((n, lam), dtype=bd.dtype)
+    return gemm_add(base, bd, z)
+
+
+def cma_sample(m, sigma, bd, z):
+    """Eq. 1 batched: X = m·1ᵀ + σ·(B·D)·Z.
+
+    σ is folded into Z (GEMM bilinearity) so the kernel stays a pure
+    GEMM+add; the broadcast of m is the paper's "λ·n extra affectations".
+    """
+    n = m.shape[0]
+    lam = z.shape[1]
+    base = jnp.broadcast_to(m[:, None], (n, lam))
+    return gemm_add(base, bd, sigma * z)
+
+
+def cma_update_c(c, keep, c1, c_mu, p_c, y_sel, w):
+    """Eq. 3: C' = keep·C + c1·p_c·p_cᵀ + (cμ·Y·diag(w))·Yᵀ.
+
+    The rank-one and scaling terms are O(n²) jnp ops; the rank-μ term is
+    the Level-3 Pallas GEMM (A = cμ·Y·diag(w) is the paper's B-matrix
+    construction, transposed).
+    """
+    base = keep * c + c1 * jnp.outer(p_c, p_c)
+    a = y_sel * (c_mu * w)[None, :]
+    return gemm_add(base, a, y_sel.T)
+
+
+def jacobi_eigh(c, sweeps=12):
+    """Eigendecomposition of symmetric ``c`` by cyclic Jacobi rotations.
+
+    Returns ``(values, vectors)`` — **unsorted**; the Rust host sorts
+    (see rust/src/runtime/compute.rs). ``jacobi_eigh_sorted`` keeps the
+    ascending contract for in-python use.
+
+    Implementation notes for the xla_extension 0.5.1 CPU backend the Rust
+    runtime embeds (bisected in EXPERIMENTS.md §Notes):
+
+    * rotations use one-hot masks + matvecs/outer products — NO
+      dynamic-slice / dynamic-update-slice / gather / scatter (their
+      while-loop forms miscompile);
+    * the (p, q) pair walk is THREE NESTED ``fori_loop``s whose one-hots
+      derive directly from the loop counters — comparisons against
+      loop-invariant index tables inside a while body also miscompile
+      (they constant-fold to zero), while counter-derived comparisons
+      compile correctly.
+
+    Cost is O(n²) per rotation (vs O(n) for the textbook update), i.e.
+    O(sweeps·n⁴) total — acceptable for the CMA-ES dimensions this path
+    serves (n ≤ 40 artifacts by default).
+    """
+    n = c.shape[0]
+    assert c.shape == (n, n)
+    if n == 1:
+        return c[0], jnp.ones((1, 1), dtype=c.dtype)
+
+    dtype = c.dtype
+    rows = jnp.arange(n)
+
+    def rotate(p, q, carry):
+        a, v = carry
+        ep = (rows == p).astype(dtype)
+        eq = (rows == q).astype(dtype)
+
+        rowp = ep @ a
+        rowq = eq @ a
+        app = rowp @ ep
+        aqq = rowq @ eq
+        apq = rowp @ eq
+
+        safe = jnp.abs(apq) > 1e-300
+        tau = (aqq - app) / (2.0 * jnp.where(safe, apq, 1.0))
+        tt = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        tt = jnp.where(tau == 0.0, 1.0, tt)  # 45° rotation when diag equal
+        cth = 1.0 / jnp.sqrt(1.0 + tt * tt)
+        sth = tt * cth
+        cth = jnp.where(safe, cth, 1.0)
+        sth = jnp.where(safe, sth, 0.0)
+
+        # Row rotation:
+        # a += e_p⊗((c−1)·rowp − s·rowq) + e_q⊗(s·rowp + (c−1)·rowq)
+        a = (
+            a
+            + jnp.outer(ep, (cth - 1.0) * rowp - sth * rowq)
+            + jnp.outer(eq, sth * rowp + (cth - 1.0) * rowq)
+        )
+        # Column rotation on the updated matrix.
+        colp = a @ ep
+        colq = a @ eq
+        a = (
+            a
+            + jnp.outer((cth - 1.0) * colp - sth * colq, ep)
+            + jnp.outer(sth * colp + (cth - 1.0) * colq, eq)
+        )
+        # Accumulate eigenvectors (column rotation of v).
+        vp = v @ ep
+        vq = v @ eq
+        v = (
+            v
+            + jnp.outer((cth - 1.0) * vp - sth * vq, ep)
+            + jnp.outer(sth * vp + (cth - 1.0) * vq, eq)
+        )
+        return a, v
+
+    def q_loop(p, carry):
+        return lax.fori_loop(p + 1, n, lambda q, cr: rotate(p, q, cr), carry)
+
+    def sweep(_s, carry):
+        return lax.fori_loop(0, n - 1, q_loop, carry)
+
+    a0 = c.astype(jnp.float64) if c.dtype == jnp.float64 else c
+    v0 = jnp.eye(n, dtype=a0.dtype)
+    a, v = lax.fori_loop(0, sweeps, sweep, (a0, v0))
+
+    vals = jnp.sum(a * jnp.eye(n, dtype=a.dtype), axis=1)
+    return vals, v
+
+
+def jacobi_eigh_sorted(c, sweeps=12):
+    """`jacobi_eigh` with eigenpairs sorted ascending (python-side use)."""
+    vals, v = jacobi_eigh(c, sweeps)
+    order = jnp.argsort(vals)
+    return vals[order], v[:, order]
+

@@ -1,0 +1,100 @@
+"""L2 model correctness: CMA-ES dense ops and the Jacobi eigensolver
+against jnp oracles."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def sym(rng, n):
+    a = rng.standard_normal((n, n))
+    return jnp.asarray((a + a.T) / 2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    lam=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+    sigma=st.floats(1e-3, 10.0),
+)
+def test_cma_sample_matches_ref(n, lam, seed, sigma):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.standard_normal(n))
+    bd = jnp.asarray(rng.standard_normal((n, n)))
+    z = jnp.asarray(rng.standard_normal((n, lam)))
+    got = model.cma_sample(m, sigma, bd, z)
+    want = ref.sample_ref(m, sigma, bd, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11, atol=1e-11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 40), mu=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_cma_update_c_matches_ref(n, mu, seed):
+    rng = np.random.default_rng(seed)
+    c = sym(rng, n)
+    pc = jnp.asarray(rng.standard_normal(n))
+    ysel = jnp.asarray(rng.standard_normal((n, mu)))
+    w = jnp.asarray(np.abs(rng.standard_normal(mu)))
+    w = w / w.sum()
+    keep, c1, cmu = 0.9, 0.02, 0.08
+    got = model.cma_update_c(c, keep, c1, cmu, pc, ysel, w)
+    want = ref.rank_mu_ref(c, keep, c1, cmu, pc, ysel, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 10, 25, 40])
+def test_jacobi_eigh_matches_lapack(n):
+    rng = np.random.default_rng(n)
+    c = sym(rng, n)
+    vals, vecs = model.jacobi_eigh_sorted(c)
+    want_vals, _ = ref.eigh_ref(c)
+    scale = float(jnp.abs(want_vals).max()) + 1e-30
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(want_vals), atol=1e-10 * scale)
+    # Orthonormal columns + reconstruction.
+    vtv = vecs.T @ vecs
+    np.testing.assert_allclose(np.asarray(vtv), np.eye(n), atol=1e-10)
+    rec = vecs @ jnp.diag(vals) @ vecs.T
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(c), atol=1e-9 * max(1.0, scale))
+
+
+def test_jacobi_eigh_spd_and_repeated():
+    # SPD with a repeated eigenvalue (3·I block structure).
+    c = jnp.diag(jnp.asarray([3.0, 3.0, 3.0, 7.0]))
+    vals, vecs = model.jacobi_eigh_sorted(c)
+    np.testing.assert_allclose(np.asarray(vals), [3.0, 3.0, 3.0, 7.0], atol=1e-12)
+    np.testing.assert_allclose(np.asarray(vecs.T @ vecs), np.eye(4), atol=1e-12)
+
+
+def test_jacobi_eigh_ill_conditioned():
+    # Spectrum spanning 1e-6 .. 1e6 (BBOB-like conditioning).
+    n = 8
+    rng = np.random.default_rng(3)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    d = np.logspace(-6, 6, n)
+    c = jnp.asarray(q @ np.diag(d) @ q.T)
+    vals, _ = model.jacobi_eigh_sorted(c, sweeps=16)
+    np.testing.assert_allclose(np.asarray(vals), d, atol=1e-9 * d[-1])
+
+
+def test_jacobi_eigh_n1():
+    vals, vecs = model.jacobi_eigh_sorted(jnp.asarray([[4.0]]))
+    assert float(vals[0]) == 4.0
+    assert float(vecs[0, 0]) == 1.0
+
+
+def test_sample_y_is_pure_gemm():
+    rng = np.random.default_rng(9)
+    bd = jnp.asarray(rng.standard_normal((6, 6)))
+    z = jnp.asarray(rng.standard_normal((6, 12)))
+    np.testing.assert_allclose(
+        np.asarray(model.sample_y(bd, z)), np.asarray(bd @ z), rtol=1e-12
+    )

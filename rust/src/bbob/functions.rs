@@ -1,0 +1,564 @@
+//! Raw definitions of the 24 noiseless BBOB functions.
+//!
+//! Each returns `f(x) − f_opt` (zero at the optimum); the additive offset
+//! is applied by [`super::Instance::eval`]. Conventions follow Hansen et
+//! al., RR-6829 (2009); indices in comments are 1-based as in the paper,
+//! code is 0-based.
+
+use super::transforms::{fpen, lambda_alpha, tasy, tosz, tosz1};
+use super::Instance;
+
+const TWO_PI: f64 = std::f64::consts::TAU;
+
+/// Dispatch on the function id.
+pub fn eval_raw(inst: &Instance, x: &[f64]) -> f64 {
+    match inst.fid {
+        1 => f1_sphere(inst, x),
+        2 => f2_ellipsoid(inst, x),
+        3 => f3_rastrigin(inst, x),
+        4 => f4_bueche_rastrigin(inst, x),
+        5 => f5_linear_slope(inst, x),
+        6 => f6_attractive_sector(inst, x),
+        7 => f7_step_ellipsoid(inst, x),
+        8 => f8_rosenbrock(inst, x),
+        9 => f9_rosenbrock_rotated(inst, x),
+        10 => f10_ellipsoid_rotated(inst, x),
+        11 => f11_discus(inst, x),
+        12 => f12_bent_cigar(inst, x),
+        13 => f13_sharp_ridge(inst, x),
+        14 => f14_different_powers(inst, x),
+        15 => f15_rastrigin_rotated(inst, x),
+        16 => f16_weierstrass(inst, x),
+        17 => f17_schaffers(inst, x, 10.0),
+        18 => f17_schaffers(inst, x, 1000.0),
+        19 => f19_griewank_rosenbrock(inst, x),
+        20 => f20_schwefel(inst, x),
+        21 | 22 => f21_gallagher(inst, x),
+        23 => f23_katsuura(inst, x),
+        24 => f24_lunacek(inst, x),
+        _ => unreachable!(),
+    }
+}
+
+#[inline]
+fn shifted(inst: &Instance, x: &[f64]) -> Vec<f64> {
+    x.iter().zip(&inst.xopt).map(|(a, b)| a - b).collect()
+}
+
+#[inline]
+fn cond_pow(i: usize, n: usize, expo: f64) -> f64 {
+    if n == 1 {
+        1.0
+    } else {
+        10f64.powf(expo * i as f64 / (n - 1) as f64)
+    }
+}
+
+/// f1 — Sphere: `‖z‖²`, z = x − x_opt.
+fn f1_sphere(inst: &Instance, x: &[f64]) -> f64 {
+    shifted(inst, x).iter().map(|v| v * v).sum()
+}
+
+/// f2 — separable Ellipsoid: `Σ 10^{6(i−1)/(n−1)} z_i²`, z = T_osz(x − x_opt).
+fn f2_ellipsoid(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let mut z = vec![0.0; s.len()];
+    tosz(&s, &mut z);
+    ellipsoid_sum(&z)
+}
+
+fn ellipsoid_sum(z: &[f64]) -> f64 {
+    let n = z.len();
+    z.iter()
+        .enumerate()
+        .map(|(i, v)| cond_pow(i, n, 6.0) * v * v)
+        .sum()
+}
+
+fn rastrigin_core(z: &[f64]) -> f64 {
+    let n = z.len() as f64;
+    let cos_sum: f64 = z.iter().map(|v| (TWO_PI * v).cos()).sum();
+    10.0 * (n - cos_sum) + z.iter().map(|v| v * v).sum::<f64>()
+}
+
+/// f3 — separable Rastrigin: z = Λ^10 T_asy^0.2(T_osz(x − x_opt)).
+fn f3_rastrigin(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let mut t = vec![0.0; s.len()];
+    tosz(&s, &mut t);
+    let mut z = vec![0.0; s.len()];
+    tasy(0.2, &t, &mut z);
+    lambda_alpha(10.0, &mut z);
+    rastrigin_core(&z)
+}
+
+/// f4 — Büche-Rastrigin: odd positive coordinates get an extra ×10 scale.
+fn f4_bueche_rastrigin(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let n = s.len();
+    let mut z = vec![0.0; n];
+    tosz(&s, &mut z);
+    for (i, v) in z.iter_mut().enumerate() {
+        let mut scale = cond_pow(i, n, 0.5);
+        // 1-based odd index (i+1 odd ⇔ i even) and positive coordinate.
+        if i % 2 == 0 && *v > 0.0 {
+            scale *= 10.0;
+        }
+        *v *= scale;
+    }
+    rastrigin_core(&z) + 100.0 * fpen(x)
+}
+
+/// f5 — Linear Slope: the optimum sits on the boundary corner x_opt = ±5.
+fn f5_linear_slope(inst: &Instance, x: &[f64]) -> f64 {
+    let n = x.len();
+    let mut f = 0.0;
+    for i in 0..n {
+        let s = inst.xopt[i].signum() * cond_pow(i, n, 1.0);
+        let z = if inst.xopt[i] * x[i] < 25.0 { x[i] } else { inst.xopt[i] };
+        f += 5.0 * s.abs() - s * z;
+    }
+    f
+}
+
+/// f6 — Attractive Sector: z = Q Λ^10 R (x − x_opt), asymmetric quadratic.
+fn f6_attractive_sector(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let mut z = inst.r.as_ref().unwrap().matvec(&s);
+    lambda_alpha(10.0, &mut z);
+    let z = inst.q.as_ref().unwrap().matvec(&z);
+    let sum: f64 = z
+        .iter()
+        .zip(&inst.xopt)
+        .map(|(&zi, &xo)| {
+            let si = if zi * xo > 0.0 { 100.0 } else { 1.0 };
+            (si * zi) * (si * zi)
+        })
+        .sum();
+    tosz1(sum).powf(0.9)
+}
+
+/// f7 — Step Ellipsoid: plateaus from rounding ẑ; the tiny `|ẑ_1|` term
+/// breaks ties on the plateau.
+fn f7_step_ellipsoid(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let n = s.len();
+    let mut zhat = inst.r.as_ref().unwrap().matvec(&s);
+    lambda_alpha(10.0, &mut zhat);
+    let ztilde: Vec<f64> = zhat
+        .iter()
+        .map(|&v| {
+            if v.abs() > 0.5 {
+                (0.5 + v).floor()
+            } else {
+                (0.5 + 10.0 * v).floor() / 10.0
+            }
+        })
+        .collect();
+    let z = inst.q.as_ref().unwrap().matvec(&ztilde);
+    let sum: f64 = z
+        .iter()
+        .enumerate()
+        .map(|(i, v)| cond_pow(i, n, 2.0) * v * v)
+        .sum();
+    0.1 * (zhat[0].abs() / 1e4).max(sum) + fpen(x)
+}
+
+fn rosenbrock_core(z: &[f64]) -> f64 {
+    let mut f = 0.0;
+    for i in 0..z.len() - 1 {
+        let a = z[i] * z[i] - z[i + 1];
+        let b = z[i] - 1.0;
+        f += 100.0 * a * a + b * b;
+    }
+    f
+}
+
+/// f8 — Rosenbrock (original): z = max(1, √n/8)(x − x_opt) + 1.
+fn f8_rosenbrock(inst: &Instance, x: &[f64]) -> f64 {
+    let scale = ((x.len() as f64).sqrt() / 8.0).max(1.0);
+    let z: Vec<f64> = shifted(inst, x).iter().map(|v| scale * v + 1.0).collect();
+    rosenbrock_core(&z)
+}
+
+/// f9 — Rosenbrock (rotated): z = max(1, √n/8)·R·x + 1/2.
+fn f9_rosenbrock_rotated(inst: &Instance, x: &[f64]) -> f64 {
+    let scale = ((x.len() as f64).sqrt() / 8.0).max(1.0);
+    let rx = inst.r.as_ref().unwrap().matvec(x);
+    let z: Vec<f64> = rx.iter().map(|v| scale * v + 0.5).collect();
+    rosenbrock_core(&z)
+}
+
+/// f10 — rotated Ellipsoid: z = T_osz(R(x − x_opt)).
+fn f10_ellipsoid_rotated(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let rx = inst.r.as_ref().unwrap().matvec(&s);
+    let mut z = vec![0.0; rx.len()];
+    tosz(&rx, &mut z);
+    ellipsoid_sum(&z)
+}
+
+/// f11 — Discus: one heavy coordinate, z = T_osz(R(x − x_opt)).
+fn f11_discus(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let rx = inst.r.as_ref().unwrap().matvec(&s);
+    let mut z = vec![0.0; rx.len()];
+    tosz(&rx, &mut z);
+    1e6 * z[0] * z[0] + z[1..].iter().map(|v| v * v).sum::<f64>()
+}
+
+/// f12 — Bent Cigar: z = R T_asy^0.5 (R(x − x_opt)).
+fn f12_bent_cigar(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let r = inst.r.as_ref().unwrap();
+    let rx = r.matvec(&s);
+    let mut t = vec![0.0; rx.len()];
+    tasy(0.5, &rx, &mut t);
+    let z = r.matvec(&t);
+    z[0] * z[0] + 1e6 * z[1..].iter().map(|v| v * v).sum::<f64>()
+}
+
+/// f13 — Sharp Ridge: z = Q Λ^10 R (x − x_opt); non-differentiable ridge.
+fn f13_sharp_ridge(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let mut z = inst.r.as_ref().unwrap().matvec(&s);
+    lambda_alpha(10.0, &mut z);
+    let z = inst.q.as_ref().unwrap().matvec(&z);
+    let tail: f64 = z[1..].iter().map(|v| v * v).sum();
+    z[0] * z[0] + 100.0 * tail.sqrt()
+}
+
+/// f14 — Different Powers: z = R(x − x_opt).
+fn f14_different_powers(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let z = inst.r.as_ref().unwrap().matvec(&s);
+    let n = z.len();
+    let sum: f64 = z
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let e = if n == 1 { 2.0 } else { 2.0 + 4.0 * i as f64 / (n - 1) as f64 };
+            v.abs().powf(e)
+        })
+        .sum();
+    sum.sqrt()
+}
+
+/// f15 — rotated Rastrigin: z = R Λ^10 Q T_asy^0.2(T_osz(R(x − x_opt))).
+fn f15_rastrigin_rotated(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let r = inst.r.as_ref().unwrap();
+    let q = inst.q.as_ref().unwrap();
+    let rx = r.matvec(&s);
+    let mut t = vec![0.0; rx.len()];
+    tosz(&rx, &mut t);
+    let mut u = vec![0.0; rx.len()];
+    tasy(0.2, &t, &mut u);
+    let mut v = q.matvec(&u);
+    lambda_alpha(10.0, &mut v);
+    let z = r.matvec(&v);
+    rastrigin_core(&z)
+}
+
+/// f16 — Weierstrass: highly rugged, z = R Λ^{1/100} Q T_osz(R(x − x_opt)).
+fn f16_weierstrass(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let n = s.len();
+    let r = inst.r.as_ref().unwrap();
+    let q = inst.q.as_ref().unwrap();
+    let rx = r.matvec(&s);
+    let mut t = vec![0.0; n];
+    tosz(&rx, &mut t);
+    let mut u = q.matvec(&t);
+    lambda_alpha(0.01, &mut u);
+    let z = r.matvec(&u);
+
+    // f0 = Σ_k 2^{-k} cos(π 3^k)
+    let mut f0 = 0.0;
+    let mut inner_sum = 0.0;
+    let mut half = 1.0;
+    let mut three = 1.0;
+    for _k in 0..12 {
+        f0 += half * (TWO_PI * three * 0.5).cos();
+        for &zi in &z {
+            inner_sum += half * (TWO_PI * three * (zi + 0.5)).cos();
+        }
+        half *= 0.5;
+        three *= 3.0;
+    }
+    let nf = n as f64;
+    10.0 * (inner_sum / nf - f0).powi(3) + 10.0 / nf * fpen(x)
+}
+
+/// f17/f18 — Schaffers F7 (`cond` = 10 or 1000):
+/// z = Λ^cond Q T_asy^0.5(R(x − x_opt)).
+fn f17_schaffers(inst: &Instance, x: &[f64], cond: f64) -> f64 {
+    let s = shifted(inst, x);
+    let n = s.len();
+    let rx = inst.r.as_ref().unwrap().matvec(&s);
+    let mut t = vec![0.0; n];
+    tasy(0.5, &rx, &mut t);
+    let mut z = inst.q.as_ref().unwrap().matvec(&t);
+    lambda_alpha(cond, &mut z);
+    let mut acc = 0.0;
+    for i in 0..n - 1 {
+        let si = (z[i] * z[i] + z[i + 1] * z[i + 1]).sqrt();
+        acc += si.sqrt() + si.sqrt() * (50.0 * si.powf(0.2)).sin().powi(2);
+    }
+    let mean = acc / (n as f64 - 1.0);
+    mean * mean + 10.0 * fpen(x)
+}
+
+/// f19 — composite Griewank-Rosenbrock F8F2: z = max(1, √n/8) R x + 1/2.
+fn f19_griewank_rosenbrock(inst: &Instance, x: &[f64]) -> f64 {
+    let n = x.len();
+    let scale = ((n as f64).sqrt() / 8.0).max(1.0);
+    let rx = inst.r.as_ref().unwrap().matvec(x);
+    let z: Vec<f64> = rx.iter().map(|v| scale * v + 0.5).collect();
+    let mut acc = 0.0;
+    for i in 0..n - 1 {
+        let a = z[i] * z[i] - z[i + 1];
+        let b = z[i] - 1.0;
+        let s = 100.0 * a * a + b * b;
+        acc += s / 4000.0 - s.cos();
+    }
+    10.0 * acc / (n as f64 - 1.0) + 10.0
+}
+
+/// f20 — Schwefel x·sin(√|x|), with the deceptive penalised exterior.
+fn f20_schwefel(inst: &Instance, x: &[f64]) -> f64 {
+    let n = x.len();
+    let mu0 = 4.2096874633 / 2.0;
+    // x̂ = 2 · sign ⊙ x
+    let xhat: Vec<f64> = x.iter().zip(&inst.signs).map(|(v, s)| 2.0 * s * v).collect();
+    // ẑ recurrence.
+    let mut zhat = vec![0.0; n];
+    zhat[0] = xhat[0];
+    for i in 1..n {
+        zhat[i] = xhat[i] + 0.25 * (xhat[i - 1] - 2.0 * mu0);
+    }
+    // z = 100 (Λ^10 (ẑ − 2μ0) + 2μ0)
+    let mut t: Vec<f64> = zhat.iter().map(|v| v - 2.0 * mu0).collect();
+    lambda_alpha(10.0, &mut t);
+    let z: Vec<f64> = t.iter().map(|v| 100.0 * (v + 2.0 * mu0)).collect();
+
+    let sum: f64 = z.iter().map(|&v| v * (v.abs().sqrt()).sin()).sum();
+    let pen: Vec<f64> = z.iter().map(|v| v / 100.0).collect();
+    -sum / (100.0 * n as f64) + 4.189828872724339 + 100.0 * fpen(&pen)
+}
+
+/// f21/f22 — Gallagher's Gaussian peaks (101 or 21).
+fn f21_gallagher(inst: &Instance, x: &[f64]) -> f64 {
+    let g = inst.gallagher.as_ref().unwrap();
+    let n = x.len() as f64;
+    let rx = inst.r.as_ref().unwrap().matvec(x);
+    let mut best = f64::NEG_INFINITY;
+    for (i, ry) in g.ry.iter().enumerate() {
+        let mut quad = 0.0;
+        for ((&a, &b), &c) in rx.iter().zip(ry).zip(&g.c_diag[i]) {
+            let d = a - b;
+            quad += c * d * d;
+        }
+        let v = g.w[i] * (-quad / (2.0 * n)).exp();
+        best = best.max(v);
+    }
+    tosz1(10.0 - best).powi(2) + fpen(x)
+}
+
+/// f23 — Katsuura: fractal, barely continuous; z = Q Λ^100 R (x − x_opt).
+fn f23_katsuura(inst: &Instance, x: &[f64]) -> f64 {
+    let s = shifted(inst, x);
+    let n = s.len();
+    let mut z = inst.r.as_ref().unwrap().matvec(&s);
+    lambda_alpha(100.0, &mut z);
+    let z = inst.q.as_ref().unwrap().matvec(&z);
+
+    let nf = n as f64;
+    let expo = 10.0 / nf.powf(1.2);
+    let mut prod = 1.0f64;
+    for (i, &zi) in z.iter().enumerate() {
+        let mut inner = 0.0;
+        let mut p2 = 2.0f64;
+        for _j in 1..=32 {
+            let v = p2 * zi;
+            inner += (v - v.round()).abs() / p2;
+            p2 *= 2.0;
+        }
+        prod *= (1.0 + (i as f64 + 1.0) * inner).powf(expo);
+    }
+    10.0 / (nf * nf) * prod - 10.0 / (nf * nf) + fpen(x)
+}
+
+/// f24 — Lunacek bi-Rastrigin: two funnels, the wider one misleading.
+fn f24_lunacek(inst: &Instance, x: &[f64]) -> f64 {
+    let n = x.len();
+    let nf = n as f64;
+    let mu0 = 2.5;
+    let d = 1.0;
+    let s = 1.0 - 1.0 / (2.0 * (nf + 20.0).sqrt() - 8.2);
+    let mu1 = -((mu0 * mu0 - d) / s).sqrt();
+
+    let xhat: Vec<f64> = x.iter().zip(&inst.signs).map(|(v, sg)| 2.0 * sg * v).collect();
+    let t: Vec<f64> = xhat.iter().map(|v| v - mu0).collect();
+    let mut u = inst.r.as_ref().unwrap().matvec(&t);
+    lambda_alpha(100.0, &mut u);
+    let z = inst.q.as_ref().unwrap().matvec(&u);
+
+    let sum0: f64 = t.iter().map(|v| v * v).sum();
+    let sum1: f64 = xhat.iter().map(|v| (v - mu1) * (v - mu1)).sum();
+    let cos_sum: f64 = z.iter().map(|v| (TWO_PI * v).cos()).sum();
+
+    (sum0).min(d * nf + s * sum1) + 10.0 * (nf - cos_sum) + 1e4 * fpen(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    /// The sphere is exactly ‖x − x_opt‖² — closed form check.
+    #[test]
+    fn sphere_closed_form() {
+        let inst = Instance::new(1, 4, 7);
+        let x = [1.0, -2.0, 0.5, 3.0];
+        let expect: f64 = x
+            .iter()
+            .zip(&inst.xopt)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        assert!((inst.eval_delta(&x) - expect).abs() < 1e-12);
+    }
+
+    /// f5 is linear inside the box: doubling the distance from the optimal
+    /// corner along a coordinate doubles that coordinate's contribution.
+    #[test]
+    fn linear_slope_is_linear_inside() {
+        let inst = Instance::new(5, 3, 1);
+        let base = inst.eval_delta(&[0.0, 0.0, 0.0]);
+        let mut x = [0.0; 3];
+        x[0] = -inst.xopt[0] / 5.0; // move 1 unit against the gradient
+        let v1 = inst.eval_delta(&x);
+        x[0] *= 2.0;
+        let v2 = inst.eval_delta(&x);
+        assert!(((v2 - base) - 2.0 * (v1 - base)).abs() < 1e-9);
+    }
+
+    /// f7 has plateaus: small perturbations (within a rounding cell) leave
+    /// the value unchanged far from the optimum.
+    #[test]
+    fn step_ellipsoid_has_plateaus() {
+        let inst = Instance::new(7, 6, 2);
+        let x = vec![3.0; 6];
+        let v0 = inst.eval_delta(&x);
+        let mut bumped = x.clone();
+        bumped[0] += 1e-9;
+        let v1 = inst.eval_delta(&bumped);
+        assert_eq!(v0, v1);
+    }
+
+    /// Rosenbrock's banana valley: the valley floor point (1,...,1) in
+    /// z-space is reachable and optimal.
+    #[test]
+    fn rosenbrock_optimum_and_valley() {
+        let inst = Instance::new(8, 5, 4);
+        assert!(inst.eval_delta(&inst.xopt).abs() < 1e-10);
+        // A point near x_opt but off-valley must be worse.
+        let mut x = inst.xopt.clone();
+        x[0] += 0.5;
+        assert!(inst.eval_delta(&x) > 1e-3);
+    }
+
+    /// Discus weights coordinate 1 a million times more.
+    #[test]
+    fn discus_anisotropy() {
+        let inst = Instance::new(11, 6, 1);
+        let r = inst.r.as_ref().unwrap();
+        // Move along Rᵀe_1 vs Rᵀe_2 by the same amount.
+        let rt = r.transpose();
+        let mut e1 = vec![0.0; 6];
+        e1[0] = 0.1;
+        let mut e2 = vec![0.0; 6];
+        e2[1] = 0.1;
+        let d1 = rt.matvec(&e1);
+        let d2 = rt.matvec(&e2);
+        let x1: Vec<f64> = inst.xopt.iter().zip(&d1).map(|(a, b)| a + b).collect();
+        let x2: Vec<f64> = inst.xopt.iter().zip(&d2).map(|(a, b)| a + b).collect();
+        assert!(inst.eval_delta(&x1) > 1e3 * inst.eval_delta(&x2));
+    }
+
+    /// Rastrigin variants have ~10·n worth of local structure: value at a
+    /// half-period shift is larger than the quadratic term alone.
+    #[test]
+    fn rastrigin_multimodality() {
+        let inst = Instance::new(3, 4, 2);
+        // At the optimum the cosine term vanishes.
+        assert!(inst.eval_delta(&inst.xopt).abs() < 1e-9);
+    }
+
+    /// Gallagher: global optimum beats the second-best peak.
+    #[test]
+    fn gallagher_peak_ordering() {
+        for fid in [21, 22] {
+            let inst = Instance::new(fid, 4, 3);
+            let g = inst.gallagher.as_ref().unwrap();
+            let at_opt = inst.eval_delta(&g.y[0]);
+            let at_peak2 = inst.eval_delta(&g.y[1]);
+            assert!(at_opt < 1e-9, "f{fid} optimum value {at_opt}");
+            assert!(at_peak2 > at_opt, "f{fid}");
+        }
+    }
+
+    /// Schwefel's deceptive structure: the penalised exterior grows fast.
+    #[test]
+    fn schwefel_exterior_penalised() {
+        let inst = Instance::new(20, 4, 1);
+        let far = vec![20.0; 4];
+        assert!(inst.eval_delta(&far) > 100.0);
+    }
+
+    /// Lunacek: the second funnel floor is ≈ d·n above the optimum.
+    #[test]
+    fn lunacek_second_funnel_above() {
+        let inst = Instance::new(24, 6, 2);
+        let nf = 6.0;
+        let s = 1.0 - 1.0 / (2.0 * (nf + 20.0_f64).sqrt() - 8.2);
+        let mu1 = -((2.5f64 * 2.5 - 1.0) / s).sqrt();
+        // x with x̂ = μ1·1: x_i = μ1 / (2 sign_i)
+        let x: Vec<f64> = inst.signs.iter().map(|sg| mu1 / (2.0 * sg)).collect();
+        let v = inst.eval_delta(&x);
+        assert!(v >= nf - 1e-9, "funnel floor {v}");
+        // but still far better than a random far point
+        assert!(v < inst.eval_delta(&vec![4.9; 6]));
+    }
+
+    /// All functions are deterministic.
+    #[test]
+    fn evaluation_is_deterministic() {
+        let mut rng = Xoshiro256pp::new(4);
+        for fid in 1..=24 {
+            let inst = Instance::new(fid, 5, 1);
+            let x: Vec<f64> = (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            assert_eq!(inst.eval(&x), inst.eval(&x));
+        }
+    }
+
+    /// Weierstrass inner term is bounded, so f16 cannot blow up inside the box.
+    #[test]
+    fn weierstrass_bounded_inside() {
+        let inst = Instance::new(16, 5, 1);
+        let mut rng = Xoshiro256pp::new(8);
+        for _ in 0..100 {
+            let x: Vec<f64> = (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let v = inst.eval_delta(&x);
+            assert!((0.0..1e4).contains(&v), "f16 value {v}");
+        }
+    }
+
+    /// Katsuura at the optimum is 0 and positive elsewhere.
+    #[test]
+    fn katsuura_positive() {
+        let inst = Instance::new(23, 3, 1);
+        assert!(inst.eval_delta(&inst.xopt).abs() < 1e-9);
+        assert!(inst.eval_delta(&[1.0, 2.0, 3.0]) > 0.0);
+    }
+}

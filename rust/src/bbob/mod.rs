@@ -1,0 +1,342 @@
+//! The 24 noiseless BBOB benchmark functions (Hansen, Finck, Ros, Auger,
+//! RR-6829, 2009) — the test suite the paper evaluates on (§4.1).
+//!
+//! Re-implemented from the published definitions. Instances are generated
+//! from a deterministic seed derived from `(function id, dimension,
+//! instance id)`; the COCO reference uses its own legacy RNG, so our
+//! instances are *statistically* equivalent draws from the same instance
+//! distribution rather than bit-identical to COCO archive instances
+//! (recorded as a substitution in DESIGN.md §2).
+//!
+//! Functions are grouped exactly as in the paper:
+//! 1. separable (f1–f5), 2. low/moderate conditioning (f6–f9),
+//! 3. unimodal high conditioning (f10–f14), 4. multi-modal adequate
+//! global structure (f15–f19), 5. multi-modal weak structure (f20–f24).
+
+pub mod functions;
+pub mod transforms;
+
+use crate::linalg::Matrix;
+use crate::rng::{derive_stream, NormalSource, Xoshiro256pp};
+
+/// BBOB function groups (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Group {
+    Separable,
+    ModerateConditioning,
+    HighConditioning,
+    MultiModalAdequate,
+    MultiModalWeak,
+}
+
+impl Group {
+    pub fn of(fid: usize) -> Group {
+        match fid {
+            1..=5 => Group::Separable,
+            6..=9 => Group::ModerateConditioning,
+            10..=14 => Group::HighConditioning,
+            15..=19 => Group::MultiModalAdequate,
+            20..=24 => Group::MultiModalWeak,
+            _ => panic!("BBOB function id must be 1..=24, got {fid}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Group::Separable => "separable",
+            Group::ModerateConditioning => "moderate-conditioning",
+            Group::HighConditioning => "high-conditioning",
+            Group::MultiModalAdequate => "multimodal-adequate",
+            Group::MultiModalWeak => "multimodal-weak",
+        }
+    }
+}
+
+/// Human-readable function names, `NAMES[fid-1]`.
+pub const NAMES: [&str; 24] = [
+    "Sphere",
+    "Ellipsoidal (separable)",
+    "Rastrigin (separable)",
+    "Bueche-Rastrigin",
+    "Linear Slope",
+    "Attractive Sector",
+    "Step Ellipsoidal",
+    "Rosenbrock (original)",
+    "Rosenbrock (rotated)",
+    "Ellipsoidal (rotated)",
+    "Discus",
+    "Bent Cigar",
+    "Sharp Ridge",
+    "Different Powers",
+    "Rastrigin (rotated)",
+    "Weierstrass",
+    "Schaffers F7",
+    "Schaffers F7 (ill-conditioned)",
+    "Griewank-Rosenbrock F8F2",
+    "Schwefel",
+    "Gallagher 101 Peaks",
+    "Gallagher 21 Peaks",
+    "Katsuura",
+    "Lunacek bi-Rastrigin",
+];
+
+/// Gallagher peak data (f21/f22).
+pub(crate) struct Gallagher {
+    /// npeaks × n peak locations; `y[0]` is the global optimum.
+    pub y: Vec<Vec<f64>>,
+    /// Rotated peak locations `R·y_i`, precomputed so an evaluation costs
+    /// one O(n²) rotation plus O(npeaks·n), not O(npeaks·n²).
+    pub ry: Vec<Vec<f64>>,
+    /// Peak heights, `w[0] = 10`.
+    pub w: Vec<f64>,
+    /// Per-peak diagonal of `C_i` (already divided by `α_i^{1/4}`).
+    pub c_diag: Vec<Vec<f64>>,
+}
+
+/// One concrete optimization problem: a BBOB function id, dimension, and
+/// instance draw (x_opt, f_opt, rotations, auxiliary data).
+pub struct Instance {
+    pub fid: usize,
+    pub dim: usize,
+    pub iid: u64,
+    /// Additive offset of the optimum value.
+    pub fopt: f64,
+    /// Location of the global optimum.
+    pub xopt: Vec<f64>,
+    pub(crate) r: Option<Matrix>,
+    pub(crate) q: Option<Matrix>,
+    pub(crate) gallagher: Option<Gallagher>,
+    /// ±1 signs (f20/f24).
+    pub(crate) signs: Vec<f64>,
+}
+
+impl Instance {
+    /// Build instance `iid` of function `fid` in dimension `dim`.
+    pub fn new(fid: usize, dim: usize, iid: u64) -> Instance {
+        assert!((1..=24).contains(&fid), "fid must be 1..=24");
+        assert!(dim >= 2, "BBOB functions are defined for dim >= 2");
+        let seed = derive_stream(derive_stream(0xBB0B, fid as u64 * 1000 + dim as u64), iid);
+        let mut rng = Xoshiro256pp::new(seed);
+
+        // f_opt: clamped-Cauchy draw as in the BBOB definitions.
+        let mut g = NormalSource::from_rng(rng.clone());
+        let cauchy = g.sample() / g.sample().abs().max(1e-12);
+        let fopt = ((100.0 * cauchy).round() / 100.0).clamp(-1000.0, 1000.0);
+        for _ in 0..8 {
+            rng.next_u64();
+        }
+
+        // Default x_opt uniform in [-4, 4]^n; several functions override.
+        let mut xopt: Vec<f64> = (0..dim).map(|_| rng.uniform(-4.0, 4.0)).collect();
+
+        let needs_r = matches!(fid, 6..=7 | 9..=19 | 21..=24);
+        let needs_q = matches!(fid, 6 | 7 | 13 | 15..=18 | 23 | 24);
+        let r = needs_r.then(|| transforms::random_rotation(&mut rng, dim));
+        let q = needs_q.then(|| transforms::random_rotation(&mut rng, dim));
+
+        let mut signs: Vec<f64> = (0..dim)
+            .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        // Guard: all-equal signs are fine for every use, keep as drawn.
+
+        match fid {
+            5 => {
+                // Linear slope: optimum at a corner of the box.
+                xopt = signs.iter().map(|s| 5.0 * s).collect();
+            }
+            9 | 19 => {
+                // Optimum where z = 1: x_opt = Rᵀ((1 − c)/s · 1).
+                let s = (dim as f64).sqrt() / 8.0;
+                let s = s.max(1.0);
+                let c = if fid == 9 { 0.5 } else { 0.5 };
+                let t = vec![(1.0 - c) / s; dim];
+                xopt = r.as_ref().unwrap().transpose().matvec(&t);
+            }
+            20 => {
+                // Schwefel: x_opt = 4.2096874633/2 · ±1.
+                xopt = signs.iter().map(|s| 4.2096874633 / 2.0 * s).collect();
+            }
+            24 => {
+                // Lunacek: x_opt = μ0/2 · ±1 (signs re-derived from xopt).
+                let mu0 = 2.5;
+                xopt = signs.iter().map(|s| mu0 / 2.0 * s).collect();
+            }
+            _ => {}
+        }
+        if fid != 5 && fid != 20 && fid != 24 {
+            // signs only used by 5/20/24; keep deterministic anyway.
+            signs = xopt.iter().map(|v| if *v < 0.0 { -1.0 } else { 1.0 }).collect();
+        }
+
+        let mut gallagher = match fid {
+            21 => Some(Self::make_gallagher(&mut rng, dim, 101, 1000.0, &mut xopt)),
+            22 => Some(Self::make_gallagher(&mut rng, dim, 21, 1000.0 * 1000.0, &mut xopt)),
+            _ => None,
+        };
+        if let Some(g) = gallagher.as_mut() {
+            let rot = r.as_ref().expect("f21/f22 use R");
+            g.ry = g.y.iter().map(|y| rot.matvec(y)).collect();
+        }
+
+        Instance { fid, dim, iid, fopt, xopt, r, q, gallagher, signs }
+    }
+
+    fn make_gallagher(
+        rng: &mut Xoshiro256pp,
+        dim: usize,
+        npeaks: usize,
+        alpha1: f64,
+        xopt: &mut Vec<f64>,
+    ) -> Gallagher {
+        let (opt_range, peak_range) = if npeaks == 101 { (4.0, 4.9) } else { (3.92, 4.9) };
+        let mut y: Vec<Vec<f64>> = Vec::with_capacity(npeaks);
+        y.push((0..dim).map(|_| rng.uniform(-opt_range, opt_range)).collect());
+        for _ in 1..npeaks {
+            y.push((0..dim).map(|_| rng.uniform(-peak_range, peak_range)).collect());
+        }
+        *xopt = y[0].clone();
+
+        let mut w = Vec::with_capacity(npeaks);
+        w.push(10.0);
+        for i in 2..=npeaks {
+            w.push(1.1 + 8.0 * (i as f64 - 2.0) / (npeaks as f64 - 2.0));
+        }
+
+        // Condition numbers: α_1 fixed, the rest a random permutation of the
+        // prescribed geometric grid.
+        let grid: Vec<f64> = (0..npeaks - 1)
+            .map(|j| 1000f64.powf(2.0 * j as f64 / (npeaks as f64 - 2.0)))
+            .collect();
+        let mut perm: Vec<usize> = (0..npeaks - 1).collect();
+        rng.shuffle(&mut perm);
+
+        let mut c_diag = Vec::with_capacity(npeaks);
+        for i in 0..npeaks {
+            let alpha = if i == 0 { alpha1 } else { grid[perm[i - 1]] };
+            // Diagonal of Λ^α with a random coordinate permutation, scaled
+            // by α^{-1/4}.
+            let mut diag: Vec<f64> = (0..dim)
+                .map(|k| {
+                    if dim == 1 {
+                        1.0
+                    } else {
+                        alpha.powf(0.5 * k as f64 / (dim - 1) as f64)
+                    }
+                })
+                .collect();
+            rng.shuffle(&mut diag);
+            let s = alpha.powf(0.25);
+            for d in &mut diag {
+                *d /= s;
+            }
+            c_diag.push(diag);
+        }
+        Gallagher { y, ry: Vec::new(), w, c_diag }
+    }
+
+    /// Evaluate the function at `x` (includes the `f_opt` offset, as in
+    /// COCO: the best reachable value is `fopt`).
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.dim);
+        functions::eval_raw(self, x) + self.fopt
+    }
+
+    /// Evaluate relative to the optimum: `eval(x) − fopt ≥ 0`.
+    pub fn eval_delta(&self, x: &[f64]) -> f64 {
+        functions::eval_raw(self, x)
+    }
+
+    pub fn group(&self) -> Group {
+        Group::of(self.fid)
+    }
+
+    pub fn name(&self) -> &'static str {
+        NAMES[self.fid - 1]
+    }
+
+    /// The BBOB search-space box: `[-5, 5]^n`.
+    pub const LOWER: f64 = -5.0;
+    pub const UPPER: f64 = 5.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_partition_all_functions() {
+        let mut counts = [0usize; 5];
+        for fid in 1..=24 {
+            counts[match Group::of(fid) {
+                Group::Separable => 0,
+                Group::ModerateConditioning => 1,
+                Group::HighConditioning => 2,
+                Group::MultiModalAdequate => 3,
+                Group::MultiModalWeak => 4,
+            }] += 1;
+        }
+        assert_eq!(counts, [5, 4, 5, 5, 5]);
+    }
+
+    #[test]
+    fn optimum_evaluates_to_fopt() {
+        // The defining invariant: f(x_opt) = f_opt (raw value 0).
+        for fid in 1..=24 {
+            for &dim in &[2usize, 5, 10] {
+                let inst = Instance::new(fid, dim, 1);
+                let delta = inst.eval_delta(&inst.xopt);
+                assert!(
+                    delta.abs() < 1e-6,
+                    "f{fid} dim{dim}: f(x_opt) - fopt = {delta}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn raw_value_nonnegative_near_optimum() {
+        // All BBOB functions satisfy f(x) >= f_opt; probe random points.
+        let mut rng = Xoshiro256pp::new(2);
+        for fid in 1..=24 {
+            let inst = Instance::new(fid, 5, 3);
+            for _ in 0..200 {
+                let x: Vec<f64> = (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect();
+                let d = inst.eval_delta(&x);
+                assert!(d >= -1e-9, "f{fid}: delta={d} at {x:?}");
+                assert!(d.is_finite(), "f{fid}: non-finite at {x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn instances_differ_but_are_reproducible() {
+        for fid in [1usize, 7, 21] {
+            let a = Instance::new(fid, 4, 1);
+            let b = Instance::new(fid, 4, 2);
+            let a2 = Instance::new(fid, 4, 1);
+            assert_eq!(a.xopt, a2.xopt);
+            assert_eq!(a.fopt, a2.fopt);
+            assert_ne!(a.xopt, b.xopt);
+        }
+    }
+
+    #[test]
+    fn xopt_within_search_box() {
+        for fid in 1..=24 {
+            let inst = Instance::new(fid, 8, 5);
+            for &v in &inst.xopt {
+                assert!((-5.0..=5.0).contains(&v), "f{fid}: xopt coord {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn fopt_is_clamped() {
+        for fid in 1..=24 {
+            for iid in 0..20 {
+                let inst = Instance::new(fid, 3, iid);
+                assert!(inst.fopt.abs() <= 1000.0);
+            }
+        }
+    }
+}

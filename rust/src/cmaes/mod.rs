@@ -1,0 +1,23 @@
+//! CMA-ES (Covariance Matrix Adaptation Evolution Strategy) — the local
+//! optimizer the paper builds on (§2.1, Algorithm 1).
+//!
+//! The module is split along the paper's structure:
+//! * [`params`] — the static strategy parameters (weights, learning rates);
+//! * [`state`] — the adapted distribution (m, σ, C, B, D, paths);
+//! * [`compute`] — the dense per-iteration linear algebra in the three
+//!   tiers of §3.1 (naive / Level-2 / Level-3), behind the [`Compute`]
+//!   trait also implemented by the AOT XLA/Pallas runtime;
+//! * [`stopping`] — the restart triggers of §2.2;
+//! * [`descent`] — the instrumented iteration loop (Algorithm 1).
+
+pub mod compute;
+pub mod descent;
+pub mod params;
+pub mod state;
+pub mod stopping;
+
+pub use compute::{Compute, NativeCompute};
+pub use descent::{BatchEvaluator, Descent, FnEvaluator, IterationReport, Timings};
+pub use params::CmaParams;
+pub use state::CmaState;
+pub use stopping::{StopConfig, StopReason};

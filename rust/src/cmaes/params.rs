@@ -1,0 +1,148 @@
+//! Strategy parameters of CMA-ES (Hansen's standard parameterisation,
+//! matching the reference C code defaults the paper builds on).
+
+/// All static parameters of one CMA-ES descent.
+#[derive(Clone, Debug)]
+pub struct CmaParams {
+    /// Problem dimension.
+    pub n: usize,
+    /// Population size λ.
+    pub lambda: usize,
+    /// Number of selected parents μ = ⌊λ/2⌋.
+    pub mu: usize,
+    /// Recombination weights (length μ, positive, summing to 1).
+    pub weights: Vec<f64>,
+    /// Variance-effective selection mass 1/Σw².
+    pub mu_eff: f64,
+    /// Step-size path learning rate.
+    pub c_sigma: f64,
+    /// Step-size damping.
+    pub d_sigma: f64,
+    /// Covariance path learning rate.
+    pub cc: f64,
+    /// Rank-one learning rate.
+    pub c1: f64,
+    /// Rank-μ learning rate.
+    pub c_mu: f64,
+    /// E‖N(0,I)‖ ≈ √n(1 − 1/(4n) + 1/(21n²)).
+    pub chi_n: f64,
+}
+
+impl CmaParams {
+    /// Default population size λ = 4 + ⌊3 ln n⌋.
+    pub fn default_lambda(n: usize) -> usize {
+        4 + (3.0 * (n as f64).ln()).floor() as usize
+    }
+
+    /// Standard parameterisation for dimension `n` and population `lambda`.
+    pub fn new(n: usize, lambda: usize) -> CmaParams {
+        assert!(n >= 1);
+        assert!(lambda >= 2, "CMA-ES needs λ ≥ 2");
+        let nf = n as f64;
+        let mu = lambda / 2;
+        let mu = mu.max(1);
+
+        // Logarithmic weights over the μ best.
+        let mut weights: Vec<f64> = (0..mu)
+            .map(|i| ((lambda as f64 + 1.0) / 2.0).ln() - ((i + 1) as f64).ln())
+            .collect();
+        let sum: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= sum;
+        }
+        let mu_eff = 1.0 / weights.iter().map(|w| w * w).sum::<f64>();
+
+        let c_sigma = (mu_eff + 2.0) / (nf + mu_eff + 5.0);
+        let d_sigma = 1.0
+            + 2.0 * (((mu_eff - 1.0) / (nf + 1.0)).sqrt() - 1.0).max(0.0)
+            + c_sigma;
+        let cc = (4.0 + mu_eff / nf) / (nf + 4.0 + 2.0 * mu_eff / nf);
+        let c1 = 2.0 / ((nf + 1.3) * (nf + 1.3) + mu_eff);
+        let c_mu = (1.0 - c1).min(
+            2.0 * (mu_eff - 2.0 + 1.0 / mu_eff) / ((nf + 2.0) * (nf + 2.0) + mu_eff),
+        );
+        let chi_n = nf.sqrt() * (1.0 - 1.0 / (4.0 * nf) + 1.0 / (21.0 * nf * nf));
+
+        CmaParams { n, lambda, mu, weights, mu_eff, c_sigma, d_sigma, cc, c1, c_mu, chi_n }
+    }
+
+    /// The lazy eigendecomposition gap used by the reference C code:
+    /// refresh B, D every `max(1, 1/(10·n·(c1+cμ)))` generations.
+    pub fn eigen_gap(&self) -> usize {
+        let g = 1.0 / ((self.c1 + self.c_mu) * self.n as f64 * 10.0);
+        (g.floor() as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_are_normalised_and_decreasing() {
+        for &(n, l) in &[(10usize, 12usize), (40, 100), (2, 4), (1000, 3072)] {
+            let p = CmaParams::new(n, l);
+            let sum: f64 = p.weights.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            for w in p.weights.windows(2) {
+                assert!(w[0] > w[1]);
+            }
+            assert!(p.weights.iter().all(|&w| w > 0.0));
+        }
+    }
+
+    #[test]
+    fn mu_eff_bounds() {
+        // 1 ≤ μ_eff ≤ μ always.
+        for &(n, l) in &[(10usize, 12usize), (40, 192), (200, 20)] {
+            let p = CmaParams::new(n, l);
+            assert!(p.mu_eff >= 1.0);
+            assert!(p.mu_eff <= p.mu as f64 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn learning_rates_in_unit_interval() {
+        for &(n, l) in &[(2usize, 6usize), (10, 12), (200, 1000), (1000, 6144)] {
+            let p = CmaParams::new(n, l);
+            for v in [p.c_sigma, p.cc, p.c1, p.c_mu] {
+                assert!((0.0..1.0).contains(&v), "n={n} λ={l}: rate {v}");
+            }
+            assert!(p.c1 + p.c_mu <= 1.0 + 1e-12);
+            assert!(p.d_sigma >= 1.0);
+        }
+    }
+
+    #[test]
+    fn chi_n_approximates_expected_norm() {
+        // Monte-Carlo check of E‖N(0,I_n)‖ for n = 10.
+        use crate::rng::NormalSource;
+        let p = CmaParams::new(10, 12);
+        let mut g = NormalSource::new(17);
+        let trials = 20_000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let mut s = 0.0;
+            for _ in 0..10 {
+                let v = g.sample();
+                s += v * v;
+            }
+            acc += s.sqrt();
+        }
+        let mc = acc / trials as f64;
+        assert!((mc - p.chi_n).abs() < 0.02, "mc={mc} chi_n={}", p.chi_n);
+    }
+
+    #[test]
+    fn default_lambda_matches_formula() {
+        assert_eq!(CmaParams::default_lambda(10), 4 + 6);
+        assert_eq!(CmaParams::default_lambda(40), 4 + 11);
+    }
+
+    #[test]
+    fn eigen_gap_positive() {
+        for &(n, l) in &[(2usize, 4usize), (10, 12), (1000, 12)] {
+            assert!(CmaParams::new(n, l).eigen_gap() >= 1);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Mutable state of one CMA-ES descent.
+
+use crate::linalg::{EigKind, Matrix};
+
+/// Dynamic state: distribution mean/shape/scale plus the evolution paths.
+#[derive(Clone)]
+pub struct CmaState {
+    /// Distribution mean `m`.
+    pub mean: Vec<f64>,
+    /// Global step size σ.
+    pub sigma: f64,
+    /// Initial step size (stopping criteria reference it).
+    pub sigma0: f64,
+    /// Covariance matrix `C` (kept symmetric).
+    pub c: Matrix,
+    /// Orthonormal eigenvectors of `C` (columns).
+    pub b: Matrix,
+    /// Square roots of the eigenvalues of `C` (sampling axes lengths).
+    pub d: Vec<f64>,
+    /// Cached `B·diag(D)` for the Level-3 sampling GEMM; refreshed with
+    /// each eigendecomposition.
+    pub bd: Matrix,
+    /// Step-size evolution path p_σ.
+    pub p_sigma: Vec<f64>,
+    /// Covariance evolution path p_c.
+    pub p_c: Vec<f64>,
+    /// Generation counter.
+    pub gen: usize,
+    /// Generation of the last eigendecomposition refresh.
+    pub eigen_gen: usize,
+    /// Condition number of `C` from the last refresh.
+    pub condition: f64,
+}
+
+impl CmaState {
+    /// Fresh state at `mean` with step size `sigma` and `C = I`.
+    pub fn new(mean: Vec<f64>, sigma: f64) -> CmaState {
+        let n = mean.len();
+        CmaState {
+            mean,
+            sigma,
+            sigma0: sigma,
+            c: Matrix::eye(n),
+            b: Matrix::eye(n),
+            d: vec![1.0; n],
+            bd: Matrix::eye(n),
+            p_sigma: vec![0.0; n],
+            p_c: vec![0.0; n],
+            gen: 0,
+            eigen_gen: 0,
+            condition: 1.0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Refresh `B`, `D`, the `B·D` cache and the condition number from `C`
+    /// using the given eigensolver tier. Eigenvalues are clamped to a tiny
+    /// positive floor so a numerically indefinite `C` degrades gracefully
+    /// (the ConditionCov stop then fires).
+    pub fn refresh_eigen(&mut self, kind: EigKind) {
+        self.c.symmetrize();
+        let eig = kind.decompose(&self.c);
+        self.apply_eigen(eig.values, eig.vectors);
+    }
+
+    /// Install an externally computed eigendecomposition (ascending
+    /// `values`, orthonormal column `vectors`) — shared by the native
+    /// tiers and the AOT XLA/Pallas runtime.
+    pub fn apply_eigen(&mut self, values: Vec<f64>, vectors: Matrix) {
+        let n = self.dim();
+        assert_eq!(values.len(), n);
+        assert_eq!((vectors.rows(), vectors.cols()), (n, n));
+        let floor = 1e-20 * values[n - 1].abs().max(1e-300);
+        self.d = values.iter().map(|&v| v.max(floor).sqrt()).collect();
+        self.b = vectors;
+        for r in 0..n {
+            for c in 0..n {
+                self.bd[(r, c)] = self.b[(r, c)] * self.d[c];
+            }
+        }
+        self.condition = {
+            let dmax = self.d[n - 1];
+            let dmin = self.d[0].max(1e-300);
+            (dmax / dmin).powi(2)
+        };
+        self.eigen_gen = self.gen;
+    }
+
+    /// `C^{-1/2}·v = B·D^{-1}·Bᵀ·v` — used by the σ-path update.
+    pub fn inv_sqrt_c_apply(&self, v: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        // t = Bᵀ v
+        let mut t = vec![0.0; n];
+        for c in 0..n {
+            let mut acc = 0.0;
+            for r in 0..n {
+                acc += self.b[(r, c)] * v[r];
+            }
+            t[c] = acc / self.d[c].max(1e-300);
+        }
+        // u = B t
+        self.b.matvec(&t)
+    }
+
+    /// Longest/shortest sampling axis lengths σ·d.
+    pub fn axis_lengths(&self) -> (f64, f64) {
+        let n = self.dim();
+        (self.sigma * self.d[n - 1], self.sigma * self.d[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_state_is_isotropic() {
+        let st = CmaState::new(vec![0.0; 5], 0.7);
+        assert_eq!(st.sigma, 0.7);
+        assert_eq!(st.d, vec![1.0; 5]);
+        assert_eq!(st.condition, 1.0);
+    }
+
+    #[test]
+    fn inv_sqrt_c_is_identity_initially() {
+        let st = CmaState::new(vec![0.0; 4], 1.0);
+        let v = vec![1.0, -2.0, 3.0, 0.5];
+        let u = st.inv_sqrt_c_apply(&v);
+        for (a, b) in u.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn refresh_eigen_tracks_condition() {
+        let mut st = CmaState::new(vec![0.0; 3], 1.0);
+        st.c = Matrix::from_vec(3, 3, vec![4.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.25]);
+        st.refresh_eigen(EigKind::Syev);
+        assert!((st.condition - 16.0).abs() < 1e-9);
+        // d sorted ascending: 0.5, 1, 2.
+        assert!((st.d[0] - 0.5).abs() < 1e-12);
+        assert!((st.d[2] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inv_sqrt_c_matches_closed_form_on_diagonal() {
+        let mut st = CmaState::new(vec![0.0; 2], 1.0);
+        st.c = Matrix::from_vec(2, 2, vec![4.0, 0.0, 0.0, 9.0]);
+        st.refresh_eigen(EigKind::Syev);
+        let u = st.inv_sqrt_c_apply(&[2.0, 3.0]);
+        // C^{-1/2} = diag(1/2, 1/3)
+        assert!((u[0] - 1.0).abs() < 1e-10);
+        assert!((u[1] - 1.0).abs() < 1e-10);
+    }
+}

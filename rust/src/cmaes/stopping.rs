@@ -1,0 +1,365 @@
+//! Stopping criteria for one CMA-ES descent (Auger & Hansen 2005 and the
+//! reference C code defaults) — the triggers that make IPOP restart with a
+//! doubled population (paper §2.2).
+
+use std::collections::VecDeque;
+
+/// Why a descent stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Objective target reached.
+    TargetReached,
+    /// Function-value range over the recent history below `tol_fun`.
+    TolFun,
+    /// All recent generation-best values bit-identical (flat fitness).
+    EqualFunValues,
+    /// Search distribution collapsed: all axes below `tol_x`.
+    TolX,
+    /// σ diverged relative to σ0.
+    TolUpSigma,
+    /// cond(C) exceeded the bound.
+    ConditionCov,
+    /// Adding 0.1·σ along a principal axis does not move the mean.
+    NoEffectAxis,
+    /// Adding 0.2·σ in some coordinate does not move the mean.
+    NoEffectCoord,
+    /// Long-run best/median no longer improving.
+    Stagnation,
+    /// Iteration budget of the descent exhausted.
+    MaxIter,
+    /// Evaluation budget exhausted.
+    MaxEvals,
+}
+
+impl StopReason {
+    /// Reasons that indicate convergence/collapse — the ones IPOP answers
+    /// with a restart — as opposed to budget exhaustion.
+    pub fn is_restartable(self) -> bool {
+        !matches!(self, StopReason::MaxIter | StopReason::MaxEvals | StopReason::TargetReached)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StopReason::TargetReached => "target",
+            StopReason::TolFun => "tolfun",
+            StopReason::EqualFunValues => "equalfunvalues",
+            StopReason::TolX => "tolx",
+            StopReason::TolUpSigma => "tolupsigma",
+            StopReason::ConditionCov => "conditioncov",
+            StopReason::NoEffectAxis => "noeffectaxis",
+            StopReason::NoEffectCoord => "noeffectcoord",
+            StopReason::Stagnation => "stagnation",
+            StopReason::MaxIter => "maxiter",
+            StopReason::MaxEvals => "maxevals",
+        }
+    }
+}
+
+/// Thresholds (reference C code defaults unless noted).
+#[derive(Clone, Debug)]
+pub struct StopConfig {
+    pub tol_fun: f64,
+    pub tol_x_rel: f64,
+    pub tol_up_sigma: f64,
+    pub max_condition: f64,
+    pub max_iters: usize,
+    pub max_evals: usize,
+    /// Stop when the best observed value falls at or below this.
+    pub target_f: Option<f64>,
+}
+
+impl Default for StopConfig {
+    fn default() -> Self {
+        StopConfig {
+            tol_fun: 1e-12,
+            tol_x_rel: 1e-11,
+            tol_up_sigma: 1e20,
+            max_condition: 1e14,
+            max_iters: usize::MAX,
+            max_evals: usize::MAX,
+            target_f: None,
+        }
+    }
+}
+
+/// Rolling histories backing the history-based criteria.
+#[derive(Clone, Debug)]
+pub struct StopState {
+    /// Per-generation best f, short window (TolFun/EqualFunValues).
+    short: VecDeque<f64>,
+    short_cap: usize,
+    /// Per-generation best f, long window (Stagnation).
+    long_best: VecDeque<f64>,
+    /// Per-generation median f, long window (Stagnation).
+    long_median: VecDeque<f64>,
+    long_cap: usize,
+}
+
+impl StopState {
+    pub fn new(n: usize, lambda: usize) -> StopState {
+        let short_cap = 10 + (30 * n).div_ceil(lambda);
+        let long_cap = (120 + (30 * n) / lambda).min(20_000);
+        StopState {
+            short: VecDeque::with_capacity(short_cap + 1),
+            short_cap,
+            long_best: VecDeque::with_capacity(long_cap + 1),
+            long_median: VecDeque::with_capacity(long_cap + 1),
+            long_cap,
+        }
+    }
+
+    pub fn push_generation(&mut self, gen_best: f64, gen_median: f64) {
+        if self.short.len() == self.short_cap {
+            self.short.pop_front();
+        }
+        self.short.push_back(gen_best);
+        if self.long_best.len() == self.long_cap {
+            self.long_best.pop_front();
+            self.long_median.pop_front();
+        }
+        self.long_best.push_back(gen_best);
+        self.long_median.push_back(gen_median);
+    }
+
+    fn short_range(&self) -> Option<f64> {
+        if self.short.len() < self.short_cap {
+            return None;
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in &self.short {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        Some(hi - lo)
+    }
+
+    fn stagnated(&self) -> bool {
+        if self.long_best.len() < self.long_cap {
+            return false;
+        }
+        let k = (self.long_cap / 5).max(1); // newest/oldest 20%
+        let median_of = |it: &mut dyn Iterator<Item = f64>| -> f64 {
+            let mut v: Vec<f64> = it.collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        let newest_best = median_of(&mut self.long_best.iter().rev().take(k).copied());
+        let oldest_best = median_of(&mut self.long_best.iter().take(k).copied());
+        let newest_med = median_of(&mut self.long_median.iter().rev().take(k).copied());
+        let oldest_med = median_of(&mut self.long_median.iter().take(k).copied());
+        newest_best >= oldest_best && newest_med >= oldest_med
+    }
+}
+
+/// Inputs to the per-generation stop check.
+pub struct StopInputs<'a> {
+    pub gen: usize,
+    pub evals: usize,
+    pub best_f: f64,
+    pub gen_values_sorted: &'a [f64],
+    pub mean: &'a [f64],
+    pub sigma: f64,
+    pub sigma0: f64,
+    pub diag_c: &'a [f64],
+    pub p_c: &'a [f64],
+    /// Sampling axes: `d` (sqrt eigenvalues, ascending) and `B` column of
+    /// the axis probed this generation.
+    pub d: &'a [f64],
+    pub b_axis: &'a [f64],
+    pub axis_index: usize,
+    pub condition: f64,
+}
+
+/// Evaluate every criterion; first match wins (ordering mirrors the
+/// reference code: budget/target first, then numerics).
+pub fn check(cfg: &StopConfig, hist: &StopState, inp: &StopInputs<'_>) -> Option<StopReason> {
+    if let Some(t) = cfg.target_f {
+        if inp.best_f <= t {
+            return Some(StopReason::TargetReached);
+        }
+    }
+    if inp.gen >= cfg.max_iters {
+        return Some(StopReason::MaxIter);
+    }
+    if inp.evals >= cfg.max_evals {
+        return Some(StopReason::MaxEvals);
+    }
+
+    // TolFun: history range AND current generation spread below tol.
+    if let Some(range) = hist.short_range() {
+        let gen_spread = inp.gen_values_sorted[inp.gen_values_sorted.len() - 1]
+            - inp.gen_values_sorted[0];
+        if range.max(gen_spread) < cfg.tol_fun {
+            return Some(StopReason::TolFun);
+        }
+        if range == 0.0 && gen_spread == 0.0 {
+            return Some(StopReason::EqualFunValues);
+        }
+    }
+
+    // TolX: σ·√C_ii and σ·pc_i all tiny relative to σ0.
+    let tol_x = cfg.tol_x_rel * inp.sigma0;
+    let all_small = inp
+        .diag_c
+        .iter()
+        .all(|&cii| inp.sigma * cii.max(0.0).sqrt() < tol_x)
+        && inp.p_c.iter().all(|&p| (inp.sigma * p).abs() < tol_x);
+    if all_small {
+        return Some(StopReason::TolX);
+    }
+
+    if inp.sigma / inp.sigma0 > cfg.tol_up_sigma {
+        return Some(StopReason::TolUpSigma);
+    }
+    if inp.condition > cfg.max_condition {
+        return Some(StopReason::ConditionCov);
+    }
+
+    // NoEffectAxis: probe one principal axis per generation (round-robin).
+    {
+        let step = 0.1 * inp.sigma * inp.d[inp.axis_index];
+        let moved = inp
+            .mean
+            .iter()
+            .zip(inp.b_axis)
+            .any(|(&mi, &bi)| mi + step * bi != mi);
+        if !moved {
+            return Some(StopReason::NoEffectAxis);
+        }
+    }
+
+    // NoEffectCoord.
+    for (j, &mj) in inp.mean.iter().enumerate() {
+        let step = 0.2 * inp.sigma * inp.diag_c[j].max(0.0).sqrt();
+        if mj + step == mj {
+            return Some(StopReason::NoEffectCoord);
+        }
+    }
+
+    if hist.stagnated() {
+        return Some(StopReason::Stagnation);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_inputs<'a>(
+        mean: &'a [f64],
+        diag_c: &'a [f64],
+        p_c: &'a [f64],
+        d: &'a [f64],
+        b_axis: &'a [f64],
+        gen_values: &'a [f64],
+    ) -> StopInputs<'a> {
+        StopInputs {
+            gen: 5,
+            evals: 100,
+            best_f: 1.0,
+            gen_values_sorted: gen_values,
+            mean,
+            sigma: 1.0,
+            sigma0: 1.0,
+            diag_c,
+            p_c,
+            d,
+            b_axis,
+            axis_index: 0,
+            condition: 10.0,
+        }
+    }
+
+    #[test]
+    fn target_fires_first() {
+        let cfg = StopConfig { target_f: Some(2.0), ..Default::default() };
+        let hist = StopState::new(2, 4);
+        let gv = [1.0, 3.0];
+        let inp = base_inputs(&[0.0, 0.0], &[1.0, 1.0], &[0.0, 0.0], &[1.0, 1.0], &[1.0, 0.0], &gv);
+        assert_eq!(check(&cfg, &hist, &inp), Some(StopReason::TargetReached));
+    }
+
+    #[test]
+    fn budget_limits_fire() {
+        let cfg = StopConfig { max_evals: 50, ..Default::default() };
+        let hist = StopState::new(2, 4);
+        let gv = [1.0, 3.0];
+        let inp = base_inputs(&[0.0, 0.0], &[1.0, 1.0], &[0.0, 0.0], &[1.0, 1.0], &[1.0, 0.0], &gv);
+        assert_eq!(check(&cfg, &hist, &inp), Some(StopReason::MaxEvals));
+    }
+
+    #[test]
+    fn tolfun_needs_full_history() {
+        let cfg = StopConfig::default();
+        let mut hist = StopState::new(2, 100); // short_cap = 10 + 1
+        let gv = [1.0, 1.0 + 1e-15];
+        let inp = base_inputs(&[0.0, 0.0], &[1.0, 1.0], &[0.0, 0.0], &[1.0, 1.0], &[1.0, 0.0], &gv);
+        assert_eq!(check(&cfg, &hist, &inp), None);
+        for _ in 0..11 {
+            hist.push_generation(1.0, 1.0);
+        }
+        assert_eq!(check(&cfg, &hist, &inp), Some(StopReason::TolFun));
+    }
+
+    #[test]
+    fn tolx_on_collapsed_distribution() {
+        let cfg = StopConfig::default();
+        let hist = StopState::new(2, 4);
+        let gv = [1.0, 3.0];
+        let diag = [1e-30, 1e-30];
+        let pc = [1e-25, 0.0];
+        let inp = base_inputs(&[0.0, 0.0], &diag, &pc, &[1.0, 1.0], &[1.0, 0.0], &gv);
+        assert_eq!(check(&cfg, &hist, &inp), Some(StopReason::TolX));
+    }
+
+    #[test]
+    fn condition_cov_fires() {
+        let cfg = StopConfig::default();
+        let hist = StopState::new(2, 4);
+        let gv = [1.0, 3.0];
+        let mut inp =
+            base_inputs(&[0.0, 0.0], &[1.0, 1.0], &[0.0, 0.0], &[1.0, 1.0], &[1.0, 0.0], &gv);
+        inp.condition = 1e15;
+        assert_eq!(check(&cfg, &hist, &inp), Some(StopReason::ConditionCov));
+    }
+
+    #[test]
+    fn no_effect_axis_detects_numerical_floor() {
+        let cfg = StopConfig::default();
+        let hist = StopState::new(2, 4);
+        let gv = [1.0, 3.0];
+        // mean huge, step tiny ⇒ m + step·b == m in f64.
+        let mean = [1e18, 1e18];
+        let mut inp = base_inputs(&mean, &[1.0, 1.0], &[0.0, 0.0], &[1e-6, 1e-6], &[1.0, 1.0], &gv);
+        inp.sigma = 1e-6;
+        assert_eq!(check(&cfg, &hist, &inp), Some(StopReason::NoEffectAxis));
+    }
+
+    #[test]
+    fn stagnation_on_flat_long_history() {
+        let cfg = StopConfig::default();
+        let mut hist = StopState::new(2, 4);
+        let cap = 120 + 60 / 4;
+        for _ in 0..cap {
+            hist.push_generation(5.0, 6.0);
+        }
+        // short history is full of identical values too; EqualFunValues
+        // fires earlier, so give the current generation a spread.
+        let gv = [4.9, 5.1];
+        let inp = base_inputs(&[0.0, 0.0], &[1.0, 1.0], &[0.0, 0.0], &[1.0, 1.0], &[1.0, 0.0], &gv);
+        let r = check(&cfg, &hist, &inp);
+        assert!(
+            matches!(r, Some(StopReason::Stagnation) | Some(StopReason::TolFun)),
+            "{r:?}"
+        );
+    }
+
+    #[test]
+    fn restartable_classification() {
+        assert!(StopReason::TolFun.is_restartable());
+        assert!(!StopReason::MaxEvals.is_restartable());
+        assert!(!StopReason::TargetReached.is_restartable());
+    }
+}

@@ -1,0 +1,201 @@
+//! Real (wall-clock) parallel evaluation: a scatter/gather thread pool
+//! mirroring §3.2.1 — the main process generates the points, scatters
+//! them to worker "processes" (threads here), gathers fitness back.
+//!
+//! On this container (1 CPU core) the pool cannot produce wall-clock
+//! speedups — the virtual cluster in [`crate::cluster`] carries the
+//! paper's scaling results — but the pool is the production path on real
+//! multi-core hosts and is exercised for correctness by the tests and the
+//! end-to-end example.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use crate::cmaes::BatchEvaluator;
+use crate::linalg::Matrix;
+
+/// A point-wise objective shared across worker threads.
+pub type SharedObjective = Arc<dyn Fn(&[f64]) -> f64 + Send + Sync>;
+
+enum Job {
+    /// (chunk of flattened points, dim, result sender, base index)
+    Eval(Vec<f64>, usize, mpsc::Sender<(usize, Vec<f64>)>, usize),
+    Shutdown,
+}
+
+/// Scatter/gather evaluation pool with `workers` threads.
+pub struct ThreadPoolEvaluator {
+    objective: SharedObjective,
+    senders: Vec<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    /// Total evaluations processed (for tests/metrics).
+    pub evals: Arc<AtomicUsize>,
+}
+
+impl ThreadPoolEvaluator {
+    pub fn new(objective: SharedObjective, workers: usize) -> ThreadPoolEvaluator {
+        assert!(workers >= 1);
+        let evals = Arc::new(AtomicUsize::new(0));
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let obj = Arc::clone(&objective);
+            let ctr = Arc::clone(&evals);
+            handles.push(thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Eval(chunk, dim, back, base) => {
+                            let count = chunk.len() / dim;
+                            let mut out = Vec::with_capacity(count);
+                            for i in 0..count {
+                                out.push(obj(&chunk[i * dim..(i + 1) * dim]));
+                            }
+                            ctr.fetch_add(count, Ordering::Relaxed);
+                            // The gather side may have hung up on panic;
+                            // ignore a closed channel.
+                            let _ = back.send((base, out));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            }));
+            senders.push(tx);
+        }
+        ThreadPoolEvaluator { objective, senders, handles, evals }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Evaluate serially on the caller thread (used for tiny batches
+    /// where scatter overhead dominates).
+    fn eval_serial(&self, xs: &Matrix, out: &mut [f64]) {
+        let n = xs.rows();
+        let mut p = vec![0.0; n];
+        for (k, o) in out.iter_mut().enumerate() {
+            for i in 0..n {
+                p[i] = xs[(i, k)];
+            }
+            *o = (self.objective)(&p);
+        }
+        self.evals.fetch_add(out.len(), Ordering::Relaxed);
+    }
+}
+
+impl BatchEvaluator for ThreadPoolEvaluator {
+    fn eval_batch(&mut self, xs: &Matrix, out: &mut [f64]) {
+        let lambda = xs.cols();
+        let n = xs.rows();
+        let workers = self.senders.len();
+        if lambda < 2 * workers || workers == 1 {
+            self.eval_serial(xs, out);
+            return;
+        }
+
+        // Scatter: contiguous chunks of points per worker.
+        let (back_tx, back_rx) = mpsc::channel();
+        let chunk = lambda.div_ceil(workers);
+        let mut sent = 0usize;
+        let mut jobs = 0usize;
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(lambda);
+            if lo >= hi {
+                break;
+            }
+            let mut flat = Vec::with_capacity((hi - lo) * n);
+            for k in lo..hi {
+                for i in 0..n {
+                    flat.push(xs[(i, k)]);
+                }
+            }
+            self.senders[w]
+                .send(Job::Eval(flat, n, back_tx.clone(), lo))
+                .expect("worker thread died");
+            sent += hi - lo;
+            jobs += 1;
+        }
+        drop(back_tx);
+        debug_assert_eq!(sent, lambda);
+
+        // Gather.
+        for _ in 0..jobs {
+            let (base, vals) = back_rx.recv().expect("worker thread died");
+            out[base..base + vals.len()].copy_from_slice(&vals);
+        }
+    }
+}
+
+impl Drop for ThreadPoolEvaluator {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cmaes::{CmaParams, Descent, StopConfig, StopReason};
+    use crate::cmaes::NativeCompute;
+
+    fn sphere_objective() -> SharedObjective {
+        Arc::new(|x: &[f64]| x.iter().map(|v| v * v).sum())
+    }
+
+    #[test]
+    fn pool_matches_serial() {
+        let mut pool = ThreadPoolEvaluator::new(sphere_objective(), 4);
+        let xs = Matrix::from_fn(5, 16, |r, c| (r + c) as f64 * 0.1);
+        let mut got = vec![0.0; 16];
+        pool.eval_batch(&xs, &mut got);
+        for k in 0..16 {
+            let expect: f64 = (0..5).map(|r| xs[(r, k)] * xs[(r, k)]).sum();
+            assert!((got[k] - expect).abs() < 1e-12, "point {k}");
+        }
+        assert_eq!(pool.evals.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn small_batches_run_serially() {
+        let mut pool = ThreadPoolEvaluator::new(sphere_objective(), 8);
+        let xs = Matrix::from_fn(3, 4, |r, c| (r * c) as f64);
+        let mut out = vec![0.0; 4];
+        pool.eval_batch(&xs, &mut out); // 4 < 2·8 → serial path
+        assert_eq!(pool.evals.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn descent_converges_through_pool() {
+        let mut pool = ThreadPoolEvaluator::new(sphere_objective(), 3);
+        let mut d = Descent::new(
+            CmaParams::new(6, 18),
+            vec![2.0; 6],
+            1.0,
+            Box::new(NativeCompute::level3()),
+            7,
+            StopConfig { target_f: Some(1e-9), max_evals: 200_000, ..Default::default() },
+        );
+        let (reason, _) = d.run_to_stop(&mut pool);
+        assert_eq!(reason, StopReason::TargetReached, "best={}", d.best_f);
+    }
+
+    #[test]
+    fn uneven_chunks_cover_all_points() {
+        // λ=17 over 4 workers: chunks 5/5/5/2.
+        let mut pool = ThreadPoolEvaluator::new(sphere_objective(), 4);
+        let xs = Matrix::from_fn(2, 17, |r, c| (r + 2 * c) as f64);
+        let mut out = vec![-1.0; 17];
+        pool.eval_batch(&xs, &mut out);
+        assert!(out.iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,427 @@
+//! Shared experiment harness for the benchmark binaries (`benches/`):
+//! a disk-cached campaign runner so that the Table-2/3, Fig-7/8/9/10
+//! benches reuse each other's (expensive) strategy runs, plus the scaled
+//! paper configuration in one place.
+//!
+//! Scaling (documented in DESIGN.md §2 and EXPERIMENTS.md): the paper
+//! uses λ_start = 12, K_max = 2⁸/2⁹ on 6144 cores with a 12 h budget;
+//! this testbed runs λ_start = 8, K_max = 2⁴/2⁵ on 248/256 virtual cores
+//! with the same 12 h *virtual* budget and deterministic model-based
+//! costs, so every mechanism (ladder, splits, ERT, ECDF) is identical
+//! and runs are exactly reproducible.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+
+use crate::bbob::Instance;
+use crate::cluster::{CostModel, DetCost};
+use crate::ipop::IpopConfig;
+use crate::metrics::paper_targets;
+use crate::strategies::{Algo, RunTrace, VirtualConfig};
+
+/// The scaled experiment parameters.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    pub lambda_start: usize,
+    /// K_max for K-Distributed and sequential IPOP.
+    pub k_max: usize,
+    /// K_max for K-Replicated (paper: 2× the K-Distributed one).
+    pub k_max_replicated: usize,
+    /// Virtual wall budget (paper: 12 h).
+    pub budget_s: f64,
+    /// Per-descent evaluation cap (real-compute guard).
+    pub descent_evals: usize,
+    /// Per-run total evaluation cap (real-compute guard).
+    pub run_evals: usize,
+    pub seeds: u64,
+}
+
+impl Scale {
+    /// Default scaled setup for a dimension (heavier dims get smaller
+    /// caps so the full campaign stays tractable on one core).
+    pub fn for_dim(dim: usize) -> Scale {
+        match dim {
+            d if d <= 10 => Scale {
+                lambda_start: 8,
+                k_max: 16,
+                k_max_replicated: 32,
+                budget_s: 12.0 * 3600.0,
+                descent_evals: 40_000,
+                run_evals: 400_000,
+                seeds: 3,
+            },
+            d if d <= 40 => Scale {
+                lambda_start: 8,
+                k_max: 16,
+                k_max_replicated: 32,
+                budget_s: 12.0 * 3600.0,
+                descent_evals: 15_000,
+                run_evals: 120_000,
+                seeds: 2,
+            },
+            // dim ≥ 200: each O(n²) evaluation costs ~40 µs of real CPU,
+            // so the campaign drops to one seed and tight eval caps
+            // (recorded as a scaling note in EXPERIMENTS.md).
+            _ => Scale {
+                lambda_start: 8,
+                k_max: 8,
+                k_max_replicated: 16,
+                budget_s: 12.0 * 3600.0,
+                descent_evals: 8_000,
+                run_evals: 40_000,
+                seeds: 1,
+            },
+        }
+    }
+
+    /// Deterministic cost constants: evaluation ≈ 5 ns·n² (dim 40
+    /// ≈ 8 µs, dim 1000 ≈ 5 ms — the paper reports < 9 ms at dim 1000),
+    /// linalg at 1 Gflop/s effective.
+    pub fn det_cost(dim: usize) -> DetCost {
+        DetCost {
+            eval_point_s: 5e-9 * (dim as f64) * (dim as f64),
+            flop_s: 1e-9,
+            eig_flops_per_n3: 9.0,
+        }
+    }
+
+    /// Build the virtual config for one (dim, extra cost, seed, algo).
+    pub fn config(&self, dim: usize, extra_cost_s: f64, seed: u64, algo: Algo) -> VirtualConfig {
+        let k_max = match algo {
+            Algo::KReplicated => self.k_max_replicated,
+            _ => self.k_max,
+        };
+        let mut ipop = IpopConfig::bbob(self.lambda_start, k_max);
+        ipop.max_evals = self.descent_evals;
+        VirtualConfig {
+            ipop,
+            dim,
+            cost: CostModel::deterministic(self.lambda_start, extra_cost_s, Self::det_cost(dim)),
+            budget_s: self.budget_s,
+            targets: paper_targets(),
+            stop_at_final_target: true,
+            restart_distributed: false,
+            real_eval_cap: self.run_evals,
+            seed,
+        }
+    }
+}
+
+/// Identity of one cached run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunKey {
+    pub algo: Algo,
+    pub fid: usize,
+    pub dim: usize,
+    pub cost_ms: f64,
+    pub seed: u64,
+}
+
+/// One descent inside a cached run.
+#[derive(Clone, Debug)]
+pub struct DescSummary {
+    pub k: usize,
+    pub replica: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub evals: usize,
+    pub hits: Vec<Option<f64>>,
+}
+
+/// Cached summary of one strategy run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub key: RunKey,
+    /// First-hit virtual time per paper target (9 entries).
+    pub hits: Vec<Option<f64>>,
+    pub budget_s: f64,
+    pub end_s: f64,
+    pub best_delta: f64,
+    pub total_evals: usize,
+    pub descents: Vec<DescSummary>,
+}
+
+impl RunSummary {
+    fn from_trace(key: RunKey, tr: &RunTrace) -> RunSummary {
+        RunSummary {
+            key,
+            hits: tr.hits.hits.clone(),
+            budget_s: tr.budget_s,
+            end_s: tr.end_s,
+            best_delta: tr.best_delta,
+            total_evals: tr.total_evals,
+            descents: tr
+                .descents
+                .iter()
+                .map(|d| DescSummary {
+                    k: d.k,
+                    replica: d.replica,
+                    start_s: d.start_s,
+                    end_s: d.end_s,
+                    evals: d.evals,
+                    hits: d.hits.hits.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.9e}")).unwrap_or_default()
+}
+
+fn parse_opt(s: &str) -> Option<f64> {
+    if s.is_empty() {
+        None
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Disk-backed campaign cache under `bench_out/cache/`.
+pub struct Campaign {
+    dir: PathBuf,
+    runs: Vec<RunSummary>,
+}
+
+impl Campaign {
+    pub fn open() -> Campaign {
+        let dir = PathBuf::from("bench_out/cache");
+        let _ = fs::create_dir_all(&dir);
+        let mut c = Campaign { dir, runs: Vec::new() };
+        c.load();
+        c
+    }
+
+    fn runs_path(&self) -> PathBuf {
+        self.dir.join("runs.tsv")
+    }
+
+    fn load(&mut self) {
+        let Ok(text) = fs::read_to_string(self.runs_path()) else { return };
+        for line in text.lines().skip(1) {
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() < 16 {
+                continue;
+            }
+            let algo = match f[0] {
+                "sequential-ipop" => Algo::Sequential,
+                "k-replicated" => Algo::KReplicated,
+                "k-distributed" => Algo::KDistributed,
+                _ => continue,
+            };
+            let key = RunKey {
+                algo,
+                fid: f[1].parse().unwrap_or(0),
+                dim: f[2].parse().unwrap_or(0),
+                cost_ms: f[3].parse().unwrap_or(0.0),
+                seed: f[4].parse().unwrap_or(0),
+            };
+            let hits: Vec<Option<f64>> = (5..14).map(|i| parse_opt(f[i])).collect();
+            let descents = f[16]
+                .split(';')
+                .filter(|s| !s.is_empty())
+                .filter_map(|ds| {
+                    let p: Vec<&str> = ds.split(',').collect();
+                    if p.len() < 14 {
+                        return None;
+                    }
+                    Some(DescSummary {
+                        k: p[0].parse().ok()?,
+                        replica: p[1].parse().ok()?,
+                        start_s: p[2].parse().ok()?,
+                        end_s: p[3].parse().ok()?,
+                        evals: p[4].parse().ok()?,
+                        hits: (5..14).map(|i| parse_opt(p[i])).collect(),
+                    })
+                })
+                .collect();
+            self.runs.push(RunSummary {
+                key,
+                hits,
+                budget_s: parse_opt(f[14]).unwrap_or(f64::NAN),
+                end_s: 0.0,
+                best_delta: parse_opt(f[15]).unwrap_or(f64::NAN),
+                total_evals: 0,
+                descents,
+            });
+        }
+    }
+
+    fn persist(&self) {
+        let mut out = String::from(
+            "algo\tfid\tdim\tcost_ms\tseed\th1\th2\th3\th4\th5\th6\th7\th8\th9\tbudget\tbest\tdescents\n",
+        );
+        for r in &self.runs {
+            let mut desc = String::new();
+            for d in &r.descents {
+                let _ = write!(
+                    desc,
+                    "{},{},{:.6e},{:.6e},{},{};",
+                    d.k,
+                    d.replica,
+                    d.start_s,
+                    d.end_s,
+                    d.evals,
+                    d.hits.iter().map(|h| fmt_opt(*h)).collect::<Vec<_>>().join(",")
+                );
+            }
+            let _ = writeln!(
+                out,
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                r.key.algo.name(),
+                r.key.fid,
+                r.key.dim,
+                r.key.cost_ms,
+                r.key.seed,
+                r.hits.iter().map(|h| fmt_opt(*h)).collect::<Vec<_>>().join("\t"),
+                format!("{:.6e}\t{}", r.budget_s, fmt_opt(Some(r.best_delta))),
+                desc
+            );
+        }
+        let _ = fs::write(self.runs_path(), out);
+    }
+
+    /// Fetch (or compute and cache) the run for `key`.
+    pub fn run(&mut self, key: RunKey) -> RunSummary {
+        if let Some(r) = self.runs.iter().find(|r| r.key == key) {
+            return r.clone();
+        }
+        let scale = Scale::for_dim(key.dim);
+        let cfg = scale.config(key.dim, key.cost_ms * 1e-3, key.seed, key.algo);
+        let inst = Instance::new(key.fid, key.dim, key.seed + 1);
+        let tr = key.algo.run(&inst, &cfg);
+        let summary = RunSummary::from_trace(key, &tr);
+        self.runs.push(summary.clone());
+        self.persist();
+        summary
+    }
+
+    /// All runs of a (dim, cost) cell for every function/seed/algo —
+    /// the unit the Table-2/ECDF benches consume.
+    pub fn cell(
+        &mut self,
+        dim: usize,
+        cost_ms: f64,
+        fids: &[usize],
+        algos: &[Algo],
+    ) -> BTreeMap<(usize, u64), Vec<RunSummary>> {
+        let scale = Scale::for_dim(dim);
+        let mut out = BTreeMap::new();
+        for &fid in fids {
+            for seed in 0..scale.seeds {
+                let mut v = Vec::new();
+                for &algo in algos {
+                    v.push(self.run(RunKey { algo, fid, dim, cost_ms, seed }));
+                }
+                out.insert((fid, seed), v);
+            }
+        }
+        out
+    }
+}
+
+/// ERT per (algorithm, target) over seeds: pass per-seed summaries of one
+/// (algo, fid, dim, cost) group.
+pub fn ert_per_target(runs: &[&RunSummary], target_idx: usize) -> Option<f64> {
+    let hit: Vec<Option<f64>> = runs.iter().map(|r| r.hits[target_idx]).collect();
+    let budgets: Vec<f64> = runs.iter().map(|r| r.budget_s).collect();
+    crate::metrics::ert(&hit, &budgets)
+}
+
+/// Strict ERT: defined only when EVERY seed hit the target, so no
+/// failed-run budget term enters. The speedup tables use this variant:
+/// on the scaled testbed hit times are sub-second while the paper's 12 h
+/// budget is kept, so a single failed seed would swamp the ratio with
+/// the budget constant (the paper's hour-scale hits do not have this
+/// pathology — deviation documented in EXPERIMENTS.md).
+pub fn ert_per_target_strict(runs: &[&RunSummary], target_idx: usize) -> Option<f64> {
+    let hits: Vec<f64> = runs.iter().filter_map(|r| r.hits[target_idx]).collect();
+    if hits.len() != runs.len() || hits.is_empty() {
+        return None;
+    }
+    Some(hits.iter().sum::<f64>() / hits.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_is_defined_for_paper_dims() {
+        for dim in [10, 40, 200, 1000] {
+            let s = Scale::for_dim(dim);
+            assert!(s.k_max_replicated == 2 * s.k_max);
+            assert!(s.seeds >= 1);
+            let det = Scale::det_cost(dim);
+            assert!(det.eval_point_s > 0.0);
+        }
+        // Paper sanity: dim-1000 evaluation under 9 ms.
+        assert!(Scale::det_cost(1000).eval_point_s < 9e-3);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ipopcma_test_{}", std::process::id()));
+        let _ = fs::create_dir_all(&dir);
+        let mut c = Campaign { dir: dir.clone(), runs: Vec::new() };
+        // Fabricate a run and persist/reload it.
+        let key = RunKey { algo: Algo::KDistributed, fid: 1, dim: 5, cost_ms: 0.0, seed: 0 };
+        c.runs.push(RunSummary {
+            key: key.clone(),
+            hits: vec![Some(1.0), None, None, None, None, None, None, None, None],
+            budget_s: 100.0,
+            end_s: 1.0,
+            best_delta: 0.5,
+            total_evals: 10,
+            descents: vec![DescSummary {
+                k: 1,
+                replica: 0,
+                start_s: 0.0,
+                end_s: 1.0,
+                evals: 10,
+                hits: vec![Some(1.0), None, None, None, None, None, None, None, None],
+            }],
+        });
+        c.persist();
+        let mut c2 = Campaign { dir, runs: Vec::new() };
+        c2.load();
+        assert_eq!(c2.runs.len(), 1);
+        assert_eq!(c2.runs[0].key, key);
+        assert_eq!(c2.runs[0].hits[0], Some(1.0));
+        assert_eq!(c2.runs[0].descents.len(), 1);
+        assert_eq!(c2.runs[0].descents[0].hits[0], Some(1.0));
+    }
+
+    #[test]
+    fn ert_over_seeds() {
+        let mk = |hit: Option<f64>| RunSummary {
+            key: RunKey { algo: Algo::Sequential, fid: 1, dim: 5, cost_ms: 0.0, seed: 0 },
+            hits: vec![hit],
+            budget_s: 50.0,
+            end_s: 10.0,
+            best_delta: 0.0,
+            total_evals: 0,
+            descents: vec![],
+        };
+        let a = mk(Some(10.0));
+        let b = mk(None);
+        assert_eq!(ert_per_target(&[&a, &b], 0), Some(60.0));
+    }
+}
+
+/// Median wall time of `f` over `reps` runs (seconds). A `black_box` on
+/// the closure result prevents dead-code elimination.
+pub fn time_median(reps: usize, mut f: impl FnMut() -> f64) -> f64 {
+    let mut ts = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let v = f();
+        std::hint::black_box(v);
+        ts.push(t0.elapsed().as_secs_f64());
+    }
+    ts.sort_by(|a, b| a.total_cmp(b));
+    ts[ts.len() / 2]
+}

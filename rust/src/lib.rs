@@ -1,0 +1,33 @@
+//! # ipopcma — massively parallel IPOP-CMA-ES
+//!
+//! A reproduction of *"Massively parallel CMA-ES with increasing
+//! population"* (Redon, Fortin, Derbel, Tsuji, Sato; 2024) as a
+//! three-layer Rust + JAX/Pallas + PJRT stack:
+//!
+//! * **L3 (this crate)** — the coordinator: CMA-ES / IPOP-CMA-ES, the
+//!   K-Replicated and K-Distributed large-scale parallel strategies over a
+//!   virtual cluster, the BBOB benchmark substrate, metrics (ERT, ECDF,
+//!   speedups), and the benchmark harness regenerating every table and
+//!   figure of the paper.
+//! * **L2/L1 (python/, build-time only)** — the dense iteration compute
+//!   (batched sampling GEMM, rank-μ covariance GEMM, Jacobi
+//!   eigendecomposition) as JAX functions calling Pallas kernels, AOT
+//!   lowered to HLO text and executed from Rust through PJRT
+//!   ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bbob;
+pub mod cli;
+pub mod cluster;
+pub mod cmaes;
+pub mod evaluator;
+pub mod harness;
+pub mod ipop;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod strategies;
+pub mod linalg;
+pub mod rng;

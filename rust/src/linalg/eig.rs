@@ -1,0 +1,375 @@
+//! Symmetric eigendecomposition — the `dsyev` analogue (paper §3.1).
+//!
+//! Householder tridiagonalisation followed by implicit-shift QL iteration,
+//! the classic EISPACK `tred2` / `tql2` pair (via the public-domain JAMA
+//! lineage). O(n³), numerically robust for the SPD covariance matrices
+//! CMA-ES produces (it also handles indefinite symmetric input, exercised
+//! in tests).
+
+use super::Matrix;
+
+/// Result of [`syev`]: `a = v · diag(d) · vᵀ`, eigenvalues ascending,
+/// eigenvectors orthonormal in the *columns* of `v`.
+pub struct EigDecomposition {
+    pub values: Vec<f64>,
+    pub vectors: Matrix,
+}
+
+/// Eigendecomposition of a symmetric matrix.
+///
+/// # Panics
+/// Panics if `a` is not square or the QL iteration fails to converge
+/// (more than 50 sweeps on one eigenvalue — practically unreachable for
+/// symmetric input).
+pub fn syev(a: &Matrix) -> EigDecomposition {
+    assert_eq!(a.rows(), a.cols(), "syev requires a square matrix");
+    let n = a.rows();
+    let mut v = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut v, &mut d, &mut e);
+    tql2(&mut v, &mut d, &mut e);
+    EigDecomposition { values: d, vectors: v }
+}
+
+/// Householder reduction to symmetric tridiagonal form.
+/// On exit `v` holds the accumulated orthogonal transform, `d` the
+/// diagonal, `e` the sub-diagonal.
+fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+    }
+
+    for i in (1..n).rev() {
+        // Scale to avoid under/overflow.
+        let mut scale = 0.0;
+        let mut h = 0.0;
+        for item in d.iter().take(i) {
+            scale += item.abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[i - 1];
+            for j in 0..i {
+                d[j] = v[(i - 1, j)];
+                v[(i, j)] = 0.0;
+                v[(j, i)] = 0.0;
+            }
+        } else {
+            // Generate Householder vector.
+            for item in d.iter_mut().take(i) {
+                *item /= scale;
+                h += *item * *item;
+            }
+            let mut f = d[i - 1];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[i - 1] = f - g;
+            for item in e.iter_mut().take(i) {
+                *item = 0.0;
+            }
+
+            // Apply similarity transformation to remaining columns.
+            for j in 0..i {
+                f = d[j];
+                v[(j, i)] = f;
+                g = e[j] + v[(j, j)] * f;
+                for k in (j + 1)..i {
+                    g += v[(k, j)] * d[k];
+                    e[k] += v[(k, j)] * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                f = d[j];
+                g = e[j];
+                for k in j..i {
+                    v[(k, j)] -= f * e[k] + g * d[k];
+                }
+                d[j] = v[(i - 1, j)];
+                v[(i, j)] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+
+    // Accumulate transformations.
+    for i in 0..(n - 1) {
+        v[(n - 1, i)] = v[(i, i)];
+        v[(i, i)] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[(k, i + 1)] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[(k, i + 1)] * v[(k, j)];
+                }
+                for k in 0..=i {
+                    v[(k, j)] -= g * d[k];
+                }
+            }
+        }
+        for k in 0..=i {
+            v[(k, i + 1)] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+        v[(n - 1, j)] = 0.0;
+    }
+    v[(n - 1, n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+/// Implicit-shift QL iteration on the tridiagonal form, accumulating
+/// eigenvectors into `v`; sorts eigenpairs ascending on exit.
+fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter <= 50, "tql2: QL iteration failed to converge");
+
+                // Compute implicit shift.
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = p.hypot(1.0);
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for item in d.iter_mut().take(n).skip(l + 2) {
+                    *item -= h;
+                }
+                f += h;
+
+                // Implicit QL transformation.
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = p.hypot(e[i]);
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+
+                    // Accumulate transformation.
+                    for k in 0..n {
+                        h = v[(k, i + 1)];
+                        v[(k, i + 1)] = s * v[(k, i)] + c * h;
+                        v[(k, i)] = c * v[(k, i)] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // Sort eigenvalues and corresponding vectors ascending.
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in (i + 1)..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d.swap(i, k);
+            for r in 0..n {
+                let tmp = v[(r, i)];
+                v[(r, i)] = v[(r, k)];
+                v[(r, k)] = tmp;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, GemmKind};
+    use crate::rng::Xoshiro256pp;
+
+    fn random_symmetric(rng: &mut Xoshiro256pp, n: usize) -> Matrix {
+        let mut m = Matrix::from_fn(n, n, |_, _| rng.uniform(-1.0, 1.0));
+        m.symmetrize();
+        m
+    }
+
+    fn check_decomposition(a: &Matrix, tol: f64) {
+        let n = a.rows();
+        let EigDecomposition { values, vectors } = syev(a);
+
+        // Eigenvalues ascending.
+        for w in values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12, "not sorted: {values:?}");
+        }
+
+        // Columns orthonormal: Vᵀ·V = I.
+        let vt = vectors.transpose();
+        let mut vtv = Matrix::zeros(n, n);
+        gemm(GemmKind::Level3, 1.0, &vt, &vectors, 0.0, &mut vtv);
+        assert!(vtv.max_abs_diff(&Matrix::eye(n)) < tol, "V not orthonormal");
+
+        // Reconstruction: V·diag(d)·Vᵀ = A.
+        let mut vd = vectors.clone();
+        for r in 0..n {
+            for c in 0..n {
+                vd[(r, c)] *= values[c];
+            }
+        }
+        let mut rec = Matrix::zeros(n, n);
+        gemm(GemmKind::Level3, 1.0, &vd, &vt, 0.0, &mut rec);
+        assert!(rec.max_abs_diff(a) < tol, "reconstruction failed");
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_fn(4, 4, |r, c| if r == c { (4 - r) as f64 } else { 0.0 });
+        let eig = syev(&a);
+        let expect = [1.0, 2.0, 3.0, 4.0];
+        for (v, e) in eig.values.iter().zip(expect) {
+            assert!((v - e).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let eig = syev(&a);
+        assert!((eig.values[0] - 1.0).abs() < 1e-12);
+        assert!((eig.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_matrices_reconstruct() {
+        let mut rng = Xoshiro256pp::new(77);
+        for &n in &[1usize, 2, 3, 5, 10, 40, 100] {
+            let a = random_symmetric(&mut rng, n);
+            check_decomposition(&a, 1e-9 * (n as f64));
+        }
+    }
+
+    #[test]
+    fn spd_matrix_has_positive_eigenvalues() {
+        // A·Aᵀ + n·I is SPD.
+        let mut rng = Xoshiro256pp::new(5);
+        let n = 20;
+        let a = Matrix::from_fn(n, n, |_, _| rng.uniform(-1.0, 1.0));
+        let at = a.transpose();
+        let mut spd = Matrix::eye(n);
+        gemm(GemmKind::Level3, 1.0, &a, &at, n as f64, &mut spd);
+        let eig = syev(&spd);
+        assert!(eig.values.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        // 3·I has a triple eigenvalue; vectors must still be orthonormal.
+        let a = {
+            let mut m = Matrix::eye(3);
+            m.scale(3.0);
+            m
+        };
+        check_decomposition(&a, 1e-12);
+    }
+
+    #[test]
+    fn indefinite_symmetric() {
+        let a = Matrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let eig = syev(&a);
+        assert!((eig.values[0] + 1.0).abs() < 1e-12);
+        assert!((eig.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ill_conditioned_spectrum() {
+        // Eigenvalues spanning 12 orders of magnitude (BBOB f10-like).
+        let n = 10;
+        let d: Vec<f64> = (0..n).map(|i| 10f64.powf(12.0 * i as f64 / (n - 1) as f64 - 6.0)).collect();
+        let mut rng = Xoshiro256pp::new(13);
+        // Random orthogonal Q from QR-free Gram-Schmidt of a Gaussian matrix.
+        let q = crate::bbob::transforms::random_rotation(&mut rng, n);
+        let mut qd = q.clone();
+        for r in 0..n {
+            for c in 0..n {
+                qd[(r, c)] *= d[c];
+            }
+        }
+        let qt = q.transpose();
+        let mut a = Matrix::zeros(n, n);
+        gemm(GemmKind::Level3, 1.0, &qd, &qt, 0.0, &mut a);
+        a.symmetrize();
+        let eig = syev(&a);
+        // Backward stability bounds the *absolute* error by O(eps·‖A‖),
+        // so tiny eigenvalues carry error relative to the largest one.
+        let norm = d[n - 1];
+        for (got, want) in eig.values.iter().zip(&d) {
+            assert!(
+                (got - want).abs() < 1e-10 * norm,
+                "got={got} want={want} (norm={norm})"
+            );
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Cyclic Jacobi eigensolver — the "reference code" tier for the
+//! eigendecomposition comparison (paper Fig. 5 upper-left), and the native
+//! twin of the JAX `jacobi_eigh` used on the AOT path (L2).
+//!
+//! Slower than [`super::eig::syev`] for large `n` (more sweeps over the
+//! full matrix), competitive for tiny matrices — which is exactly the
+//! dimension-dependent crossover the paper reports for LAPACK `dsyev`
+//! versus the reference eigendecomposition.
+
+use super::eig::EigDecomposition;
+use super::Matrix;
+
+/// Eigendecomposition of a symmetric matrix by cyclic Jacobi rotations.
+///
+/// Runs sweeps of all (p,q) pairs until the off-diagonal Frobenius norm
+/// falls below `eps · ‖A‖_F` (eps = 1e-14) or 30 sweeps elapse.
+pub fn jacobi_eig(a: &Matrix) -> EigDecomposition {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut v = Matrix::eye(n);
+    let norm = m.fro_norm().max(f64::MIN_POSITIVE);
+
+    for _sweep in 0..30 {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[(p, q)] * m[(p, q)];
+            }
+        }
+        if (2.0 * off).sqrt() <= 1e-14 * norm {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                // tan of the rotation angle, the smaller root.
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Apply the rotation to rows/cols p and q.
+                for k in 0..n {
+                    let akp = m[(k, p)];
+                    let akq = m[(k, q)];
+                    m[(k, p)] = c * akp - s * akq;
+                    m[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[(p, k)];
+                    let aqk = m[(q, k)];
+                    m[(p, k)] = c * apk - s * aqk;
+                    m[(q, k)] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Collect, sort ascending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let vectors = Matrix::from_fn(n, n, |r, c| v[(r, idx[c])]);
+    EigDecomposition { values, vectors }
+}
+
+/// Which eigensolver tier to use (paper Fig. 5 upper-left columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EigKind {
+    /// Cyclic Jacobi — "reference C code" tier.
+    Jacobi,
+    /// Householder + implicit QL — the `dsyev` analogue.
+    Syev,
+}
+
+impl EigKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EigKind::Jacobi => "jacobi",
+            EigKind::Syev => "syev",
+        }
+    }
+
+    pub fn decompose(self, a: &Matrix) -> EigDecomposition {
+        match self {
+            EigKind::Jacobi => jacobi_eig(a),
+            EigKind::Syev => super::eig::syev(a),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, GemmKind};
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn agrees_with_syev_on_random_spd() {
+        let mut rng = Xoshiro256pp::new(21);
+        for &n in &[2usize, 5, 12, 30] {
+            let g = Matrix::from_fn(n, n, |_, _| rng.uniform(-1.0, 1.0));
+            let gt = g.transpose();
+            let mut a = Matrix::eye(n);
+            gemm(GemmKind::Level3, 1.0, &g, &gt, 1.0, &mut a);
+            a.symmetrize();
+
+            let ja = jacobi_eig(&a);
+            let sy = super::super::eig::syev(&a);
+            for (x, y) in ja.values.iter().zip(&sy.values) {
+                assert!((x - y).abs() < 1e-9 * sy.values[n - 1].abs(), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconstructs() {
+        let mut rng = Xoshiro256pp::new(3);
+        let n = 15;
+        let mut a = Matrix::from_fn(n, n, |_, _| rng.uniform(-2.0, 2.0));
+        a.symmetrize();
+        let e = jacobi_eig(&a);
+        // V diag(d) Vᵀ = A
+        let mut vd = e.vectors.clone();
+        for r in 0..n {
+            for c in 0..n {
+                vd[(r, c)] *= e.values[c];
+            }
+        }
+        let vt = e.vectors.transpose();
+        let mut rec = Matrix::zeros(n, n);
+        gemm(GemmKind::Level3, 1.0, &vd, &vt, 0.0, &mut rec);
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+}

@@ -1,0 +1,61 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper (§3.1) contrasts three implementations of the CMA-ES linear
+//! algebra: the reference C code (hand-written loops), Level-2 BLAS
+//! (matrix–vector formulations), and Level-3 BLAS (the paper's GEMM
+//! rewrites). The vendored crate set ships no BLAS, so this module carries
+//! the three tiers natively:
+//!
+//! * [`gemm::gemm_naive`]   — the "reference C" analogue: textbook i-j-k
+//!   triple loop, no blocking;
+//! * [`gemm::gemm_level2`]  — one `dgemv`-style matrix–vector product per
+//!   column (what "using Level 2 BLAS directly" means in Fig. 5);
+//! * [`gemm::gemm_level3`]  — cache-blocked, register-tiled GEMM (the
+//!   `dgemm` analogue the paper's Eq. 3 rewrite targets).
+//!
+//! [`eig::syev`] is the `dsyev` analogue: Householder tridiagonalisation
+//! followed by implicit-shift QL (the EISPACK `tred2`/`tql2` lineage).
+
+pub mod eig;
+pub mod gemm;
+pub mod jacobi;
+pub mod matrix;
+
+pub use eig::syev;
+pub use gemm::{gemm, GemmKind};
+pub use jacobi::{jacobi_eig, EigKind};
+pub use matrix::Matrix;
+
+/// Euclidean norm of a vector.
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y ← a·x + y`.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_ops() {
+        let a = [3.0, 4.0];
+        assert!((norm2(&a) - 5.0).abs() < 1e-12);
+        assert!((dot(&a, &[1.0, 2.0]) - 11.0).abs() < 1e-12);
+        let mut y = [1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [7.0, 9.0]);
+    }
+}

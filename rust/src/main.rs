@@ -1,0 +1,174 @@
+//! `ipopcma` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                          list BBOB functions and AOT artifacts
+//!   optimize  --fid F --dim N     sequential IPOP-CMA-ES on one function
+//!   compare   --fid F --dim N     the three strategies on the virtual cluster
+//!   suite     --dim N             quick strategy comparison over the suite
+
+use ipopcma::bbob::{Instance, NAMES};
+use ipopcma::cli::Args;
+use ipopcma::cmaes::StopConfig;
+use ipopcma::harness::Scale;
+use ipopcma::ipop::{self, IpopConfig};
+use ipopcma::report::{ascii_table, fmt_val};
+use ipopcma::strategies::Algo;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "info" => info(),
+        "optimize" => optimize(&args),
+        "compare" => compare(&args),
+        "suite" => suite(&args),
+        _ => {
+            print!(
+                "ipopcma — massively parallel IPOP-CMA-ES (Redon et al. 2024 reproduction)\n\n\
+                 usage:\n\
+                 \x20 ipopcma info\n\
+                 \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0]\n\
+                 \x20 ipopcma compare  --fid 7  --dim 10 [--cost-ms 1] [--seed 0]\n\
+                 \x20 ipopcma suite    --dim 10 [--cost-ms 0] [--seed 0]\n"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn info() -> Result<(), String> {
+    println!("== BBOB noiseless suite ==");
+    for (i, name) in NAMES.iter().enumerate() {
+        println!("  f{:<2} {}", i + 1, name);
+    }
+    match ipopcma::runtime::XlaRuntime::cpu() {
+        Ok(rt) => {
+            println!("\n== AOT artifacts ({}) ==", rt.manifest.dir.display());
+            for a in &rt.manifest.artifacts {
+                println!("  {:<24} kind={:?} n={}", a.name, a.kind, a.n);
+            }
+        }
+        Err(e) => println!("\n(no AOT artifacts: {e})"),
+    }
+    Ok(())
+}
+
+fn optimize(args: &Args) -> Result<(), String> {
+    let fid: usize = args.typed("fid", 1)?;
+    let dim: usize = args.typed("dim", 10)?;
+    let lambda_start: usize = args.typed("lambda-start", 8)?;
+    let k_max: usize = args.typed("kmax", 16)?;
+    let target: f64 = args.typed("target", 1e-8)?;
+    let max_evals: usize = args.typed("max-evals", 500_000)?;
+    let seed: u64 = args.typed("seed", 0)?;
+
+    let inst = Instance::new(fid, dim, seed + 1);
+    let mut cfg = IpopConfig::bbob(lambda_start, k_max);
+    cfg.stop = StopConfig { target_f: Some(inst.fopt + target), ..Default::default() };
+    cfg.max_evals = max_evals;
+
+    let t0 = std::time::Instant::now();
+    let res = ipop::run(&cfg, dim, |x| inst.eval(x), seed);
+    println!(
+        "f{fid} ({}) dim {dim}: Δf = {:.3e} after {} evals in {:.2}s",
+        inst.name(),
+        res.best_f - inst.fopt,
+        res.total_evals,
+        t0.elapsed().as_secs_f64()
+    );
+    for d in &res.descents {
+        println!(
+            "  K={:<4} λ={:<5} iters={:<6} Δf={:.3e} stop={}",
+            d.k,
+            d.lambda,
+            d.iterations,
+            d.best_f - inst.fopt,
+            d.stop.name()
+        );
+    }
+    Ok(())
+}
+
+fn compare(args: &Args) -> Result<(), String> {
+    let fid: usize = args.typed("fid", 7)?;
+    let dim: usize = args.typed("dim", 10)?;
+    let cost_ms: f64 = args.typed("cost-ms", 1.0)?;
+    let seed: u64 = args.typed("seed", 0)?;
+
+    let inst = Instance::new(fid, dim, seed + 1);
+    let scale = Scale::for_dim(dim);
+    let mut rows = Vec::new();
+    for algo in Algo::ALL {
+        let cfg = scale.config(dim, cost_ms * 1e-3, seed, algo);
+        let tr = algo.run(&inst, &cfg);
+        let final_hit = tr.hits.hits.last().copied().flatten();
+        rows.push(vec![
+            algo.name().to_string(),
+            tr.hits.hit_count().to_string(),
+            fmt_val(Some(tr.best_delta)),
+            final_hit.map(|t| format!("{t:.3}s")).unwrap_or("-".into()),
+            tr.descents.len().to_string(),
+            tr.total_evals.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &format!("f{fid} dim {dim} (+{cost_ms} ms/eval) on the virtual cluster"),
+            &[
+                "algorithm".into(),
+                "targets hit".into(),
+                "best Δf".into(),
+                "t(1e-8)".into(),
+                "descents".into(),
+                "evals".into(),
+            ],
+            &rows,
+        )
+    );
+    Ok(())
+}
+
+fn suite(args: &Args) -> Result<(), String> {
+    let dim: usize = args.typed("dim", 10)?;
+    let cost_ms: f64 = args.typed("cost-ms", 0.0)?;
+    let seed: u64 = args.typed("seed", 0)?;
+    let scale = Scale::for_dim(dim);
+
+    let mut rows = Vec::new();
+    for algo in Algo::ALL {
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for fid in 1..=24 {
+            let inst = Instance::new(fid, dim, seed + 1);
+            let cfg = scale.config(dim, cost_ms * 1e-3, seed, algo);
+            let tr = algo.run(&inst, &cfg);
+            hits += tr.hits.hit_count();
+            total += tr.hits.targets.len();
+        }
+        rows.push(vec![
+            algo.name().to_string(),
+            format!("{hits}/{total}"),
+            format!("{:.0}%", 100.0 * hits as f64 / total as f64),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &format!("BBOB suite sweep, dim {dim}, +{cost_ms} ms/eval, 1 seed"),
+            &["algorithm".into(), "targets hit".into(), "rate".into()],
+            &rows,
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Performance-assessment methodology of the paper (§4.3.1): fixed target
+//! ladders, Expected Runtime (ERT, Hansen et al. 2009), Empirical
+//! Cumulative Distribution Functions (ECDF, COCO-style), and speedup
+//! aggregation (Table 2 statistics).
+
+/// The nine target precisions used throughout the paper:
+/// ε ∈ {10², 10^1.5, 10¹, 10^0.5, 10⁰, 10⁻², 10⁻⁴, 10⁻⁶, 10⁻⁸}.
+pub fn paper_targets() -> Vec<f64> {
+    vec![
+        1e2,
+        10f64.powf(1.5),
+        1e1,
+        10f64.powf(0.5),
+        1e0,
+        1e-2,
+        1e-4,
+        1e-6,
+        1e-8,
+    ]
+}
+
+/// Records, for each target ε, the first time the best-so-far quality
+/// `f_best − f_opt` dropped to ε or below.
+#[derive(Clone, Debug)]
+pub struct HitRecorder {
+    pub targets: Vec<f64>,
+    pub hits: Vec<Option<f64>>,
+    /// Index of the easiest target not yet hit (targets are descending).
+    next: usize,
+}
+
+impl HitRecorder {
+    pub fn new(targets: Vec<f64>) -> HitRecorder {
+        for w in targets.windows(2) {
+            assert!(w[0] > w[1], "targets must be strictly descending");
+        }
+        let n = targets.len();
+        HitRecorder { targets, hits: vec![None; n], next: 0 }
+    }
+
+    /// Observe the best-so-far quality `delta = f_best − f_opt` at `time`.
+    pub fn observe(&mut self, delta: f64, time: f64) {
+        while self.next < self.targets.len() && delta <= self.targets[self.next] {
+            self.hits[self.next] = Some(time);
+            self.next += 1;
+        }
+    }
+
+    /// Did the hardest (last) target get hit?
+    pub fn all_hit(&self) -> bool {
+        self.next == self.targets.len()
+    }
+
+    pub fn hit_count(&self) -> usize {
+        self.next
+    }
+}
+
+/// Expected Runtime over multiple runs of a stochastic algorithm
+/// (§4.3.1): `ERT = (Σ time of all runs, successful or not) / #successes`.
+///
+/// `hit_times[i]` is the hit time of run `i` (None if the run missed the
+/// target); `run_times[i]` is the total duration of run `i` (used for
+/// unsuccessful runs). Returns `None` when no run succeeded.
+pub fn ert(hit_times: &[Option<f64>], run_times: &[f64]) -> Option<f64> {
+    assert_eq!(hit_times.len(), run_times.len());
+    let successes = hit_times.iter().flatten().count();
+    if successes == 0 {
+        return None;
+    }
+    let total: f64 = hit_times
+        .iter()
+        .zip(run_times)
+        .map(|(h, &rt)| h.unwrap_or(rt))
+        .sum();
+    Some(total / successes as f64)
+}
+
+/// One ECDF step curve: fraction of (function, target, run) triplets hit
+/// by time `t`, evaluated at every distinct hit time.
+///
+/// `samples`: each entry is a hit timestamp (unhit triplets are passed as
+/// `None` and only contribute to the denominator).
+pub fn ecdf(samples: &[Option<f64>]) -> Vec<(f64, f64)> {
+    let denom = samples.len() as f64;
+    if samples.is_empty() {
+        return Vec::new();
+    }
+    let mut times: Vec<f64> = samples.iter().flatten().copied().collect();
+    times.sort_by(|a, b| a.total_cmp(b));
+    let mut curve = Vec::with_capacity(times.len());
+    for (i, &t) in times.iter().enumerate() {
+        // Last index with this time wins (step function).
+        if i + 1 == times.len() || times[i + 1] > t {
+            curve.push((t, (i + 1) as f64 / denom));
+        }
+    }
+    curve
+}
+
+/// Evaluate an ECDF curve at time `t` (fraction hit by `t`).
+pub fn ecdf_at(curve: &[(f64, f64)], t: f64) -> f64 {
+    let mut v = 0.0;
+    for &(ct, f) in curve {
+        if ct <= t {
+            v = f;
+        } else {
+            break;
+        }
+    }
+    v
+}
+
+/// Table-2-style aggregate statistics over a set of speedups.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpeedupStats {
+    pub count: usize,
+    pub avg: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl SpeedupStats {
+    pub fn from(values: &[f64]) -> SpeedupStats {
+        if values.is_empty() {
+            return SpeedupStats::default();
+        }
+        let n = values.len() as f64;
+        let avg = values.iter().sum::<f64>() / n;
+        let var = values.iter().map(|v| (v - avg) * (v - avg)).sum::<f64>() / n;
+        let min = values.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        SpeedupStats { count: values.len(), avg, std: var.sqrt(), min, max }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_hits_in_order() {
+        let mut r = HitRecorder::new(paper_targets());
+        r.observe(50.0, 1.0); // hits 1e2
+        assert_eq!(r.hit_count(), 1);
+        r.observe(0.5, 2.0); // hits 10^1.5, 10, 10^0.5, 1
+        assert_eq!(r.hit_count(), 5);
+        assert_eq!(r.hits[0], Some(1.0));
+        assert_eq!(r.hits[4], Some(2.0));
+        assert_eq!(r.hits[5], None);
+        r.observe(1e-9, 3.0);
+        assert!(r.all_hit());
+    }
+
+    #[test]
+    fn recorder_keeps_first_hit() {
+        let mut r = HitRecorder::new(vec![1.0]);
+        r.observe(0.5, 1.0);
+        r.observe(0.1, 2.0);
+        assert_eq!(r.hits[0], Some(1.0));
+    }
+
+    #[test]
+    fn ert_all_successful_is_mean() {
+        let hits = [Some(10.0), Some(20.0)];
+        let rt = [30.0, 30.0];
+        assert_eq!(ert(&hits, &rt), Some(15.0));
+    }
+
+    #[test]
+    fn ert_counts_unsuccessful_time() {
+        // One success at 10, one failure that ran 50: ERT = (10+50)/1.
+        let hits = [Some(10.0), None];
+        let rt = [60.0, 50.0];
+        assert_eq!(ert(&hits, &rt), Some(60.0));
+    }
+
+    #[test]
+    fn ert_none_when_no_success() {
+        assert_eq!(ert(&[None, None], &[1.0, 2.0]), None);
+    }
+
+    #[test]
+    fn ecdf_step_curve() {
+        let samples = [Some(1.0), Some(3.0), None, Some(3.0)];
+        let c = ecdf(&samples);
+        assert_eq!(c, vec![(1.0, 0.25), (3.0, 0.75)]);
+        assert_eq!(ecdf_at(&c, 0.5), 0.0);
+        assert_eq!(ecdf_at(&c, 1.0), 0.25);
+        assert_eq!(ecdf_at(&c, 10.0), 0.75);
+    }
+
+    #[test]
+    fn speedup_stats() {
+        let s = SpeedupStats::from(&[1.0, 3.0]);
+        assert_eq!(s.avg, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert_eq!(s.count, 2);
+    }
+}

@@ -1,0 +1,137 @@
+//! Report generation: CSV emitters and paper-style ASCII tables (no
+//! external serialization crates in the offline vendor set, so this is
+//! hand-rolled and deliberately minimal).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A simple CSV writer: quotes nothing, escapes nothing — callers only
+/// write numeric and identifier-like fields.
+pub struct Csv {
+    buf: String,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        let mut buf = String::new();
+        buf.push_str(&header.join(","));
+        buf.push('\n');
+        Csv { buf, cols: header.len() }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.cols, "column count mismatch");
+        self.buf.push_str(&fields.join(","));
+        self.buf.push('\n');
+    }
+
+    pub fn write_to(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, &self.buf)
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.buf
+    }
+}
+
+/// Format a float the way the paper's tables do: 2–3 significant digits,
+/// switching to scientific notation for extremes, '-' for absent.
+pub fn fmt_val(v: Option<f64>) -> String {
+    match v {
+        None => "-".to_string(),
+        Some(v) if !v.is_finite() => "inf".to_string(),
+        Some(v) => {
+            let a = v.abs();
+            if a == 0.0 {
+                "0".into()
+            } else if a >= 10_000.0 || a < 0.01 {
+                format!("{v:.1e}")
+            } else if a >= 100.0 {
+                format!("{v:.0}")
+            } else if a >= 10.0 {
+                format!("{v:.1}")
+            } else {
+                format!("{v:.2}")
+            }
+        }
+    }
+}
+
+/// Render an ASCII table with a header row and aligned columns.
+pub fn ascii_table(title: &str, header: &[String], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), cols);
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+        let mut first = true;
+        for (c, w) in cells.iter().zip(widths) {
+            if !first {
+                out.push_str("  ");
+            }
+            let _ = write!(out, "{c:>w$}", w = w);
+            first = false;
+        }
+        out.push('\n');
+    };
+    line(&mut out, header, &widths);
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    line(&mut out, &sep, &widths);
+    for row in rows {
+        line(&mut out, row, &widths);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "2.5".into()]);
+        assert_eq!(c.as_str(), "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_rejects_wrong_arity() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into()]);
+    }
+
+    #[test]
+    fn value_formatting() {
+        assert_eq!(fmt_val(None), "-");
+        assert_eq!(fmt_val(Some(0.0)), "0");
+        assert_eq!(fmt_val(Some(3.14159)), "3.14");
+        assert_eq!(fmt_val(Some(42.0)), "42.0");
+        assert_eq!(fmt_val(Some(508.0)), "508");
+        assert_eq!(fmt_val(Some(18080.0)), "1.8e4");
+        assert_eq!(fmt_val(Some(0.001)), "1.0e-3");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = ascii_table(
+            "T",
+            &["f".into(), "v".into()],
+            &[vec!["1".into(), "10".into()], vec!["22".into(), "3".into()]],
+        );
+        assert!(t.contains("== T =="));
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,93 @@
+//! Gaussian sampling on top of the uniform generator.
+//!
+//! Marsaglia's polar method: exact (no tail truncation), no `sin`/`cos`,
+//! amortised ~1.27 uniforms per normal thanks to the cached spare.
+
+use super::Xoshiro256pp;
+
+/// A `N(0,1)` source wrapping a [`Xoshiro256pp`].
+#[derive(Clone, Debug)]
+pub struct NormalSource {
+    rng: Xoshiro256pp,
+    spare: Option<f64>,
+}
+
+impl NormalSource {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256pp::new(seed), spare: None }
+    }
+
+    pub fn from_rng(rng: Xoshiro256pp) -> Self {
+        Self { rng, spare: None }
+    }
+
+    /// Access the underlying uniform generator (consumes the cached spare
+    /// so uniform/normal interleavings stay reproducible).
+    pub fn rng_mut(&mut self) -> &mut Xoshiro256pp {
+        self.spare = None;
+        &mut self.rng
+    }
+
+    /// One standard normal deviate.
+    #[inline]
+    pub fn sample(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.rng.next_f64() - 1.0;
+            let v = 2.0 * self.rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Fill `out` with i.i.d. standard normals.
+    pub fn fill(&mut self, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = self.sample();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_match_standard_normal() {
+        let mut g = NormalSource::new(2024);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.sample()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let skew = xs.iter().map(|x| x.powi(3)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+        assert!(skew.abs() < 0.03, "skew={skew}");
+    }
+
+    #[test]
+    fn tail_mass_is_plausible() {
+        let mut g = NormalSource::new(5);
+        let n = 100_000usize;
+        let beyond2 = (0..n).filter(|_| g.sample().abs() > 2.0).count() as f64 / n as f64;
+        // P(|Z|>2) ≈ 0.0455
+        assert!((beyond2 - 0.0455).abs() < 0.006, "beyond2={beyond2}");
+    }
+
+    #[test]
+    fn deterministic_fill() {
+        let mut a = NormalSource::new(1);
+        let mut b = NormalSource::new(1);
+        let mut va = [0.0; 32];
+        let mut vb = [0.0; 32];
+        a.fill(&mut va);
+        b.fill(&mut vb);
+        assert_eq!(va, vb);
+    }
+}

@@ -1,0 +1,172 @@
+//! The AOT artifact manifest (`artifacts/manifest.json`), written by
+//! `python/compile/aot.py` at build time.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::Json;
+
+/// What a compiled artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// `Y = BD·Z` — the batched sampling GEMM.
+    SampleY,
+    /// `X = m·1ᵀ + σ·BD·Z` — Eq. 1 in full.
+    CmaSample,
+    /// `C' = keep·C + c1·pc·pcᵀ + cμ·Y·diag(w)·Yᵀ` — Eq. 3.
+    UpdateC,
+    /// `(values, vectors) = eigh(C)` — Jacobi eigendecomposition.
+    Eigh,
+    /// Sacrificial while-loop module compiled-and-discarded at client
+    /// startup (works around an xla_extension 0.5.1 first-while-module
+    /// miscompilation — see EXPERIMENTS.md §Notes).
+    Warmup,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Kind> {
+        Ok(match s {
+            "sample_y" => Kind::SampleY,
+            "cma_sample" => Kind::CmaSample,
+            "update_c" => Kind::UpdateC,
+            "eigh" => Kind::Eigh,
+            "warmup" => Kind::Warmup,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: Kind,
+    pub n: usize,
+    /// Population size (GEMM artifacts only).
+    pub lambda: Option<usize>,
+    /// μ = λ/2 (update artifacts only).
+    pub mu: Option<usize>,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let format = json
+            .get("format")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing format"))?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let kind = Kind::parse(
+                a.get("kind").and_then(Json::as_str).ok_or_else(|| anyhow!("{name}: missing kind"))?,
+            )?;
+            let n = a.get("n").and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: missing n"))?;
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact file missing: {}", path.display());
+            }
+            artifacts.push(Artifact {
+                name,
+                kind,
+                n,
+                lambda: a.get("lambda").and_then(Json::as_usize),
+                mu: a.get("mu").and_then(Json::as_usize),
+                path,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Default artifact directory: `$IPOPCMA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("IPOPCMA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Find an artifact by kind and shape.
+    pub fn find(&self, kind: Kind, n: usize, lambda: Option<usize>) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.n == n && (lambda.is_none() || a.lambda == lambda))
+    }
+
+    /// The population ladder available for dimension `n`.
+    pub fn lambdas_for(&self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == Kind::SampleY && a.n == n)
+            .filter_map(|a| a.lambda)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_or_skip() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        match Manifest::load(&dir) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("skipping (artifacts not built): {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let Some(m) = manifest_or_skip() else { return };
+        assert!(!m.artifacts.is_empty());
+        // Every dim with GEMM artifacts also has an eigh.
+        for a in &m.artifacts {
+            if !matches!(a.kind, Kind::Eigh | Kind::Warmup) {
+                assert!(m.find(Kind::Eigh, a.n, None).is_some(), "no eigh for n={}", a.n);
+            }
+        }
+    }
+
+    #[test]
+    fn find_by_shape() {
+        let Some(m) = manifest_or_skip() else { return };
+        let lams = m.lambdas_for(10);
+        assert!(!lams.is_empty());
+        let a = m.find(Kind::UpdateC, 10, Some(lams[0])).expect("update artifact");
+        assert_eq!(a.mu, Some(lams[0] / 2));
+    }
+}

@@ -1,0 +1,438 @@
+//! The discrete-event engine shared by every strategy: real search
+//! trajectories, virtual time (see module docs of [`crate::strategies`]).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use crate::bbob::Instance;
+use crate::cluster::{CommStats, Communicator, CostModel, OccupancySpan};
+use crate::cmaes::{Descent, FnEvaluator, StopReason};
+use crate::ipop::{self, IpopConfig};
+use crate::metrics::HitRecorder;
+use crate::rng::derive_stream;
+
+/// How iteration costs are charged (paper §3.2.1 vs. the 1-core baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Single core: λ serial evaluations per iteration.
+    Sequential,
+    /// One evaluation per core, scatter/gather between processes.
+    Parallel,
+}
+
+/// Full configuration of one virtual strategy run.
+#[derive(Clone, Debug)]
+pub struct VirtualConfig {
+    /// The IPOP ladder (λ_start, K_max, σ0, per-descent stop thresholds).
+    pub ipop: IpopConfig,
+    pub dim: usize,
+    /// Virtual cost model (additional evaluation cost, comm constants, T).
+    pub cost: CostModel,
+    /// Virtual wall-clock budget (the paper: 12 h).
+    pub budget_s: f64,
+    /// Quality target ladder ε (descending).
+    pub targets: Vec<f64>,
+    /// Stop the whole run once the hardest target has been hit (saves
+    /// real compute; exact for first-hit metrics — see module docs).
+    pub stop_at_final_target: bool,
+    /// K-Distributed: restart a descent with the same K when it stops
+    /// (the paper's §5 recommendation; its evaluation runs without).
+    pub restart_distributed: bool,
+    /// Real-compute guard: total evaluations across all descents.
+    pub real_eval_cap: usize,
+    pub seed: u64,
+}
+
+impl VirtualConfig {
+    /// Paper-shaped configuration: BBOB box, paper target ladder,
+    /// Fugaku-like cost constants with T = λ_start threads per process.
+    pub fn paper_like(dim: usize, lambda_start: usize, k_max: usize, extra_cost_s: f64, seed: u64) -> Self {
+        VirtualConfig {
+            ipop: IpopConfig::bbob(lambda_start, k_max),
+            dim,
+            cost: CostModel::fugaku_like(lambda_start, extra_cost_s),
+            budget_s: 12.0 * 3600.0,
+            targets: crate::metrics::paper_targets(),
+            stop_at_final_target: true,
+            restart_distributed: false,
+            real_eval_cap: 50_000_000,
+            seed,
+        }
+    }
+
+    /// Final (hardest) target of the ladder.
+    pub fn final_target(&self) -> f64 {
+        *self.targets.last().expect("empty target ladder")
+    }
+}
+
+/// Per-descent outcome inside a strategy run.
+#[derive(Clone, Debug)]
+pub struct DescentTrace {
+    pub k: usize,
+    /// Replica index (K-Replicated runs many descents per K).
+    pub replica: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub iters: usize,
+    pub evals: usize,
+    /// None = cut by the run budget/cutoff rather than a CMA-ES criterion.
+    pub stop: Option<StopReason>,
+    /// Per-descent first-hit times (exact on this descent's timeline).
+    pub hits: HitRecorder,
+    /// Best quality (f − f_opt) this descent reached.
+    pub best_delta: f64,
+}
+
+/// Outcome of one strategy run on one instance.
+#[derive(Clone, Debug)]
+pub struct RunTrace {
+    pub algo: &'static str,
+    /// Strategy-level first-hit times: min over descents per target.
+    pub hits: HitRecorder,
+    pub best_delta: f64,
+    /// Virtual time at which the run ended (budget or final-target hit).
+    pub end_s: f64,
+    /// The configured budget (ERT denominator for unsuccessful runs).
+    pub budget_s: f64,
+    pub total_evals: usize,
+    pub descents: Vec<DescentTrace>,
+    pub occupancy: Vec<OccupancySpan>,
+    pub comm: CommStats,
+    /// Real CPU seconds consumed producing this virtual run.
+    pub real_s: f64,
+}
+
+impl RunTrace {
+    /// Time to hit target index `i`, if hit.
+    pub fn hit(&self, i: usize) -> Option<f64> {
+        self.hits.hits[i]
+    }
+}
+
+/// A strategy's continuation logic: what to do when a descent finishes.
+pub trait Policy {
+    fn on_finish(&mut self, eng: &mut Engine<'_>, slot: usize);
+}
+
+pub(crate) struct EngineSlot {
+    pub descent: Descent,
+    pub k: usize,
+    pub replica: usize,
+    pub comm: Communicator,
+    pub t: f64,
+    pub start_t: f64,
+    pub hits: HitRecorder,
+    pub iters: usize,
+    pub done: bool,
+    pub stop: Option<StopReason>,
+}
+
+struct HeapItem {
+    t: f64,
+    slot: usize,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.slot == other.slot
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on time (BinaryHeap is a max-heap), slot index as a
+        // deterministic tie-break.
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.slot.cmp(&self.slot))
+    }
+}
+
+/// The discrete-event executor. Strategies spawn descents; the engine
+/// advances whichever has the smallest virtual time by one iteration.
+pub struct Engine<'a> {
+    pub inst: &'a Instance,
+    pub cfg: &'a VirtualConfig,
+    pub mode: Mode,
+    pub(crate) slots: Vec<EngineSlot>,
+    heap: BinaryHeap<HeapItem>,
+    pub comm: CommStats,
+    pub total_evals: usize,
+    /// No iteration *starts* at or beyond this time.
+    pub cutoff: f64,
+    spawn_counter: u64,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(inst: &'a Instance, cfg: &'a VirtualConfig, mode: Mode) -> Engine<'a> {
+        assert_eq!(inst.dim, cfg.dim, "instance/config dimension mismatch");
+        Engine {
+            inst,
+            cfg,
+            mode,
+            slots: Vec::new(),
+            heap: BinaryHeap::new(),
+            comm: CommStats::default(),
+            total_evals: 0,
+            cutoff: cfg.budget_s,
+            spawn_counter: 0,
+        }
+    }
+
+    /// Start a descent with coefficient `k` on `comm` at virtual `start_t`.
+    pub fn spawn(&mut self, k: usize, replica: usize, comm: Communicator, start_t: f64) -> usize {
+        let seed = derive_stream(self.cfg.seed, self.spawn_counter);
+        self.spawn_counter += 1;
+        let mut stop = self.cfg.ipop.stop.clone();
+        stop.target_f = Some(self.inst.fopt + self.cfg.final_target());
+        stop.max_evals = self.cfg.ipop.max_evals;
+        let ipop_for_descent = IpopConfig { stop, ..self.cfg.ipop.clone() };
+        let descent = ipop::make_descent(
+            &ipop_for_descent,
+            self.cfg.dim,
+            k,
+            seed,
+            Box::new(crate::cmaes::NativeCompute::level3()),
+            ipop_for_descent.max_evals,
+        );
+        let slot = EngineSlot {
+            descent,
+            k,
+            replica,
+            comm,
+            t: start_t,
+            start_t,
+            hits: HitRecorder::new(self.cfg.targets.clone()),
+            iters: 0,
+            done: false,
+            stop: None,
+        };
+        let id = self.slots.len();
+        self.slots.push(slot);
+        self.heap.push(HeapItem { t: start_t, slot: id });
+        id
+    }
+
+    pub(crate) fn slot(&self, id: usize) -> &EngineSlot {
+        &self.slots[id]
+    }
+
+    /// Final virtual time and stop reason of a slot (None = budget cut).
+    pub fn slot_end(&self, id: usize) -> (f64, Option<StopReason>) {
+        let s = &self.slots[id];
+        (s.t, s.stop)
+    }
+
+    fn finalize(&mut self, id: usize, stop: Option<StopReason>) {
+        let s = &mut self.slots[id];
+        s.done = true;
+        s.stop = stop;
+    }
+
+    /// Drive the event loop until every descent is done.
+    pub fn run(&mut self, policy: &mut dyn Policy) {
+        let inst = self.inst;
+        while let Some(HeapItem { t, slot }) = self.heap.pop() {
+            if self.slots[slot].done {
+                continue;
+            }
+            if t >= self.cutoff || self.total_evals >= self.cfg.real_eval_cap {
+                self.slots[slot].t = self.slots[slot].t.min(self.cutoff);
+                self.finalize(slot, None);
+                policy.on_finish(self, slot);
+                continue;
+            }
+
+            // One real CMA-ES iteration.
+            let lambda = self.slots[slot].descent.params.lambda;
+            let report = {
+                let s = &mut self.slots[slot];
+                let mut eval = FnEvaluator(|x: &[f64]| inst.eval(x));
+                s.descent.run_iteration(&mut eval)
+            };
+            self.total_evals += lambda;
+
+            // Charge virtual time.
+            let cost = match self.mode {
+                Mode::Sequential => {
+                    self.cfg.cost.sequential_iteration(lambda, self.cfg.dim, &report.timings)
+                }
+                Mode::Parallel => {
+                    let c = self.cfg.cost.parallel_iteration(
+                        lambda,
+                        self.cfg.dim,
+                        self.slots[slot].comm.cores,
+                        &report.timings,
+                    );
+                    self.comm.absorb(&c);
+                    c
+                }
+            };
+            let s = &mut self.slots[slot];
+            s.t += cost.total_s;
+            s.iters += 1;
+            s.hits.observe(report.best_so_far - inst.fopt, s.t);
+
+            if self.cfg.stop_at_final_target && s.hits.all_hit() {
+                let hit_t = s.hits.hits.last().unwrap().unwrap();
+                if hit_t < self.cutoff {
+                    self.cutoff = hit_t;
+                }
+            }
+
+            if let Some(r) = report.stop {
+                self.finalize(slot, Some(r));
+                policy.on_finish(self, slot);
+            } else {
+                let t_next = self.slots[slot].t;
+                self.heap.push(HeapItem { t: t_next, slot });
+            }
+        }
+    }
+
+    /// Assemble the run trace after [`run`] returned.
+    pub fn into_trace(self, algo: &'static str, real_t0: Instant) -> RunTrace {
+        let cfg = self.cfg;
+        let end_s = self
+            .slots
+            .iter()
+            .map(|s| s.t)
+            .fold(0.0f64, f64::max)
+            .min(self.cutoff.max(0.0));
+
+        // Strategy-level hits: min over descents, but only hits that
+        // happened before the cutoff are real.
+        let mut hits = HitRecorder::new(cfg.targets.clone());
+        for (i, _) in cfg.targets.iter().enumerate() {
+            let best = self
+                .slots
+                .iter()
+                .filter_map(|s| s.hits.hits[i])
+                .fold(f64::INFINITY, f64::min);
+            if best.is_finite() {
+                hits.hits[i] = Some(best);
+            }
+        }
+        // Recompute `next` coherently (first unhit index).
+        let hit_count = hits.hits.iter().take_while(|h| h.is_some()).count();
+        let mut fixed = HitRecorder::new(cfg.targets.clone());
+        for i in 0..hit_count {
+            fixed.observe(cfg.targets[i], hits.hits[i].unwrap());
+        }
+        for i in 0..cfg.targets.len() {
+            fixed.hits[i] = hits.hits[i];
+        }
+
+        let best_delta = self
+            .slots
+            .iter()
+            .map(|s| s.descent.best_f - self.inst.fopt)
+            .fold(f64::INFINITY, f64::min);
+
+        let occupancy: Vec<OccupancySpan> = self
+            .slots
+            .iter()
+            .map(|s| OccupancySpan { start_s: s.start_t, end_s: s.t, cores: s.comm.cores, k: s.k })
+            .collect();
+
+        let descents = self
+            .slots
+            .into_iter()
+            .map(|s| DescentTrace {
+                k: s.k,
+                replica: s.replica,
+                start_s: s.start_t,
+                end_s: s.t,
+                iters: s.iters,
+                evals: s.descent.evals,
+                stop: s.stop,
+                hits: s.hits,
+                best_delta: s.descent.best_f - self.inst.fopt,
+            })
+            .collect();
+
+        RunTrace {
+            algo,
+            hits: fixed,
+            best_delta,
+            end_s,
+            budget_s: cfg.budget_s,
+            total_evals: self.total_evals,
+            descents,
+            occupancy,
+            comm: self.comm,
+            real_s: real_t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// A policy that never continues anything (single-phase strategies).
+pub struct NoContinuation;
+
+impl Policy for NoContinuation {
+    fn on_finish(&mut self, _eng: &mut Engine<'_>, _slot: usize) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+
+    fn cfg(seed: u64) -> VirtualConfig {
+        let mut ipop = IpopConfig::bbob(6, 4);
+        ipop.max_evals = 50_000;
+        VirtualConfig {
+            ipop,
+            dim: 4,
+            cost: CostModel::fugaku_like(6, 0.0),
+            budget_s: 1e9,
+            targets: crate::metrics::paper_targets(),
+            stop_at_final_target: true,
+            restart_distributed: false,
+            real_eval_cap: 1_000_000,
+            seed,
+        }
+    }
+
+    #[test]
+    fn single_descent_engine_run() {
+        let inst = Instance::new(1, 4, 1);
+        let c = cfg(3);
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel);
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let tr = eng.into_trace("test", Instant::now());
+        assert!(tr.hits.all_hit(), "best={}", tr.best_delta);
+        assert_eq!(tr.descents.len(), 1);
+        assert!(tr.descents[0].evals > 0);
+        assert!(tr.end_s > 0.0);
+    }
+
+    #[test]
+    fn cutoff_stops_processing() {
+        let inst = Instance::new(3, 4, 1); // multimodal: won't solve fast
+        let mut c = cfg(5);
+        c.budget_s = 1e-4; // absurdly small budget
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel);
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let tr = eng.into_trace("test", Instant::now());
+        assert!(tr.descents[0].stop.is_none() || tr.descents[0].iters < 10_000);
+        assert!(tr.end_s <= 1e-4 + 1.0);
+    }
+
+    #[test]
+    fn heap_orders_by_time() {
+        let a = HeapItem { t: 1.0, slot: 0 };
+        let b = HeapItem { t: 2.0, slot: 1 };
+        assert!(a > b); // min-heap: smaller time = greater priority
+    }
+}

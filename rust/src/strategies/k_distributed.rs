@@ -1,0 +1,133 @@
+//! The K-Distributed strategy (paper §3.2.3, Fig. 4).
+//!
+//! All `log₂(K_max) + 1` population sizes start concurrently at t = 0,
+//! each K-descent on its own sub-communicator of `K·λ_start` cores
+//! (`(2·K_max − 1)·λ_start` cores in total). Optionally, a descent that
+//! stops is restarted with the same K (the paper's §5 recommendation).
+
+use std::time::Instant;
+
+use crate::bbob::Instance;
+use crate::cluster::Communicator;
+
+use super::engine::{Engine, Mode, Policy, RunTrace, VirtualConfig};
+
+struct RestartSameK {
+    enabled: bool,
+    replicas: Vec<usize>, // next replica index per slot's K (indexed by log2 K)
+}
+
+impl Policy for RestartSameK {
+    fn on_finish(&mut self, eng: &mut Engine<'_>, slot: usize) {
+        if !self.enabled {
+            return;
+        }
+        let s = eng.slot(slot);
+        // Only restart descents that stopped by a CMA-ES criterion (not
+        // budget cuts or the final target).
+        let restartable = match s.stop {
+            Some(r) => r.is_restartable(),
+            None => false,
+        };
+        if !restartable {
+            return;
+        }
+        let k = s.k;
+        let comm = s.comm;
+        let end_t = s.t;
+        if end_t < eng.cutoff {
+            let idx = k.trailing_zeros() as usize;
+            self.replicas[idx] += 1;
+            let replica = self.replicas[idx];
+            eng.spawn(k, replica, comm, end_t);
+        }
+    }
+}
+
+/// Run K-Distributed on `(2·K_max − 1)·λ_start` virtual cores.
+pub fn run_k_distributed(inst: &Instance, cfg: &VirtualConfig) -> RunTrace {
+    let t0 = Instant::now();
+    let ladder = cfg.ipop.ladder();
+    let total_cores: usize = ladder.iter().map(|k| k * cfg.ipop.lambda_start).sum();
+    let mut rest = Communicator::world(total_cores);
+
+    let mut eng = Engine::new(inst, cfg, Mode::Parallel);
+    let mut policy = RestartSameK {
+        enabled: cfg.restart_distributed,
+        replicas: vec![0; 64],
+    };
+    for &k in &ladder {
+        let (comm, remaining) = rest.take(k * cfg.ipop.lambda_start);
+        rest = remaining;
+        eng.spawn(k, 0, comm, 0.0);
+    }
+    eng.run(&mut policy);
+    eng.into_trace(super::Algo::KDistributed.name(), t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::ipop::IpopConfig;
+
+    fn cfg(k_max: usize, restart: bool) -> VirtualConfig {
+        let mut ipop = IpopConfig::bbob(6, k_max);
+        ipop.max_evals = 15_000;
+        VirtualConfig {
+            ipop,
+            dim: 4,
+            cost: CostModel::fugaku_like(6, 0.0),
+            budget_s: 1e9,
+            targets: crate::metrics::paper_targets(),
+            stop_at_final_target: false,
+            restart_distributed: restart,
+            real_eval_cap: 2_000_000,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn all_population_sizes_start_at_zero() {
+        let inst = Instance::new(3, 4, 1);
+        let tr = run_k_distributed(&inst, &cfg(8, false));
+        let ks: Vec<usize> = tr.descents.iter().map(|d| d.k).collect();
+        assert_eq!(ks, vec![1, 2, 4, 8]);
+        for d in &tr.descents {
+            assert_eq!(d.start_s, 0.0, "K={} started late", d.k);
+        }
+        // Disjoint communicators: cores sum to (2·K_max − 1)·λ_start.
+        let total: usize = tr.occupancy.iter().map(|o| o.cores).collect::<Vec<_>>().iter().sum();
+        assert_eq!(total, (2 * 8 - 1) * 6);
+    }
+
+    #[test]
+    fn restart_spawns_same_k() {
+        let inst = Instance::new(3, 4, 3); // multimodal: descents stop
+        let mut c = cfg(4, true);
+        c.budget_s = 1e9;
+        c.real_eval_cap = 400_000;
+        let tr = run_k_distributed(&inst, &c);
+        // With restarts enabled there must be more descents than ladder
+        // steps, and replicas of at least one K.
+        assert!(tr.descents.len() > 3, "got {}", tr.descents.len());
+        let max_replica = tr.descents.iter().map(|d| d.replica).max().unwrap();
+        assert!(max_replica >= 1);
+        // A restarted descent starts when its predecessor ended.
+        for d in tr.descents.iter().filter(|d| d.replica > 0) {
+            let pred = tr
+                .descents
+                .iter()
+                .find(|p| p.k == d.k && p.replica + 1 == d.replica && p.end_s <= d.start_s + 1e-9);
+            assert!(pred.is_some());
+        }
+    }
+
+    #[test]
+    fn no_restart_without_flag() {
+        let inst = Instance::new(3, 4, 3);
+        let tr = run_k_distributed(&inst, &cfg(4, false));
+        assert_eq!(tr.descents.len(), 3); // K = 1, 2, 4
+        assert!(tr.descents.iter().all(|d| d.replica == 0));
+    }
+}

@@ -1,0 +1,133 @@
+//! The paper's large-scale parallel deployments of IPOP-CMA-ES (§3.2):
+//! the sequential baseline, **K-Replicated** (Algorithm 3) and
+//! **K-Distributed** (§3.2.3), executed over the virtual cluster
+//! ([`crate::cluster`]).
+//!
+//! Every strategy runs the *real* optimizer (every function evaluation is
+//! computed); only the clock is virtual. Descents never interact, so each
+//! descent's timeline is exact, and the strategy-level first-hit time of
+//! a target is the minimum over its descents' (exact) first-hit times.
+//! A discrete-event loop advances the descent with the smallest current
+//! virtual time one full iteration at a time; a cutoff (time budget, or
+//! the earliest final-target hit when early stopping is enabled) bounds
+//! the run.
+
+pub mod engine;
+pub mod k_distributed;
+pub mod k_replicated;
+pub mod sequential;
+
+pub use engine::{DescentTrace, Engine, Mode, NoContinuation, Policy, RunTrace, VirtualConfig};
+pub use k_distributed::run_k_distributed;
+pub use k_replicated::run_k_replicated;
+pub use sequential::run_sequential;
+
+/// Which strategy — for labelling reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Sequential,
+    KReplicated,
+    KDistributed,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 3] = [Algo::Sequential, Algo::KReplicated, Algo::KDistributed];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Sequential => "sequential-ipop",
+            Algo::KReplicated => "k-replicated",
+            Algo::KDistributed => "k-distributed",
+        }
+    }
+
+    /// Run this strategy on one BBOB instance.
+    pub fn run(self, inst: &crate::bbob::Instance, cfg: &VirtualConfig) -> RunTrace {
+        match self {
+            Algo::Sequential => run_sequential(inst, cfg),
+            Algo::KReplicated => run_k_replicated(inst, cfg),
+            Algo::KDistributed => run_k_distributed(inst, cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bbob::Instance;
+    use crate::cluster::CostModel;
+    use crate::ipop::IpopConfig;
+
+    fn small_cfg(k_max: usize, extra_cost: f64, seed: u64) -> VirtualConfig {
+        let mut ipop = IpopConfig::bbob(6, k_max);
+        ipop.max_evals = 60_000; // per descent cap (real-compute guard)
+        VirtualConfig {
+            ipop,
+            dim: 5,
+            cost: CostModel::fugaku_like(6, extra_cost),
+            budget_s: 1e6,
+            targets: crate::metrics::paper_targets(),
+            stop_at_final_target: true,
+            restart_distributed: false,
+            real_eval_cap: 2_000_000,
+            seed,
+        }
+    }
+
+    #[test]
+    fn all_strategies_solve_sphere() {
+        let inst = Instance::new(1, 5, 1);
+        for algo in Algo::ALL {
+            let tr = algo.run(&inst, &small_cfg(8, 0.0, 42));
+            assert!(
+                tr.hits.all_hit(),
+                "{} failed: best delta {}",
+                algo.name(),
+                tr.best_delta
+            );
+            // Hit times must be monotone over the target ladder.
+            let times: Vec<f64> = tr.hits.hits.iter().map(|h| h.unwrap()).collect();
+            for w in times.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_strategies_hit_final_target_faster_with_eval_cost() {
+        // With a 10 ms additional cost the sequential baseline pays
+        // λ·cost per iteration; the parallel strategies pay ~cost.
+        let inst = Instance::new(1, 5, 2);
+        let seq = Algo::Sequential.run(&inst, &small_cfg(8, 1e-2, 7));
+        let dist = Algo::KDistributed.run(&inst, &small_cfg(8, 1e-2, 7));
+        let t_seq = seq.hits.hits.last().unwrap().unwrap();
+        let t_dist = dist.hits.hits.last().unwrap().unwrap();
+        assert!(
+            t_dist < t_seq / 3.0,
+            "expected clear parallel speedup: seq={t_seq} dist={t_dist}"
+        );
+    }
+
+    #[test]
+    fn runs_are_deterministic_with_model_costs() {
+        let inst = Instance::new(8, 5, 1);
+        let mut cfg = small_cfg(4, 0.0, 9);
+        cfg.real_eval_cap = 300_000;
+        cfg.cost = crate::cluster::CostModel::deterministic(
+            6,
+            0.0,
+            crate::cluster::DetCost::default(),
+        );
+        let a = Algo::KDistributed.run(&inst, &cfg);
+        let b = Algo::KDistributed.run(&inst, &cfg);
+        assert_eq!(a.total_evals, b.total_evals);
+        assert_eq!(a.best_delta, b.best_delta);
+        assert_eq!(a.descents.len(), b.descents.len());
+        for (x, y) in a.descents.iter().zip(&b.descents) {
+            assert_eq!(x.evals, y.evals);
+            assert_eq!(x.k, y.k);
+            assert_eq!(x.end_s, y.end_s);
+            assert_eq!(x.hits.hits, y.hits.hits);
+        }
+    }
+}

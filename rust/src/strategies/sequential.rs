@@ -1,0 +1,103 @@
+//! The sequential IPOP-CMA-ES baseline (Algorithm 2) on a single core —
+//! the reference point for every speedup in the paper (Table 2).
+
+use std::time::Instant;
+
+use crate::bbob::Instance;
+use crate::cluster::Communicator;
+
+use super::engine::{Engine, Mode, Policy, RunTrace, VirtualConfig};
+
+struct Chain {
+    ladder: Vec<usize>,
+    next: usize,
+}
+
+impl Policy for Chain {
+    fn on_finish(&mut self, eng: &mut Engine<'_>, slot: usize) {
+        let s = eng.slot(slot);
+        let end_t = s.t;
+        // Budget-cut or target: the ladder stops.
+        if s.stop.is_none()
+            || s.stop == Some(crate::cmaes::StopReason::TargetReached)
+            || end_t >= eng.cutoff
+        {
+            return;
+        }
+        if self.next < self.ladder.len() {
+            let k = self.ladder[self.next];
+            self.next += 1;
+            // Sequential: one core regardless of K.
+            eng.spawn(k, 0, Communicator::world(1), end_t);
+        }
+    }
+}
+
+/// Run the sequential baseline: descents K = 1, 2, 4, … one after the
+/// other, λ serial evaluations per iteration, until the ladder, the
+/// virtual budget, or the final target ends the run.
+pub fn run_sequential(inst: &Instance, cfg: &VirtualConfig) -> RunTrace {
+    let t0 = Instant::now();
+    let ladder = cfg.ipop.ladder();
+    let mut eng = Engine::new(inst, cfg, Mode::Sequential);
+    let mut chain = Chain { ladder: ladder.clone(), next: 1 };
+    eng.spawn(ladder[0], 0, Communicator::world(1), 0.0);
+    eng.run(&mut chain);
+    eng.into_trace(super::Algo::Sequential.name(), t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::ipop::IpopConfig;
+
+    #[test]
+    fn ladder_progresses_on_hard_function() {
+        let inst = Instance::new(3, 5, 1); // separable Rastrigin: restarts expected
+        let mut ipop = IpopConfig::bbob(6, 8);
+        ipop.max_evals = 20_000;
+        let cfg = VirtualConfig {
+            ipop,
+            dim: 5,
+            cost: CostModel::fugaku_like(6, 0.0),
+            budget_s: 1e9,
+            targets: crate::metrics::paper_targets(),
+            stop_at_final_target: true,
+            restart_distributed: false,
+            real_eval_cap: 500_000,
+            seed: 13,
+        };
+        let tr = run_sequential(&inst, &cfg);
+        assert!(tr.descents.len() >= 2, "expected restarts, got {}", tr.descents.len());
+        // K doubles along the chain.
+        for w in tr.descents.windows(2) {
+            assert_eq!(w[1].k, 2 * w[0].k);
+        }
+        // Descents are truly sequential in virtual time.
+        for w in tr.descents.windows(2) {
+            assert!(w[1].start_s >= w[0].end_s - 1e-12);
+        }
+    }
+
+    #[test]
+    fn stops_at_target_without_exhausting_ladder() {
+        let inst = Instance::new(1, 5, 1); // sphere: first descent suffices
+        let mut ipop = IpopConfig::bbob(6, 64);
+        ipop.max_evals = 100_000;
+        let cfg = VirtualConfig {
+            ipop,
+            dim: 5,
+            cost: CostModel::fugaku_like(6, 0.0),
+            budget_s: 1e9,
+            targets: crate::metrics::paper_targets(),
+            stop_at_final_target: true,
+            restart_distributed: false,
+            real_eval_cap: 2_000_000,
+            seed: 2,
+        };
+        let tr = run_sequential(&inst, &cfg);
+        assert!(tr.hits.all_hit());
+        assert_eq!(tr.descents.len(), 1);
+    }
+}

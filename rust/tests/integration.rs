@@ -1,0 +1,202 @@
+//! Cross-module integration tests: the public API exercised end to end —
+//! BBOB instances through CMA-ES/IPOP, the threaded evaluator, the
+//! virtual-cluster strategies, metrics, and (when artifacts are built)
+//! the AOT XLA/Pallas compute tier.
+
+use std::sync::Arc;
+
+use ipopcma::bbob::Instance;
+use ipopcma::cluster::{CostModel, DetCost};
+use ipopcma::cmaes::{CmaParams, Descent, FnEvaluator, NativeCompute, StopConfig, StopReason};
+use ipopcma::evaluator::ThreadPoolEvaluator;
+use ipopcma::harness::Scale;
+use ipopcma::ipop::{self, IpopConfig};
+use ipopcma::metrics::{ecdf, ert, paper_targets};
+use ipopcma::strategies::{Algo, VirtualConfig};
+
+/// The classic pipeline: IPOP on a BBOB function, sequential closure.
+#[test]
+fn ipop_solves_bbob_ellipsoid() {
+    let inst = Instance::new(2, 8, 1);
+    let mut cfg = IpopConfig::bbob(8, 8);
+    cfg.stop.target_f = Some(inst.fopt + 1e-8);
+    cfg.max_evals = 300_000;
+    let res = ipop::run(&cfg, 8, |x| inst.eval(x), 3);
+    assert!(res.best_f - inst.fopt <= 1e-8, "delta={}", res.best_f - inst.fopt);
+}
+
+/// IPOP through the real scatter/gather pool.
+#[test]
+fn ipop_through_thread_pool() {
+    let inst = Arc::new(Instance::new(10, 6, 2));
+    let mut cfg = IpopConfig::bbob(8, 4);
+    cfg.stop.target_f = Some(inst.fopt + 1e-7);
+    cfg.max_evals = 200_000;
+    let shared = Arc::clone(&inst);
+    let res = ipop::run_with(
+        &cfg,
+        6,
+        move |_k| {
+            let inst = Arc::clone(&shared);
+            ThreadPoolEvaluator::new(Arc::new(move |x: &[f64]| inst.eval(x)), 3)
+        },
+        9,
+    );
+    assert!(res.best_f - inst.fopt <= 1e-7);
+}
+
+/// Pool and serial evaluation produce identical trajectories (the pool
+/// only changes *where* evaluations run, never their values).
+#[test]
+fn pool_and_serial_trajectories_match() {
+    let inst = Arc::new(Instance::new(8, 5, 4));
+    let run = |threads: Option<usize>| -> f64 {
+        let mut d = Descent::new(
+            CmaParams::new(5, 12),
+            vec![1.0; 5],
+            1.0,
+            Box::new(NativeCompute::level3()),
+            13,
+            StopConfig { max_iters: 30, ..Default::default() },
+        );
+        match threads {
+            None => {
+                let i2 = Arc::clone(&inst);
+                let mut e = FnEvaluator(move |x: &[f64]| i2.eval(x));
+                for _ in 0..30 {
+                    if d.run_iteration(&mut e).stop.is_some() {
+                        break;
+                    }
+                }
+            }
+            Some(t) => {
+                let i2 = Arc::clone(&inst);
+                let mut e = ThreadPoolEvaluator::new(Arc::new(move |x: &[f64]| i2.eval(x)), t);
+                for _ in 0..30 {
+                    if d.run_iteration(&mut e).stop.is_some() {
+                        break;
+                    }
+                }
+            }
+        }
+        d.best_f
+    };
+    assert_eq!(run(None), run(Some(4)));
+}
+
+/// The three strategies over the virtual cluster agree on *what* they
+/// optimize: the K-Distributed ladder re-runs the sequential descents, so
+/// with matched seeds the same descents appear with identical eval
+/// counts.
+#[test]
+fn matched_descents_between_sequential_and_distributed() {
+    let inst = Instance::new(3, 5, 1);
+    let scale = Scale::for_dim(5);
+    let mut cfg = scale.config(5, 0.0, 4, Algo::Sequential);
+    cfg.stop_at_final_target = false;
+    cfg.real_eval_cap = 400_000;
+    let seq = Algo::Sequential.run(&inst, &cfg);
+    let mut cfg_d = scale.config(5, 0.0, 4, Algo::KDistributed);
+    cfg_d.stop_at_final_target = false;
+    cfg_d.real_eval_cap = 400_000;
+    let dist = Algo::KDistributed.run(&inst, &cfg_d);
+    // Same seeds, same spawn order ⇒ descent k has identical trajectory.
+    for (a, b) in seq.descents.iter().zip(&dist.descents) {
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.evals, b.evals, "K={} trajectories must match", a.k);
+    }
+}
+
+/// Metrics glue: ERT + ECDF over real strategy runs.
+#[test]
+fn metrics_over_real_runs() {
+    let inst = Instance::new(1, 5, 1);
+    let scale = Scale::for_dim(5);
+    let mut hits = Vec::new();
+    let mut budgets = Vec::new();
+    let mut samples = Vec::new();
+    for seed in 0..2 {
+        let cfg = scale.config(5, 0.0, seed, Algo::KDistributed);
+        let tr = Algo::KDistributed.run(&inst, &cfg);
+        hits.push(*tr.hits.hits.last().unwrap());
+        budgets.push(tr.budget_s);
+        samples.extend(tr.hits.hits.iter().copied());
+    }
+    let e = ert(&hits, &budgets).expect("sphere must be solved");
+    assert!(e > 0.0 && e.is_finite());
+    let curve = ecdf(&samples);
+    assert!(!curve.is_empty());
+    assert!(curve.last().unwrap().1 <= 1.0);
+}
+
+/// Deterministic virtual runs are bit-stable across processes (model
+/// costs only).
+#[test]
+fn virtual_run_is_reproducible() {
+    let inst = Instance::new(6, 5, 1);
+    let mut ipopc = IpopConfig::bbob(6, 4);
+    ipopc.max_evals = 20_000;
+    let cfg = VirtualConfig {
+        ipop: ipopc,
+        dim: 5,
+        cost: CostModel::deterministic(6, 1e-3, DetCost::default()),
+        budget_s: 1e6,
+        targets: paper_targets(),
+        stop_at_final_target: true,
+        restart_distributed: false,
+        real_eval_cap: 200_000,
+        seed: 17,
+    };
+    let a = Algo::KReplicated.run(&inst, &cfg);
+    let b = Algo::KReplicated.run(&inst, &cfg);
+    assert_eq!(a.hits.hits, b.hits.hits);
+    assert_eq!(a.best_delta, b.best_delta);
+}
+
+/// Failure injection: an objective returning NaN/∞ must not wedge the
+/// descent — the divergence guard stops it.
+#[test]
+fn non_finite_objective_stops_cleanly() {
+    let mut d = Descent::new(
+        CmaParams::new(4, 8),
+        vec![0.0; 4],
+        1.0,
+        Box::new(NativeCompute::level3()),
+        3,
+        StopConfig { max_iters: 500, ..Default::default() },
+    );
+    let mut calls = 0usize;
+    let mut e = FnEvaluator(move |_x: &[f64]| {
+        calls += 1;
+        if calls > 40 {
+            f64::NAN
+        } else {
+            calls as f64
+        }
+    });
+    let (reason, iters) = d.run_to_stop(&mut e);
+    assert!(iters < 500, "did not stop early: {reason:?}");
+}
+
+/// XLA tier through the whole descent (skips when artifacts are absent).
+#[test]
+fn xla_tier_in_integration() {
+    let Ok(rt) = ipopcma::runtime::XlaRuntime::cpu() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = std::rc::Rc::new(rt);
+    let n = 10;
+    let lam = rt.manifest.lambdas_for(n)[0];
+    let inst = Instance::new(1, n, 1);
+    let mut d = Descent::new(
+        CmaParams::new(n, lam),
+        vec![1.0; n],
+        1.0,
+        Box::new(ipopcma::runtime::XlaCompute::for_shape(rt, n, lam).unwrap()),
+        3,
+        StopConfig { target_f: Some(inst.fopt + 1e-8), max_evals: 150_000, ..Default::default() },
+    );
+    let (reason, _) = d.run_to_stop(&mut FnEvaluator(|x: &[f64]| inst.eval(x)));
+    assert_eq!(reason, StopReason::TargetReached);
+}

@@ -1,0 +1,312 @@
+//! Property-style tests over the library's invariants (hand-rolled
+//! generators — proptest is not in the offline vendor set): algebraic
+//! identities of the linalg tiers, invariances of CMA-ES, BBOB function
+//! properties, and metrics laws.
+
+use ipopcma::bbob::{transforms, Instance};
+use ipopcma::cluster::Communicator;
+use ipopcma::cmaes::{CmaParams, Compute, Descent, FnEvaluator, NativeCompute, StopConfig};
+use ipopcma::linalg::{gemm, jacobi_eig, syev, EigKind, GemmKind, Matrix};
+use ipopcma::metrics::{ecdf, ert, HitRecorder};
+use ipopcma::rng::{derive_stream, NormalSource, Xoshiro256pp};
+
+fn rand_matrix(rng: &mut Xoshiro256pp, r: usize, c: usize) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| rng.uniform(-2.0, 2.0))
+}
+
+/// GEMM bilinearity: gemm(αA, B) == α·gemm(A, B) for every tier.
+#[test]
+fn gemm_is_bilinear() {
+    let mut rng = Xoshiro256pp::new(1);
+    for trial in 0..20 {
+        let (m, k, n) = (
+            1 + (rng.below(30) as usize),
+            1 + (rng.below(30) as usize),
+            1 + (rng.below(30) as usize),
+        );
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        let alpha = rng.uniform(-3.0, 3.0);
+        for kind in GemmKind::ALL {
+            let mut c1 = Matrix::zeros(m, n);
+            gemm(kind, alpha, &a, &b, 0.0, &mut c1);
+            let mut c2 = Matrix::zeros(m, n);
+            gemm(kind, 1.0, &a, &b, 0.0, &mut c2);
+            c2.scale(alpha);
+            assert!(c1.max_abs_diff(&c2) < 1e-10, "trial {trial} {kind:?}");
+        }
+    }
+}
+
+/// (AB)ᵀ = BᵀAᵀ across tiers.
+#[test]
+fn gemm_transpose_identity() {
+    let mut rng = Xoshiro256pp::new(2);
+    for _ in 0..10 {
+        let (m, k, n) = (
+            1 + (rng.below(25) as usize),
+            1 + (rng.below(25) as usize),
+            1 + (rng.below(25) as usize),
+        );
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        let mut ab = Matrix::zeros(m, n);
+        gemm(GemmKind::Level3, 1.0, &a, &b, 0.0, &mut ab);
+        let mut btat = Matrix::zeros(n, m);
+        gemm(GemmKind::Level3, 1.0, &b.transpose(), &a.transpose(), 0.0, &mut btat);
+        assert!(ab.transpose().max_abs_diff(&btat) < 1e-10);
+    }
+}
+
+/// Eigendecompositions preserve trace and Frobenius norm (both solvers).
+#[test]
+fn eig_preserves_trace_and_norm() {
+    let mut rng = Xoshiro256pp::new(3);
+    for _ in 0..10 {
+        let n = 2 + (rng.below(20) as usize);
+        let mut a = rand_matrix(&mut rng, n, n);
+        a.symmetrize();
+        let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        let norm2: f64 = a.as_slice().iter().map(|v| v * v).sum();
+        for vals in [syev(&a).values, jacobi_eig(&a).values] {
+            let t: f64 = vals.iter().sum();
+            let nn: f64 = vals.iter().map(|v| v * v).sum();
+            assert!((t - trace).abs() < 1e-9 * (1.0 + trace.abs()));
+            assert!((nn - norm2).abs() < 1e-8 * (1.0 + norm2));
+        }
+    }
+}
+
+/// CMA-ES is translation invariant: optimizing f(x) from m0 and
+/// f(x − c) from m0 + c yield identical trajectories (same seed).
+#[test]
+fn cmaes_translation_invariance() {
+    let shift = [3.0, -2.0, 0.5, 1.0, -4.0];
+    let run = |shifted: bool| -> (f64, Vec<f64>) {
+        let mean = if shifted {
+            shift.iter().map(|s| 1.0 + s).collect()
+        } else {
+            vec![1.0; 5]
+        };
+        let mut d = Descent::new(
+            CmaParams::new(5, 10),
+            mean,
+            1.0,
+            Box::new(NativeCompute::level3()),
+            99,
+            StopConfig { max_iters: 50, ..Default::default() },
+        );
+        let mut e = FnEvaluator(|x: &[f64]| {
+            if shifted {
+                x.iter().zip(&shift).map(|(v, s)| (v - s) * (v - s)).sum()
+            } else {
+                x.iter().map(|v| v * v).sum()
+            }
+        });
+        for _ in 0..50 {
+            if d.run_iteration(&mut e).stop.is_some() {
+                break;
+            }
+        }
+        (d.best_f, d.state.mean.clone())
+    };
+    let (f0, m0) = run(false);
+    let (f1, m1) = run(true);
+    assert!((f0 - f1).abs() < 1e-12, "{f0} vs {f1}");
+    for ((a, b), s) in m0.iter().zip(&m1).zip(&shift) {
+        assert!((a + s - b).abs() < 1e-9);
+    }
+}
+
+/// CMA-ES is invariant under order-preserving fitness transforms
+/// (rank-based selection): optimizing f and exp(f) gives the same search.
+#[test]
+fn cmaes_monotone_transform_invariance() {
+    let run = |transformed: bool| -> Vec<f64> {
+        let mut d = Descent::new(
+            CmaParams::new(4, 8),
+            vec![2.0; 4],
+            1.0,
+            Box::new(NativeCompute::level3()),
+            7,
+            StopConfig { max_iters: 40, ..Default::default() },
+        );
+        let mut e = FnEvaluator(move |x: &[f64]| {
+            let f: f64 = x.iter().map(|v| v * v).sum();
+            if transformed {
+                f.sqrt().atan() // strictly increasing transform
+            } else {
+                f
+            }
+        });
+        for _ in 0..40 {
+            if d.run_iteration(&mut e).stop.is_some() {
+                break;
+            }
+        }
+        d.state.mean.clone()
+    };
+    let a = run(false);
+    let b = run(true);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+    }
+}
+
+/// BBOB: rotations preserve the optimum and the value distribution scale.
+#[test]
+fn bbob_instances_have_positive_deltas_everywhere() {
+    let mut rng = Xoshiro256pp::new(5);
+    for fid in 1..=24 {
+        for iid in [1u64, 7] {
+            let inst = Instance::new(fid, 6, iid);
+            for _ in 0..50 {
+                let x: Vec<f64> = (0..6).map(|_| rng.uniform(-6.0, 6.0)).collect();
+                let d = inst.eval_delta(&x);
+                assert!(d >= -1e-9 && d.is_finite(), "f{fid}/{iid}: {d}");
+            }
+        }
+    }
+}
+
+/// BBOB rotation matrices from any seed stay orthogonal (stress many
+/// draws — the Gram–Schmidt must never silently degrade).
+#[test]
+fn rotations_orthogonal_across_seeds() {
+    for seed in 0..30 {
+        let mut rng = Xoshiro256pp::new(seed);
+        let n = 3 + (seed % 20) as usize;
+        let r = transforms::random_rotation(&mut rng, n);
+        let mut rtr = Matrix::zeros(n, n);
+        gemm(GemmKind::Level3, 1.0, &r.transpose(), &r, 0.0, &mut rtr);
+        assert!(rtr.max_abs_diff(&Matrix::eye(n)) < 1e-9, "seed {seed} n {n}");
+    }
+}
+
+/// ERT law: scaling every time by c scales ERT by c.
+#[test]
+fn ert_scale_equivariance() {
+    let mut rng = Xoshiro256pp::new(8);
+    for _ in 0..50 {
+        let k = 2 + rng.below(6) as usize;
+        let hits: Vec<Option<f64>> = (0..k)
+            .map(|_| if rng.next_f64() < 0.7 { Some(rng.uniform(1.0, 100.0)) } else { None })
+            .collect();
+        let budgets: Vec<f64> = (0..k).map(|_| rng.uniform(100.0, 200.0)).collect();
+        let c = rng.uniform(0.1, 10.0);
+        let scaled_hits: Vec<Option<f64>> = hits.iter().map(|h| h.map(|v| c * v)).collect();
+        let scaled_budgets: Vec<f64> = budgets.iter().map(|b| c * b).collect();
+        match (ert(&hits, &budgets), ert(&scaled_hits, &scaled_budgets)) {
+            (None, None) => {}
+            (Some(a), Some(b)) => assert!((c * a - b).abs() < 1e-9 * b.abs()),
+            other => panic!("inconsistent: {other:?}"),
+        }
+    }
+}
+
+/// ECDF is a monotone step function ending at the success fraction.
+#[test]
+fn ecdf_monotone_and_bounded() {
+    let mut rng = Xoshiro256pp::new(9);
+    for _ in 0..30 {
+        let k = 1 + rng.below(50) as usize;
+        let samples: Vec<Option<f64>> = (0..k)
+            .map(|_| if rng.next_f64() < 0.6 { Some(rng.uniform(0.0, 10.0)) } else { None })
+            .collect();
+        let curve = ecdf(&samples);
+        let succ = samples.iter().flatten().count() as f64 / k as f64;
+        let mut prev = 0.0;
+        for &(t, f) in &curve {
+            assert!(f >= prev && f <= 1.0 + 1e-12);
+            assert!(t.is_finite());
+            prev = f;
+        }
+        if succ > 0.0 {
+            assert!((curve.last().unwrap().1 - succ).abs() < 1e-12);
+        } else {
+            assert!(curve.is_empty());
+        }
+    }
+}
+
+/// HitRecorder: hits are monotone in time and consistent with targets.
+#[test]
+fn hit_recorder_monotone_property() {
+    let mut rng = Xoshiro256pp::new(10);
+    for _ in 0..30 {
+        let mut r = HitRecorder::new(ipopcma::metrics::paper_targets());
+        let mut delta = 1e4;
+        let mut t = 0.0;
+        while delta > 1e-9 {
+            delta *= rng.uniform(0.2, 0.95);
+            t += rng.uniform(0.1, 2.0);
+            r.observe(delta, t);
+        }
+        let times: Vec<f64> = r.hits.iter().flatten().copied().collect();
+        for w in times.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(r.all_hit());
+    }
+}
+
+/// Communicator halving always tiles the world exactly (any power of 2).
+#[test]
+fn communicator_tiling_property() {
+    for exp in 1..=7 {
+        let world = Communicator::world(12 << exp);
+        let mut leaves = vec![world];
+        for _ in 0..exp {
+            leaves = leaves
+                .into_iter()
+                .flat_map(|c| {
+                    let (a, b) = c.split_half();
+                    [a, b]
+                })
+                .collect();
+        }
+        let mut covered = vec![false; world.cores];
+        for l in &leaves {
+            for c in l.offset..l.offset + l.cores {
+                assert!(!covered[c], "overlap at {c}");
+                covered[c] = true;
+            }
+        }
+        assert!(covered.iter().all(|&b| b));
+    }
+}
+
+/// Derived RNG streams are pairwise distinct across a large block.
+#[test]
+fn derived_streams_distinct() {
+    let mut seen = std::collections::HashSet::new();
+    for master in [0u64, 42, u64::MAX] {
+        for rank in 0..2000 {
+            assert!(seen.insert(derive_stream(master, rank)), "collision m={master} r={rank}");
+        }
+    }
+}
+
+/// Sampling through any tier preserves N(0, C) marginals: the empirical
+/// variance along each principal axis matches its eigenvalue.
+#[test]
+fn sampling_matches_spectrum() {
+    let mut g = NormalSource::new(11);
+    let n = 5;
+    let mut st = ipopcma::cmaes::CmaState::new(vec![0.0; n], 1.0);
+    // C = diag(1..5) rotated is harder; keep diagonal for an exact check.
+    for i in 0..n {
+        st.c[(i, i)] = (i + 1) as f64;
+    }
+    st.refresh_eigen(EigKind::Syev);
+    let samples = 30_000;
+    let z = Matrix::from_fn(n, samples, |_, _| g.sample());
+    let mut y = Matrix::zeros(n, samples);
+    NativeCompute::level3().sample_y(&st, &z, &mut y);
+    for i in 0..n {
+        let row = y.row(i);
+        let var: f64 = row.iter().map(|v| v * v).sum::<f64>() / samples as f64;
+        let want = (i + 1) as f64;
+        assert!((var - want).abs() / want < 0.06, "axis {i}: {var} vs {want}");
+    }
+}
