@@ -7,6 +7,9 @@
 //!
 //!     cargo run --release --example parallel_strategies [dim] [cost_ms]
 
+use std::sync::Arc;
+
+use ipopcma::api::{Backend, Solver};
 use ipopcma::bbob::Instance;
 use ipopcma::harness::Scale;
 use ipopcma::metrics::paper_targets;
@@ -38,11 +41,18 @@ fn main() {
     let mut total_evals = 0usize;
 
     for &fid in &fids {
-        let inst = Instance::new(fid, dim, seed + 1);
+        let inst = Arc::new(Instance::new(fid, dim, seed + 1));
         let mut final_hits = Vec::new();
         for algo in Algo::ALL {
             let cfg = scale.config(dim, cost_ms * 1e-3, seed, algo);
-            let tr = algo.run(&inst, &cfg);
+            // Every deployment goes through the one facade; the harness
+            // Scale pins the paper-shaped virtual configuration.
+            let tr = Solver::on_shared(Arc::clone(&inst))
+                .strategy(algo)
+                .backend(Backend::Virtual(cfg.cost))
+                .virtual_config(cfg)
+                .run()
+                .trace;
             total_evals += tr.total_evals;
             final_hits.push((algo, tr));
         }

@@ -1,13 +1,54 @@
-//! Quickstart: minimize a custom objective with CMA-ES, then with the
-//! full IPOP-CMA-ES restart ladder.
+//! Quickstart: minimize a custom objective through the unified `Solver`
+//! facade, then peel back a layer to the raw CMA-ES descent API.
 //!
 //!     cargo run --release --example quickstart
 
+use ipopcma::api::{Backend, ClosureProblem, Solver};
 use ipopcma::cmaes::{CmaParams, Descent, FnEvaluator, NativeCompute, StopConfig};
-use ipopcma::ipop::{self, IpopConfig};
+use ipopcma::strategies::Algo;
 
 fn main() {
-    // --- 1. One CMA-ES descent on the Rosenbrock function ---------------
+    // --- 1. The facade: any objective × any strategy × any backend ------
+    // Rastrigin traps single descents; the increasing-population restarts
+    // (Algorithm 2) escape by doubling λ.
+    let rastrigin = ClosureProblem::new(6, |x: &[f64]| {
+        10.0 * x.len() as f64
+            + x.iter()
+                .map(|v| v * v - 10.0 * (std::f64::consts::TAU * v).cos())
+                .sum::<f64>()
+    })
+    .named("rastrigin-6");
+
+    let report = Solver::on(rastrigin)
+        .strategy(Algo::Sequential) // the paper's baseline (Algorithm 2)
+        .backend(Backend::Serial)   // or Threads(n) / Virtual(cost model)
+        .lambda_start(8)
+        .k_max(16)
+        .sigma0(2.0)
+        .target(1e-8)
+        .eval_budget(500_000)
+        .seed(7)
+        .run();
+
+    println!(
+        "IPOP-CMA-ES on {}: Δf = {:.3e} ({} evals, {} descents)",
+        report.problem,
+        report.best_delta(),
+        report.total_evals(),
+        report.trace.descents.len()
+    );
+    for d in &report.trace.descents {
+        println!(
+            "  K={:<3} λ={:<4} iters={:<5} Δf={:.3e} stop={}",
+            d.k,
+            d.k * report.lambda_start,
+            d.iters,
+            d.best_delta,
+            d.stop.map(|s| s.name()).unwrap_or("budget")
+        );
+    }
+
+    // --- 2. One layer down: a single CMA-ES descent -----------------------
     let rosenbrock = |x: &[f64]| -> f64 {
         x.windows(2)
             .map(|w| 100.0 * (w[0] * w[0] - w[1]).powi(2) + (w[0] - 1.0).powi(2))
@@ -25,7 +66,7 @@ fn main() {
     );
     let (reason, iters) = descent.run_to_stop(&mut FnEvaluator(rosenbrock));
     println!(
-        "CMA-ES on rosenbrock-{n}: f = {:.3e} after {iters} iterations ({} evals), stop = {}",
+        "\nCMA-ES on rosenbrock-{n}: f = {:.3e} after {iters} iterations ({} evals), stop = {}",
         descent.best_f,
         descent.evals,
         reason.name()
@@ -36,32 +77,4 @@ fn main() {
         1e3 * descent.timings.eval_s,
         descent.compute_label()
     );
-
-    // --- 2. IPOP-CMA-ES on a multimodal function ------------------------
-    // Rastrigin traps single descents; the increasing-population restarts
-    // (Algorithm 2) escape by doubling λ.
-    let rastrigin = |x: &[f64]| -> f64 {
-        10.0 * x.len() as f64
-            + x.iter()
-                .map(|v| v * v - 10.0 * (std::f64::consts::TAU * v).cos())
-                .sum::<f64>()
-    };
-
-    let mut cfg = IpopConfig::bbob(8, 16); // λ_start = 8, K up to 16
-    cfg.sigma0 = 2.0;
-    cfg.stop.target_f = Some(1e-9);
-    cfg.max_evals = 500_000;
-    let result = ipop::run(&cfg, 6, rastrigin, 7);
-
-    println!("\nIPOP-CMA-ES on rastrigin-6: f = {:.3e} ({} evals)", result.best_f, result.total_evals);
-    for d in &result.descents {
-        println!(
-            "  K={:<3} λ={:<4} iters={:<5} best={:.3e} stop={}",
-            d.k,
-            d.lambda,
-            d.iterations,
-            d.best_f,
-            d.stop.name()
-        );
-    }
 }

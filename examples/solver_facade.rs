@@ -1,0 +1,127 @@
+//! The unified facade end to end: non-BBOB problems (a user closure, a
+//! least-squares fit, a noisy Rastrigin) through all three deployment
+//! strategies and all three backends, with streaming telemetry and a
+//! JSON report — the crate's whole surface in one file.
+//!
+//!     cargo run --release --example solver_facade
+
+use std::sync::Arc;
+
+use ipopcma::api::{
+    Backend, ClosureProblem, Event, FnObserver, LeastSquares, NoisyRastrigin, Solver,
+};
+use ipopcma::cluster::{CostModel, DetCost};
+use ipopcma::report::{ascii_table, fmt_val};
+use ipopcma::strategies::Algo;
+
+fn main() {
+    // --- 1. One closure problem × three strategies × two backends -------
+    let sphere = Arc::new(
+        ClosureProblem::new(6, |x: &[f64]| x.iter().map(|v| v * v).sum()).named("sphere-6"),
+    );
+    let virtual_cluster = Backend::Virtual(CostModel::deterministic(8, 1e-3, DetCost::default()));
+    let backends = [Backend::Serial, Backend::Threads(4), virtual_cluster];
+
+    let mut rows = Vec::new();
+    for algo in Algo::ALL {
+        for backend in backends {
+            let report = Solver::on_shared(Arc::clone(&sphere))
+                .strategy(algo)
+                .backend(backend)
+                .k_max(4)
+                .target(1e-8)
+                .seed(1)
+                .run();
+            rows.push(vec![
+                report.problem.clone(),
+                algo.name().into(),
+                report.backend.clone(),
+                report.targets_hit().to_string(),
+                fmt_val(Some(report.best_delta())),
+                report.total_evals().to_string(),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        ascii_table(
+            "one problem, every strategy × backend, one API",
+            &[
+                "problem".into(),
+                "strategy".into(),
+                "backend".into(),
+                "targets hit".into(),
+                "best Δf".into(),
+                "evals".into(),
+            ],
+            &rows,
+        )
+    );
+
+    // --- 2. Non-BBOB workloads ------------------------------------------
+    for (label, report) in [
+        (
+            "least-squares quadratic fit",
+            Solver::on(LeastSquares::quadratic_demo()).target(1e-8).seed(2).run(),
+        ),
+        (
+            "least-squares exp-decay fit (non-convex)",
+            Solver::on(LeastSquares::exp_decay_demo())
+                .strategy(Algo::KDistributed)
+                .k_max(8)
+                .target(1e-6)
+                .seed(3)
+                .run(),
+        ),
+        (
+            "noisy rastrigin (1% multiplicative)",
+            Solver::on(NoisyRastrigin::new(3, 0.01, 7))
+                .strategy(Algo::KDistributed)
+                .k_max(8)
+                .seed(4)
+                .run(),
+        ),
+    ] {
+        println!(
+            "{label:<42} Δf = {:.3e}  ({} evals, {} descents)",
+            report.best_delta(),
+            report.total_evals(),
+            report.trace.descents.len()
+        );
+    }
+
+    // --- 3. Streaming telemetry + JSON export ---------------------------
+    let mut restarts = 0usize;
+    let mut hits = 0usize;
+    let report = Solver::on(
+        ClosureProblem::new(4, |x: &[f64]| {
+            10.0 * x.len() as f64
+                + x.iter()
+                    .map(|v| v * v - 10.0 * (std::f64::consts::TAU * v).cos())
+                    .sum::<f64>()
+        })
+        .named("rastrigin-4"),
+    )
+    .strategy(Algo::Sequential)
+    .k_max(16)
+    .target(1e-8)
+    .seed(5)
+    .run_observed(&mut FnObserver(|e: &Event| match e {
+        Event::DescentStart { k, lambda, .. } => {
+            restarts += 1;
+            println!("  [observer] descent K={k} starts with λ={lambda}");
+        }
+        Event::TargetHit { target, t_s, .. } => {
+            hits += 1;
+            println!("  [observer] target {target:.1e} hit at t={t_s:.3}s");
+        }
+        _ => {}
+    }));
+    println!(
+        "observer saw {restarts} descents and {hits} target hits; solved = {}",
+        report.solved()
+    );
+
+    let json = report.to_json_string();
+    println!("JSON report: {} bytes, starts {}…", json.len(), &json[..60.min(json.len())]);
+}

@@ -1,0 +1,50 @@
+//! The [`Backend`] selector: *where* objective evaluations run. The
+//! search logic (CMA-ES, the IPOP ladder, the K-Replicated /
+//! K-Distributed deployments) is identical across backends — the paper's
+//! central claim, §3.2 — only the evaluation substrate changes.
+
+use crate::cluster::CostModel;
+
+/// Execution substrate for objective evaluations.
+#[derive(Clone, Copy, Debug)]
+pub enum Backend {
+    /// In-process serial evaluation on the caller thread (the
+    /// [`crate::cmaes::FnEvaluator`] path).
+    Serial,
+    /// Real scatter/gather across `N` worker threads
+    /// ([`crate::evaluator::ThreadPoolEvaluator`]) — the production path
+    /// on multi-core hosts, mirroring §3.2.1's one-evaluation-per-core
+    /// distribution. Trajectories are bit-identical to `Serial` (the
+    /// pool changes where evaluations run, never their values).
+    Threads(usize),
+    /// The virtual cluster: evaluations run serially in-process while a
+    /// discrete-event clock charges virtual time per `CostModel` — the
+    /// substrate carrying the paper's 6144-core scaling results on a
+    /// small host (§4.2, DESIGN.md §2).
+    Virtual(CostModel),
+}
+
+impl Backend {
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Backend::Serial => "serial".to_string(),
+            Backend::Threads(n) => format!("threads({n})"),
+            Backend::Virtual(_) => "virtual-cluster".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DetCost;
+
+    #[test]
+    fn labels() {
+        assert_eq!(Backend::Serial.label(), "serial");
+        assert_eq!(Backend::Threads(8).label(), "threads(8)");
+        let v = Backend::Virtual(CostModel::deterministic(8, 0.0, DetCost::default()));
+        assert_eq!(v.label(), "virtual-cluster");
+    }
+}

@@ -1,0 +1,53 @@
+//! The unified solver facade: one builder API over problems, execution
+//! backends, evaluators, and deployment strategies.
+//!
+//! The paper's central claim is that a single optimizer — IPOP-CMA-ES —
+//! deploys unchanged across radically different execution substrates
+//! (one BLAS'd core, K-Replicated and K-Distributed on 6144 cores).
+//! This module is that claim as an API: every scenario the crate
+//! supports goes through
+//!
+//! ```
+//! use ipopcma::api::{Backend, ClosureProblem, Solver};
+//! use ipopcma::strategies::Algo;
+//!
+//! let problem = ClosureProblem::new(4, |x: &[f64]| x.iter().map(|v| v * v).sum());
+//! let report = Solver::on(problem)
+//!     .strategy(Algo::KDistributed)
+//!     .backend(Backend::Serial)
+//!     .target(1e-8)
+//!     .run();
+//! assert!(report.solved());
+//! ```
+//!
+//! # Builder knobs → paper sections
+//!
+//! | Knob | Paper concept |
+//! |------|---------------|
+//! | [`Solver::on`] / [`Problem`] | §4.1 benchmark functions, generalized to any objective with a search box and (optionally) a known optimum |
+//! | [`SolverBuilder::strategy`] | §2.2 sequential IPOP (Algorithm 2), §3.2.2 K-Replicated (Algorithm 3), §3.2.3 K-Distributed |
+//! | [`SolverBuilder::backend`] | §3.2.1 evaluation distribution: serial baseline, one-evaluation-per-core scatter/gather ([`Backend::Threads`]), or the virtual cluster standing in for Fugaku (§4.2) |
+//! | [`SolverBuilder::lambda_start`] | λ_start, §2.2 (paper: 12) |
+//! | [`SolverBuilder::k_max`] | K_max, the top of the doubling ladder K = 1, 2, 4, … (§2.2; paper: 2⁸/2⁹) |
+//! | [`SolverBuilder::sigma0`] | σ0 = ¼ of the search-space width (§4.1) |
+//! | [`SolverBuilder::budget_s`] | the 12 h wall-clock budget (§4.1) |
+//! | [`SolverBuilder::target`] / [`SolverBuilder::targets`] | the precision ladder ε ∈ {10², …, 10⁻⁸} of §4.3.1 |
+//! | [`SolverBuilder::restart_distributed`] | §5's recommendation to restart stopped K-Distributed descents |
+//! | [`SolverBuilder::run_observed`] / [`Observer`] | per-iteration telemetry (the serving-layer hook; no direct paper analogue) |
+//! | [`RunReport`] | first-hit times per target feeding ERT/ECDF (§4.3.1) via [`crate::metrics`] |
+//!
+//! Deployment strategies never touch the objective directly: the engine
+//! evaluates through the backend, so a [`ClosureProblem`], a
+//! [`LeastSquares`] fit, or a BBOB instance all run identically on all
+//! three strategies — and identically again on the thread pool, whose
+//! trajectories are bit-equal to serial evaluation.
+
+pub mod backend;
+pub mod observer;
+pub mod problem;
+pub mod solver;
+
+pub use backend::Backend;
+pub use observer::{Event, FnObserver, Observer, Recorder};
+pub use problem::{ClosureProblem, LeastSquares, NoisyRastrigin, Problem};
+pub use solver::{RunReport, Solver, SolverBuilder};

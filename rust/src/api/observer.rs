@@ -1,0 +1,97 @@
+//! Streaming run telemetry: a callback invoked by the strategy engine at
+//! every descent start/end, every iteration, and every target hit — the
+//! hook a serving layer needs to stream progress without waiting for the
+//! final [`crate::api::RunReport`].
+//!
+//! Event ordering guarantees (asserted by the facade tests):
+//! * `RunStart` is first, `RunEnd` is last;
+//! * per slot, `DescentStart` precedes every `Iteration`/`TargetHit`,
+//!   and `DescentEnd` follows all of them;
+//! * `TargetHit` indices are emitted in ascending ladder order per slot;
+//! * per slot, `Iteration` virtual times are non-decreasing.
+
+use crate::cmaes::StopReason;
+
+/// One telemetry event. Times are virtual-cluster seconds (equal to an
+/// estimate of real seconds for the wall-clock backends).
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A strategy run begins.
+    RunStart { algo: &'static str, dim: usize, targets: usize },
+    /// A descent was spawned (slot is the engine's descent id).
+    DescentStart { slot: usize, k: usize, replica: usize, lambda: usize, start_s: f64 },
+    /// One CMA-ES iteration of a descent completed.
+    Iteration { slot: usize, k: usize, iter: usize, evals: usize, best_delta: f64, t_s: f64 },
+    /// A descent hit target `targets[index]` for the first time.
+    TargetHit { slot: usize, index: usize, target: f64, t_s: f64 },
+    /// A descent finished (`stop: None` = cut by the budget/cutoff).
+    DescentEnd { slot: usize, k: usize, replica: usize, stop: Option<StopReason>, end_s: f64 },
+    /// The strategy run is over.
+    RunEnd { best_delta: f64, end_s: f64, total_evals: usize, descents: usize },
+}
+
+/// Receiver of [`Event`]s. Wrap a closure in [`FnObserver`] for the
+/// common streaming-callback case.
+pub trait Observer {
+    fn on_event(&mut self, event: &Event);
+}
+
+/// Adapter: any `FnMut(&Event)` closure is an observer (the telemetry
+/// analogue of [`crate::cmaes::FnEvaluator`]), e.g.
+/// `solver.run_observed(&mut FnObserver(|e: &Event| println!("{e:?}")))`.
+pub struct FnObserver<F: FnMut(&Event)>(pub F);
+
+impl<F: FnMut(&Event)> Observer for FnObserver<F> {
+    fn on_event(&mut self, event: &Event) {
+        (self.0)(event)
+    }
+}
+
+/// An [`Observer`] that stores every event — used by tests and by
+/// callers that post-process a full event log.
+#[derive(Default)]
+pub struct Recorder {
+    pub events: Vec<Event>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Count events matching a predicate.
+    pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(e)).count()
+    }
+}
+
+impl Observer for Recorder {
+    fn on_event(&mut self, event: &Event) {
+        self.events.push(event.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_stores_events() {
+        let mut r = Recorder::new();
+        r.on_event(&Event::RunStart { algo: "x", dim: 2, targets: 9 });
+        r.on_event(&Event::RunEnd { best_delta: 0.0, end_s: 1.0, total_evals: 10, descents: 1 });
+        assert_eq!(r.events.len(), 2);
+        assert_eq!(r.count(|e| matches!(e, Event::RunStart { .. })), 1);
+    }
+
+    #[test]
+    fn closures_are_observers() {
+        let mut n = 0usize;
+        {
+            let mut obs = FnObserver(|_e: &Event| n += 1);
+            let dyn_obs: &mut dyn Observer = &mut obs;
+            dyn_obs.on_event(&Event::RunStart { algo: "x", dim: 1, targets: 1 });
+        }
+        assert_eq!(n, 1);
+    }
+}

@@ -1,0 +1,373 @@
+//! The builder facade: one entry point over problems, strategies,
+//! backends, and telemetry.
+//!
+//! ```
+//! use ipopcma::api::{Backend, ClosureProblem, Solver};
+//! use ipopcma::strategies::Algo;
+//!
+//! let sphere = ClosureProblem::new(4, |x: &[f64]| x.iter().map(|v| v * v).sum());
+//! let report = Solver::on(sphere)
+//!     .strategy(Algo::Sequential)
+//!     .backend(Backend::Serial)
+//!     .target(1e-8)
+//!     .seed(42)
+//!     .run();
+//! assert!(report.solved());
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::CostModel;
+use crate::cmaes::StopConfig;
+use crate::evaluator::ThreadPoolEvaluator;
+use crate::ipop::IpopConfig;
+use crate::metrics::paper_targets;
+use crate::runtime::json::Json;
+use crate::strategies::{Algo, Exec, RunTrace, VirtualConfig};
+
+use super::backend::Backend;
+use super::observer::Observer;
+use super::problem::Problem;
+
+/// Entry point of the facade: `Solver::on(problem)` starts a
+/// [`SolverBuilder`].
+pub struct Solver;
+
+impl Solver {
+    /// Build a solver over an owned problem.
+    pub fn on<P: Problem + 'static>(problem: P) -> SolverBuilder<P> {
+        Self::on_shared(Arc::new(problem))
+    }
+
+    /// Build a solver over a shared problem (lets callers run several
+    /// strategies against the same instance without cloning it).
+    pub fn on_shared<P: Problem + 'static>(problem: Arc<P>) -> SolverBuilder<P> {
+        SolverBuilder {
+            problem,
+            algo: Algo::Sequential,
+            backend: Backend::Serial,
+            lambda_start: 8,
+            k_max: 16,
+            sigma0: None,
+            budget_s: 12.0 * 3600.0,
+            targets: paper_targets(),
+            descent_evals: 100_000,
+            eval_budget: 1_000_000,
+            seed: 0,
+            restart_distributed: false,
+            stop_at_final_target: true,
+            override_cfg: None,
+        }
+    }
+}
+
+/// Configures and runs one strategy deployment on one problem. Every
+/// knob maps to a paper concept — see the [`crate::api`] module docs for
+/// the section-by-section correspondence.
+pub struct SolverBuilder<P> {
+    problem: Arc<P>,
+    algo: Algo,
+    backend: Backend,
+    lambda_start: usize,
+    k_max: usize,
+    sigma0: Option<f64>,
+    budget_s: f64,
+    targets: Vec<f64>,
+    descent_evals: usize,
+    eval_budget: usize,
+    seed: u64,
+    restart_distributed: bool,
+    stop_at_final_target: bool,
+    override_cfg: Option<VirtualConfig>,
+}
+
+impl<P: Problem + 'static> SolverBuilder<P> {
+    /// Deployment strategy (default: the sequential IPOP baseline).
+    pub fn strategy(mut self, algo: Algo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Evaluation substrate (default: serial in-process).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Initial population λ_start (default 8; paper: 12).
+    pub fn lambda_start(mut self, lambda_start: usize) -> Self {
+        assert!(lambda_start >= 2);
+        self.lambda_start = lambda_start;
+        self
+    }
+
+    /// Largest population coefficient K_max (default 16).
+    pub fn k_max(mut self, k_max: usize) -> Self {
+        assert!(k_max >= 1);
+        self.k_max = k_max;
+        self
+    }
+
+    /// Initial step size σ0 (default: a quarter of the search-box width).
+    pub fn sigma0(mut self, sigma0: f64) -> Self {
+        assert!(sigma0 > 0.0);
+        self.sigma0 = Some(sigma0);
+        self
+    }
+
+    /// Virtual wall-clock budget in seconds (default: the paper's 12 h).
+    pub fn budget_s(mut self, budget_s: f64) -> Self {
+        assert!(budget_s > 0.0);
+        self.budget_s = budget_s;
+        self
+    }
+
+    /// Replace the full target ladder (descending precisions).
+    pub fn targets(mut self, targets: Vec<f64>) -> Self {
+        assert!(!targets.is_empty());
+        self.targets = targets;
+        self
+    }
+
+    /// Truncate/extend the paper ladder so its final precision is
+    /// `epsilon`: keeps every paper target above `epsilon` and appends
+    /// `epsilon` itself.
+    pub fn target(mut self, epsilon: f64) -> Self {
+        assert!(epsilon > 0.0);
+        let mut t: Vec<f64> = paper_targets().into_iter().filter(|&v| v > epsilon).collect();
+        t.push(epsilon);
+        self.targets = t;
+        self
+    }
+
+    /// Per-descent evaluation cap (default 100 000).
+    pub fn descent_evals(mut self, evals: usize) -> Self {
+        self.descent_evals = evals;
+        self
+    }
+
+    /// Total evaluation budget across all descents (default 1 000 000).
+    pub fn eval_budget(mut self, evals: usize) -> Self {
+        self.eval_budget = evals;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// K-Distributed: restart stopped descents with the same K (§5).
+    pub fn restart_distributed(mut self, on: bool) -> Self {
+        self.restart_distributed = on;
+        self
+    }
+
+    /// Keep running after the final target is hit (default: stop, which
+    /// is exact for first-hit metrics).
+    pub fn run_to_completion(mut self) -> Self {
+        self.stop_at_final_target = false;
+        self
+    }
+
+    /// Expert escape hatch: run with this exact [`VirtualConfig`],
+    /// bypassing every other knob — used by the benchmark harness to
+    /// keep its scaled paper configurations byte-identical.
+    pub fn virtual_config(mut self, cfg: VirtualConfig) -> Self {
+        self.override_cfg = Some(cfg);
+        self
+    }
+
+    /// The [`VirtualConfig`] this builder will run — exposed so tests
+    /// and callers can inspect the effective defaults.
+    pub fn config(&self) -> VirtualConfig {
+        if let Some(cfg) = &self.override_cfg {
+            return cfg.clone();
+        }
+        let (lower, upper) = self.problem.bounds();
+        let ipop = IpopConfig {
+            lambda_start: self.lambda_start,
+            multiplier: 2,
+            k_max: self.k_max,
+            sigma0: self.sigma0.unwrap_or(0.25 * (upper - lower)),
+            lower,
+            upper,
+            max_evals: self.descent_evals,
+            stop: StopConfig::default(),
+        };
+        let cost = match &self.backend {
+            Backend::Virtual(c) => *c,
+            // Wall-clock backends: charge measured times so the virtual
+            // timeline approximates the real one.
+            _ => CostModel::fugaku_like(self.lambda_start, 0.0),
+        };
+        VirtualConfig {
+            ipop,
+            dim: self.problem.dim(),
+            cost,
+            budget_s: self.budget_s,
+            targets: self.targets.clone(),
+            stop_at_final_target: self.stop_at_final_target,
+            restart_distributed: self.restart_distributed,
+            real_eval_cap: self.eval_budget,
+            seed: self.seed,
+        }
+    }
+
+    /// Run without telemetry.
+    pub fn run(self) -> RunReport {
+        self.execute(None)
+    }
+
+    /// Run, streaming [`crate::api::Event`]s into `observer`.
+    pub fn run_observed(self, observer: &mut dyn Observer) -> RunReport {
+        self.execute(Some(observer))
+    }
+
+    fn execute(self, observer: Option<&mut dyn Observer>) -> RunReport {
+        let cfg = self.config();
+        let backend_label = self.backend.label();
+        let t0 = Instant::now();
+        let trace = match self.backend {
+            Backend::Threads(workers) => {
+                let shared = Arc::clone(&self.problem);
+                let mut pool = ThreadPoolEvaluator::new(
+                    Arc::new(move |x: &[f64]| shared.eval(x)),
+                    workers.max(1),
+                );
+                self.algo.run_exec(
+                    &*self.problem,
+                    &cfg,
+                    Exec { eval: Some(&mut pool), observer },
+                )
+            }
+            _ => self.algo.run_exec(&*self.problem, &cfg, Exec { eval: None, observer }),
+        };
+        RunReport {
+            problem: self.problem.name().to_string(),
+            dim: cfg.dim,
+            algo: self.algo,
+            backend: backend_label,
+            lambda_start: cfg.ipop.lambda_start,
+            targets: cfg.targets,
+            trace,
+            wall_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Unified outcome of one facade run: the full strategy trace plus the
+/// run's identity, with JSON export via the [`crate::runtime::json`]
+/// writer.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Problem label ([`Problem::name`]).
+    pub problem: String,
+    pub dim: usize,
+    pub algo: Algo,
+    /// Backend label ([`Backend::label`]).
+    pub backend: String,
+    /// λ_start of the run (λ of descent K is `k · lambda_start`).
+    pub lambda_start: usize,
+    /// The target precision ladder the hits refer to.
+    pub targets: Vec<f64>,
+    /// Full per-descent trace from the strategy engine.
+    pub trace: RunTrace,
+    /// Real wall-clock seconds of the whole run.
+    pub wall_s: f64,
+}
+
+impl RunReport {
+    /// Best quality `f − f_opt` reached.
+    pub fn best_delta(&self) -> f64 {
+        self.trace.best_delta
+    }
+
+    /// Did the run hit the hardest target?
+    pub fn solved(&self) -> bool {
+        self.trace.hits.all_hit()
+    }
+
+    /// Number of targets hit.
+    pub fn targets_hit(&self) -> usize {
+        self.trace.hits.hit_count()
+    }
+
+    pub fn total_evals(&self) -> usize {
+        self.trace.total_evals
+    }
+
+    /// Serialize the report (identity, hits, per-descent traces).
+    pub fn to_json(&self) -> Json {
+        fn num(v: f64) -> Json {
+            Json::Num(v)
+        }
+        fn opt_num(v: Option<f64>) -> Json {
+            match v {
+                Some(x) => Json::Num(x),
+                None => Json::Null,
+            }
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("problem".to_string(), Json::Str(self.problem.clone()));
+        obj.insert("algo".to_string(), Json::Str(self.algo.name().to_string()));
+        obj.insert("backend".to_string(), Json::Str(self.backend.clone()));
+        obj.insert("dim".to_string(), num(self.dim as f64));
+        obj.insert("lambda_start".to_string(), num(self.lambda_start as f64));
+        obj.insert("budget_s".to_string(), num(self.trace.budget_s));
+        obj.insert("end_s".to_string(), num(self.trace.end_s));
+        obj.insert("wall_s".to_string(), num(self.wall_s));
+        obj.insert("best_delta".to_string(), num(self.trace.best_delta));
+        obj.insert("total_evals".to_string(), num(self.trace.total_evals as f64));
+        obj.insert(
+            "targets".to_string(),
+            Json::Arr(self.targets.iter().map(|&t| num(t)).collect()),
+        );
+        obj.insert(
+            "hits".to_string(),
+            Json::Arr(self.trace.hits.hits.iter().map(|&h| opt_num(h)).collect()),
+        );
+        let descents: Vec<Json> = self
+            .trace
+            .descents
+            .iter()
+            .map(|d| {
+                let mut o = BTreeMap::new();
+                o.insert("k".to_string(), num(d.k as f64));
+                o.insert("replica".to_string(), num(d.replica as f64));
+                o.insert("lambda".to_string(), num((d.k * self.lambda_start) as f64));
+                o.insert("start_s".to_string(), num(d.start_s));
+                o.insert("end_s".to_string(), num(d.end_s));
+                o.insert("iters".to_string(), num(d.iters as f64));
+                o.insert("evals".to_string(), num(d.evals as f64));
+                o.insert("best_delta".to_string(), num(d.best_delta));
+                o.insert(
+                    "stop".to_string(),
+                    match d.stop {
+                        Some(r) => Json::Str(r.name().to_string()),
+                        None => Json::Null,
+                    },
+                );
+                o.insert(
+                    "hits".to_string(),
+                    Json::Arr(d.hits.hits.iter().map(|&h| opt_num(h)).collect()),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("descents".to_string(), Json::Arr(descents));
+        Json::Obj(obj)
+    }
+
+    /// Compact JSON text of [`RunReport::to_json`].
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Write the JSON report to a file.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_string())
+    }
+}

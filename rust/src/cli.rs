@@ -88,4 +88,59 @@ mod tests {
         let a = parse(&["--verbose"]);
         assert!(a.flag("verbose"));
     }
+
+    #[test]
+    fn value_containing_equals_splits_once() {
+        // Only the first '=' separates key from value.
+        let a = parse(&["--filter=k=v", "--expr=a=b=c"]);
+        assert_eq!(a.get("filter"), Some("k=v"));
+        assert_eq!(a.get("expr"), Some("a=b=c"));
+        // Empty value is preserved (distinct from a boolean flag).
+        let b = parse(&["--out="]);
+        assert_eq!(b.get("out"), Some(""));
+        assert!(!b.flag("out"));
+    }
+
+    #[test]
+    fn repeated_flags_last_wins() {
+        let a = parse(&["--dim", "10", "--dim", "40", "--dim=80"]);
+        assert_eq!(a.get("dim"), Some("80"));
+        assert_eq!(a.typed("dim", 0usize).unwrap(), 80);
+        // Later boolean form overrides an earlier valued form.
+        let b = parse(&["--cache", "off", "--cache"]);
+        assert!(b.flag("cache"));
+    }
+
+    #[test]
+    fn boolean_flag_before_positional_consumes_it() {
+        // Documented sharp edge: `--flag` followed by a non-flag token
+        // takes that token as its value, so a positional after a bare
+        // flag is swallowed. Callers must either order positionals first
+        // (as every subcommand does) or write `--flag=true`.
+        let a = parse(&["--fast", "run"]);
+        assert_eq!(a.get("fast"), Some("run"));
+        assert!(a.positional.is_empty());
+        // The unambiguous spellings keep the positional.
+        let b = parse(&["run", "--fast"]);
+        assert_eq!(b.positional, vec!["run"]);
+        assert!(b.flag("fast"));
+        let c = parse(&["--fast=true", "run"]);
+        assert_eq!(c.positional, vec!["run"]);
+        assert!(c.flag("fast"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--fast", "--dim", "10"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("dim"), Some("10"));
+        // Negative numbers are values, not flags (single dash).
+        let b = parse(&["--offset", "-3"]);
+        assert_eq!(b.get("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn bare_double_dash_is_an_error() {
+        assert!(Args::parse(["--".to_string()]).is_err());
+    }
 }

@@ -32,6 +32,10 @@ pub struct ThreadPoolEvaluator {
     handles: Vec<thread::JoinHandle<()>>,
     /// Total evaluations processed (for tests/metrics).
     pub evals: Arc<AtomicUsize>,
+    /// Point buffer reused across serial-path calls (one descent batches
+    /// every iteration through here, so this allocates once per run, not
+    /// once per batch).
+    scratch: Vec<f64>,
 }
 
 impl ThreadPoolEvaluator {
@@ -64,7 +68,7 @@ impl ThreadPoolEvaluator {
             }));
             senders.push(tx);
         }
-        ThreadPoolEvaluator { objective, senders, handles, evals }
+        ThreadPoolEvaluator { objective, senders, handles, evals, scratch: Vec::new() }
     }
 
     /// Number of worker threads.
@@ -73,15 +77,16 @@ impl ThreadPoolEvaluator {
     }
 
     /// Evaluate serially on the caller thread (used for tiny batches
-    /// where scatter overhead dominates).
-    fn eval_serial(&self, xs: &Matrix, out: &mut [f64]) {
+    /// where scatter overhead dominates), reusing one scratch buffer
+    /// across calls.
+    fn eval_serial(&mut self, xs: &Matrix, out: &mut [f64]) {
         let n = xs.rows();
-        let mut p = vec![0.0; n];
+        self.scratch.resize(n, 0.0);
         for (k, o) in out.iter_mut().enumerate() {
             for i in 0..n {
-                p[i] = xs[(i, k)];
+                self.scratch[i] = xs[(i, k)];
             }
-            *o = (self.objective)(&p);
+            *o = (self.objective)(&self.scratch);
         }
         self.evals.fetch_add(out.len(), Ordering::Relaxed);
     }

@@ -15,6 +15,7 @@ use std::fmt::Write as _;
 use std::fs;
 use std::path::PathBuf;
 
+use crate::api::{Backend, Solver};
 use crate::bbob::Instance;
 use crate::cluster::{CostModel, DetCost};
 use crate::ipop::IpopConfig;
@@ -284,7 +285,10 @@ impl Campaign {
         let _ = fs::write(self.runs_path(), out);
     }
 
-    /// Fetch (or compute and cache) the run for `key`.
+    /// Fetch (or compute and cache) the run for `key` — executed through
+    /// the [`Solver`] facade over the virtual-cluster backend, with the
+    /// exact scaled paper configuration pinned via
+    /// [`crate::api::SolverBuilder::virtual_config`].
     pub fn run(&mut self, key: RunKey) -> RunSummary {
         if let Some(r) = self.runs.iter().find(|r| r.key == key) {
             return r.clone();
@@ -292,8 +296,12 @@ impl Campaign {
         let scale = Scale::for_dim(key.dim);
         let cfg = scale.config(key.dim, key.cost_ms * 1e-3, key.seed, key.algo);
         let inst = Instance::new(key.fid, key.dim, key.seed + 1);
-        let tr = key.algo.run(&inst, &cfg);
-        let summary = RunSummary::from_trace(key, &tr);
+        let report = Solver::on(inst)
+            .strategy(key.algo)
+            .backend(Backend::Virtual(cfg.cost))
+            .virtual_config(cfg)
+            .run();
+        let summary = RunSummary::from_trace(key, &report.trace);
         self.runs.push(summary.clone());
         self.persist();
         summary

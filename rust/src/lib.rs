@@ -2,22 +2,66 @@
 //!
 //! A reproduction of *"Massively parallel CMA-ES with increasing
 //! population"* (Redon, Fortin, Derbel, Tsuji, Sato; 2024) as a
-//! three-layer Rust + JAX/Pallas + PJRT stack:
+//! three-layer Rust + JAX/Pallas + PJRT stack, fronted by one builder
+//! facade: [`api::Solver`].
 //!
-//! * **L3 (this crate)** — the coordinator: CMA-ES / IPOP-CMA-ES, the
-//!   K-Replicated and K-Distributed large-scale parallel strategies over a
-//!   virtual cluster, the BBOB benchmark substrate, metrics (ERT, ECDF,
-//!   speedups), and the benchmark harness regenerating every table and
-//!   figure of the paper.
+//! ## Quickstart
+//!
+//! Any objective — not just BBOB — runs through any deployment strategy
+//! on any execution backend:
+//!
+//! ```
+//! use ipopcma::api::{Backend, ClosureProblem, Solver};
+//! use ipopcma::strategies::Algo;
+//!
+//! // An arbitrary user objective as a Problem.
+//! let sphere = ClosureProblem::new(4, |x: &[f64]| x.iter().map(|v| v * v).sum())
+//!     .with_bounds(-5.0, 5.0)
+//!     .named("sphere-4");
+//!
+//! // One facade call: problem × strategy × backend × budget.
+//! let report = Solver::on(sphere)
+//!     .strategy(Algo::Sequential) // or KReplicated / KDistributed
+//!     .backend(Backend::Serial)   // or Threads(n) / Virtual(cost_model)
+//!     .target(1e-8)
+//!     .seed(42)
+//!     .run();
+//!
+//! assert!(report.solved());
+//! assert!(report.best_delta() <= 1e-8);
+//! // Reports serialize through the built-in JSON writer.
+//! assert!(report.to_json_string().contains("\"problem\":\"sphere-4\""));
+//! ```
+//!
+//! Swap `.backend(Backend::Threads(8))` for real scatter/gather
+//! evaluation across 8 worker threads (§3.2.1), or
+//! `.backend(Backend::Virtual(cost_model))` to run on the virtual
+//! cluster that carries the paper's 6144-core scaling results on a
+//! small host. Attach an [`api::Observer`] with
+//! [`api::SolverBuilder::run_observed`] for per-iteration streaming
+//! telemetry. The [`api`] module docs map every builder knob to the
+//! paper section it reproduces.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the coordinator: CMA-ES / IPOP-CMA-ES
+//!   ([`cmaes`], [`ipop`]), the K-Replicated and K-Distributed
+//!   large-scale parallel strategies over a virtual cluster
+//!   ([`strategies`], [`cluster`]), the real scatter/gather thread pool
+//!   ([`evaluator`]), the BBOB benchmark substrate ([`bbob`]), metrics
+//!   (ERT, ECDF, speedups — [`metrics`]), the [`api`] facade, and the
+//!   benchmark harness ([`harness`]) regenerating every table and figure
+//!   of the paper.
 //! * **L2/L1 (python/, build-time only)** — the dense iteration compute
 //!   (batched sampling GEMM, rank-μ covariance GEMM, Jacobi
 //!   eigendecomposition) as JAX functions calling Pallas kernels, AOT
 //!   lowered to HLO text and executed from Rust through PJRT
-//!   ([`runtime`]).
+//!   ([`runtime`]; requires the `xla` cargo feature and built artifacts).
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod api;
 pub mod bbob;
 pub mod cli;
 pub mod cluster;
@@ -25,9 +69,11 @@ pub mod cmaes;
 pub mod evaluator;
 pub mod harness;
 pub mod ipop;
+pub mod linalg;
 pub mod metrics;
 pub mod report;
+pub mod rng;
 pub mod runtime;
 pub mod strategies;
-pub mod linalg;
-pub mod rng;
+
+pub use api::{Backend, ClosureProblem, Observer, Problem, RunReport, Solver};

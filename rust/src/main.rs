@@ -1,4 +1,5 @@
-//! `ipopcma` — the L3 coordinator CLI.
+//! `ipopcma` — the L3 coordinator CLI. Every subcommand goes through the
+//! [`ipopcma::api::Solver`] facade.
 //!
 //! Subcommands:
 //!   info                          list BBOB functions and AOT artifacts
@@ -6,11 +7,12 @@
 //!   compare   --fid F --dim N     the three strategies on the virtual cluster
 //!   suite     --dim N             quick strategy comparison over the suite
 
+use std::sync::Arc;
+
+use ipopcma::api::{Backend, Solver};
 use ipopcma::bbob::{Instance, NAMES};
 use ipopcma::cli::Args;
-use ipopcma::cmaes::StopConfig;
 use ipopcma::harness::Scale;
-use ipopcma::ipop::{self, IpopConfig};
 use ipopcma::report::{ascii_table, fmt_val};
 use ipopcma::strategies::Algo;
 
@@ -33,7 +35,7 @@ fn main() {
                 "ipopcma — massively parallel IPOP-CMA-ES (Redon et al. 2024 reproduction)\n\n\
                  usage:\n\
                  \x20 ipopcma info\n\
-                 \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0]\n\
+                 \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0] [--workers 1] [--json out.json]\n\
                  \x20 ipopcma compare  --fid 7  --dim 10 [--cost-ms 1] [--seed 0]\n\
                  \x20 ipopcma suite    --dim 10 [--cost-ms 0] [--seed 0]\n"
             );
@@ -71,30 +73,61 @@ fn optimize(args: &Args) -> Result<(), String> {
     let target: f64 = args.typed("target", 1e-8)?;
     let max_evals: usize = args.typed("max-evals", 500_000)?;
     let seed: u64 = args.typed("seed", 0)?;
+    let workers: usize = args.typed("workers", 1)?;
+    let json_path = args.get("json").map(str::to_string);
+
+    // Validate before the builder: its knobs assert on these, and bad
+    // flags should get the CLI's formatted error, not a panic.
+    if !(target > 0.0) {
+        return Err(format!("--target must be > 0, got {target}"));
+    }
+    if lambda_start < 2 {
+        return Err(format!("--lambda-start must be >= 2, got {lambda_start}"));
+    }
+    if k_max < 1 {
+        return Err(format!("--kmax must be >= 1, got {k_max}"));
+    }
+    if workers < 1 {
+        return Err(format!("--workers must be >= 1, got {workers}"));
+    }
 
     let inst = Instance::new(fid, dim, seed + 1);
-    let mut cfg = IpopConfig::bbob(lambda_start, k_max);
-    cfg.stop = StopConfig { target_f: Some(inst.fopt + target), ..Default::default() };
-    cfg.max_evals = max_evals;
+    let name = ipopcma::bbob::Instance::name(&inst);
+    // --workers N > 1: real scatter/gather across N threads (§3.2.1);
+    // N = 1 stays on the serial in-process path.
+    let backend = if workers > 1 { Backend::Threads(workers) } else { Backend::Serial };
 
     let t0 = std::time::Instant::now();
-    let res = ipop::run(&cfg, dim, |x| inst.eval(x), seed);
+    let report = Solver::on(inst)
+        .strategy(Algo::Sequential)
+        .backend(backend)
+        .lambda_start(lambda_start)
+        .k_max(k_max)
+        .target(target)
+        .descent_evals(max_evals)
+        .eval_budget(max_evals)
+        .seed(seed)
+        .run();
     println!(
         "f{fid} ({}) dim {dim}: Δf = {:.3e} after {} evals in {:.2}s",
-        inst.name(),
-        res.best_f - inst.fopt,
-        res.total_evals,
+        name,
+        report.best_delta(),
+        report.total_evals(),
         t0.elapsed().as_secs_f64()
     );
-    for d in &res.descents {
+    for d in &report.trace.descents {
         println!(
             "  K={:<4} λ={:<5} iters={:<6} Δf={:.3e} stop={}",
             d.k,
-            d.lambda,
-            d.iterations,
-            d.best_f - inst.fopt,
-            d.stop.name()
+            d.k * lambda_start,
+            d.iters,
+            d.best_delta,
+            d.stop.map(|s| s.name()).unwrap_or("budget")
         );
+    }
+    if let Some(path) = json_path {
+        report.write_json(&path).map_err(|e| format!("writing {path}: {e}"))?;
+        println!("report written to {path}");
     }
     Ok(())
 }
@@ -105,12 +138,17 @@ fn compare(args: &Args) -> Result<(), String> {
     let cost_ms: f64 = args.typed("cost-ms", 1.0)?;
     let seed: u64 = args.typed("seed", 0)?;
 
-    let inst = Instance::new(fid, dim, seed + 1);
+    let inst = Arc::new(Instance::new(fid, dim, seed + 1));
     let scale = Scale::for_dim(dim);
     let mut rows = Vec::new();
     for algo in Algo::ALL {
         let cfg = scale.config(dim, cost_ms * 1e-3, seed, algo);
-        let tr = algo.run(&inst, &cfg);
+        let report = Solver::on_shared(Arc::clone(&inst))
+            .strategy(algo)
+            .backend(Backend::Virtual(cfg.cost))
+            .virtual_config(cfg)
+            .run();
+        let tr = &report.trace;
         let final_hit = tr.hits.hits.last().copied().flatten();
         rows.push(vec![
             algo.name().to_string(),
@@ -152,9 +190,13 @@ fn suite(args: &Args) -> Result<(), String> {
         for fid in 1..=24 {
             let inst = Instance::new(fid, dim, seed + 1);
             let cfg = scale.config(dim, cost_ms * 1e-3, seed, algo);
-            let tr = algo.run(&inst, &cfg);
-            hits += tr.hits.hit_count();
-            total += tr.hits.targets.len();
+            let report = Solver::on(inst)
+                .strategy(algo)
+                .backend(Backend::Virtual(cfg.cost))
+                .virtual_config(cfg)
+                .run();
+            hits += report.targets_hit();
+            total += report.targets.len();
         }
         rows.push(vec![
             algo.name().to_string(),

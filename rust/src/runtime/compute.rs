@@ -2,126 +2,202 @@
 //! the fourth linalg tier next to naive / level2 / level3, showing the
 //! three-layer stack composing end-to-end: Pallas kernel (L1) inside a
 //! JAX model (L2) executed from the Rust coordinator (L3) via PJRT.
+//!
+//! Like [`super::XlaRuntime`], the real implementation needs the `xla`
+//! crate and is gated behind the `xla` feature; the default build
+//! provides a stub whose constructor fails cleanly (and which can never
+//! be invoked, since no [`super::XlaRuntime`] can be constructed either).
 
-use std::rc::Rc;
+#[cfg(feature = "xla")]
+pub use real::XlaCompute;
 
-use anyhow::{anyhow, Result};
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaCompute;
 
-use crate::cmaes::{CmaState, Compute};
-use crate::linalg::Matrix;
+#[cfg(feature = "xla")]
+mod real {
+    use std::rc::Rc;
 
-use super::{literal_matrix, literal_vec, matrix_literal, scalar_literal, vec_literal, Kind, XlaRuntime};
+    use crate::cmaes::{CmaState, Compute};
+    use crate::linalg::Matrix;
 
-/// XLA-backed dense compute for one fixed (n, λ) shape.
-pub struct XlaCompute {
-    rt: Rc<XlaRuntime>,
-    n: usize,
-    lambda: usize,
-    mu: usize,
-    sample_name: String,
-    update_name: String,
-    eigh_name: String,
-}
-
-impl XlaCompute {
-    /// Bind the artifacts for dimension `n` and population `lambda`.
-    /// Fails (cleanly) when the manifest lacks that shape — rebuild with
-    /// `python -m compile.aot --full` for the extended ladder.
-    pub fn for_shape(rt: Rc<XlaRuntime>, n: usize, lambda: usize) -> Result<XlaCompute> {
-        let sample = rt
-            .manifest
-            .find(Kind::SampleY, n, Some(lambda))
-            .ok_or_else(|| anyhow!("no sample_y artifact for n={n} λ={lambda}"))?;
-        let update = rt
-            .manifest
-            .find(Kind::UpdateC, n, Some(lambda))
-            .ok_or_else(|| anyhow!("no update_c artifact for n={n} λ={lambda}"))?;
-        let eigh = rt
-            .manifest
-            .find(Kind::Eigh, n, None)
-            .ok_or_else(|| anyhow!("no eigh artifact for n={n}"))?;
-        let mu = update.mu.ok_or_else(|| anyhow!("update artifact missing mu"))?;
-        Ok(XlaCompute {
-            n,
-            lambda,
-            mu,
-            sample_name: sample.name.clone(),
-            update_name: update.name.clone(),
-            eigh_name: eigh.name.clone(),
-            rt,
-        })
-    }
-}
-
-impl Compute for XlaCompute {
-    fn label(&self) -> String {
-        format!("xla/pallas(n={},λ={})", self.n, self.lambda)
-    }
-
-    fn sample_y(&mut self, st: &CmaState, z: &Matrix, y: &mut Matrix) {
-        let out = self
-            .rt
-            .execute(
-                &self.sample_name,
-                &[
-                    matrix_literal(&st.bd).expect("bd literal"),
-                    matrix_literal(z).expect("z literal"),
-                ],
-            )
-            .expect("sample_y artifact");
-        *y = literal_matrix(&out[0], self.n, self.lambda).expect("sample_y output");
-    }
-
-    fn rank_mu_update(&mut self, c: &mut Matrix, keep: f64, c_mu: f64, y_sel: &Matrix, w: &[f64]) {
-        assert_eq!(y_sel.cols(), self.mu, "μ mismatch vs artifact");
-        assert_eq!(w.len(), self.mu);
-        // The artifact computes keep·C + c1·pc·pcᵀ + cμ·YWYᵀ; the descent
-        // applies the rank-one term itself, so pass c1 = 0.
-        let zeros = vec![0.0; self.n];
-        let out = self
-            .rt
-            .execute(
-                &self.update_name,
-                &[
-                    matrix_literal(c).expect("c literal"),
-                    scalar_literal(keep),
-                    scalar_literal(0.0),
-                    scalar_literal(c_mu),
-                    vec_literal(&zeros),
-                    matrix_literal(y_sel).expect("y_sel literal"),
-                    vec_literal(w),
-                ],
-            )
-            .expect("update_c artifact");
-        *c = literal_matrix(&out[0], self.n, self.n).expect("update_c output");
-    }
-
-    fn refresh_eigen(&mut self, st: &mut CmaState) {
-        st.c.symmetrize();
-        let out = self
-            .rt
-            .execute(&self.eigh_name, &[matrix_literal(&st.c).expect("c literal")])
-            .expect("eigh artifact");
-        // The artifact returns eigenpairs UNSORTED: the argsort/gather
-        // tail miscompiles under the embedded xla_extension 0.5.1, so the
-        // host performs the (cheap, O(n log n + n²)) sort instead.
-        let raw_values = literal_vec(&out[0]).expect("eigh values");
-        let raw_vectors = literal_matrix(&out[1], self.n, self.n).expect("eigh vectors");
-        let mut order: Vec<usize> = (0..self.n).collect();
-        order.sort_by(|&a, &b| raw_values[a].total_cmp(&raw_values[b]));
-        let values: Vec<f64> = order.iter().map(|&i| raw_values[i]).collect();
-        let vectors = Matrix::from_fn(self.n, self.n, |r, c| raw_vectors[(r, order[c])]);
-        st.apply_eigen(values, vectors);
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::cmaes::{
-        CmaParams, Descent, FnEvaluator, NativeCompute, StopConfig, StopReason,
+    use super::super::error::{rt_err, Result};
+    use super::super::{
+        literal_matrix, literal_vec, matrix_literal, scalar_literal, vec_literal, Kind, XlaRuntime,
     };
+
+    /// XLA-backed dense compute for one fixed (n, λ) shape.
+    pub struct XlaCompute {
+        rt: Rc<XlaRuntime>,
+        n: usize,
+        lambda: usize,
+        mu: usize,
+        sample_name: String,
+        update_name: String,
+        eigh_name: String,
+    }
+
+    impl XlaCompute {
+        /// Bind the artifacts for dimension `n` and population `lambda`.
+        /// Fails (cleanly) when the manifest lacks that shape — rebuild with
+        /// `python -m compile.aot --full` for the extended ladder.
+        pub fn for_shape(rt: Rc<XlaRuntime>, n: usize, lambda: usize) -> Result<XlaCompute> {
+            let sample = rt
+                .manifest
+                .find(Kind::SampleY, n, Some(lambda))
+                .ok_or_else(|| rt_err!("no sample_y artifact for n={n} λ={lambda}"))?;
+            let update = rt
+                .manifest
+                .find(Kind::UpdateC, n, Some(lambda))
+                .ok_or_else(|| rt_err!("no update_c artifact for n={n} λ={lambda}"))?;
+            let eigh = rt
+                .manifest
+                .find(Kind::Eigh, n, None)
+                .ok_or_else(|| rt_err!("no eigh artifact for n={n}"))?;
+            let mu = update.mu.ok_or_else(|| rt_err!("update artifact missing mu"))?;
+            Ok(XlaCompute {
+                n,
+                lambda,
+                mu,
+                sample_name: sample.name.clone(),
+                update_name: update.name.clone(),
+                eigh_name: eigh.name.clone(),
+                rt,
+            })
+        }
+    }
+
+    impl Compute for XlaCompute {
+        fn label(&self) -> String {
+            format!("xla/pallas(n={},λ={})", self.n, self.lambda)
+        }
+
+        fn sample_y(&mut self, st: &CmaState, z: &Matrix, y: &mut Matrix) {
+            let out = self
+                .rt
+                .execute(
+                    &self.sample_name,
+                    &[
+                        matrix_literal(&st.bd).expect("bd literal"),
+                        matrix_literal(z).expect("z literal"),
+                    ],
+                )
+                .expect("sample_y artifact");
+            *y = literal_matrix(&out[0], self.n, self.lambda).expect("sample_y output");
+        }
+
+        fn rank_mu_update(
+            &mut self,
+            c: &mut Matrix,
+            keep: f64,
+            c_mu: f64,
+            y_sel: &Matrix,
+            w: &[f64],
+        ) {
+            assert_eq!(y_sel.cols(), self.mu, "μ mismatch vs artifact");
+            assert_eq!(w.len(), self.mu);
+            // The artifact computes keep·C + c1·pc·pcᵀ + cμ·YWYᵀ; the descent
+            // applies the rank-one term itself, so pass c1 = 0.
+            let zeros = vec![0.0; self.n];
+            let out = self
+                .rt
+                .execute(
+                    &self.update_name,
+                    &[
+                        matrix_literal(c).expect("c literal"),
+                        scalar_literal(keep),
+                        scalar_literal(0.0),
+                        scalar_literal(c_mu),
+                        vec_literal(&zeros),
+                        matrix_literal(y_sel).expect("y_sel literal"),
+                        vec_literal(w),
+                    ],
+                )
+                .expect("update_c artifact");
+            *c = literal_matrix(&out[0], self.n, self.n).expect("update_c output");
+        }
+
+        fn refresh_eigen(&mut self, st: &mut CmaState) {
+            st.c.symmetrize();
+            let out = self
+                .rt
+                .execute(&self.eigh_name, &[matrix_literal(&st.c).expect("c literal")])
+                .expect("eigh artifact");
+            // The artifact returns eigenpairs UNSORTED: the argsort/gather
+            // tail miscompiles under the embedded xla_extension 0.5.1, so the
+            // host performs the (cheap, O(n log n + n²)) sort instead.
+            let raw_values = literal_vec(&out[0]).expect("eigh values");
+            let raw_vectors = literal_matrix(&out[1], self.n, self.n).expect("eigh vectors");
+            let mut order: Vec<usize> = (0..self.n).collect();
+            order.sort_by(|&a, &b| raw_values[a].total_cmp(&raw_values[b]));
+            let values: Vec<f64> = order.iter().map(|&i| raw_values[i]).collect();
+            let vectors = Matrix::from_fn(self.n, self.n, |r, c| raw_vectors[(r, order[c])]);
+            st.apply_eigen(values, vectors);
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::rc::Rc;
+
+    use crate::cmaes::{CmaState, Compute};
+    use crate::linalg::Matrix;
+
+    use super::super::error::{rt_err, Result};
+    use super::super::XlaRuntime;
+
+    /// Stub compute tier for builds without the `xla` feature. The
+    /// constructor always fails; since no [`XlaRuntime`] can exist in
+    /// such builds either, the trait methods are unreachable.
+    pub struct XlaCompute {
+        _unconstructible: (),
+    }
+
+    impl XlaCompute {
+        pub fn for_shape(rt: Rc<XlaRuntime>, n: usize, lambda: usize) -> Result<XlaCompute> {
+            let _ = (rt, n, lambda);
+            Err(rt_err!("XlaCompute unavailable: built without the `xla` cargo feature"))
+        }
+    }
+
+    impl Compute for XlaCompute {
+        fn label(&self) -> String {
+            unreachable!("stub XlaCompute cannot be constructed")
+        }
+
+        fn sample_y(&mut self, _st: &CmaState, _z: &Matrix, _y: &mut Matrix) {
+            unreachable!("stub XlaCompute cannot be constructed")
+        }
+
+        fn rank_mu_update(
+            &mut self,
+            _c: &mut Matrix,
+            _keep: f64,
+            _c_mu: f64,
+            _y_sel: &Matrix,
+            _w: &[f64],
+        ) {
+            unreachable!("stub XlaCompute cannot be constructed")
+        }
+
+        fn refresh_eigen(&mut self, _st: &mut CmaState) {
+            unreachable!("stub XlaCompute cannot be constructed")
+        }
+    }
+}
+
+#[cfg(all(test, feature = "xla"))]
+mod tests {
+    use std::rc::Rc;
+
+    use super::XlaCompute;
+    use crate::cmaes::{
+        CmaParams, Compute, Descent, FnEvaluator, NativeCompute, StopConfig, StopReason,
+    };
+    use crate::linalg::Matrix;
     use crate::rng::NormalSource;
+    use crate::runtime::XlaRuntime;
 
     fn runtime_or_skip() -> Option<Rc<XlaRuntime>> {
         match XlaRuntime::cpu() {
@@ -180,9 +256,8 @@ mod tests {
             5,
             StopConfig { target_f: Some(1e-9), max_evals: 100_000, ..Default::default() },
         );
-        let (reason, _) = d.run_to_stop(&mut FnEvaluator(|x: &[f64]| {
-            x.iter().map(|v| v * v).sum()
-        }));
+        let (reason, _) =
+            d.run_to_stop(&mut FnEvaluator(|x: &[f64]| x.iter().map(|v| v * v).sum()));
         assert_eq!(reason, StopReason::TargetReached, "best={}", d.best_f);
     }
 

@@ -1,0 +1,63 @@
+//! Minimal string-backed error type for the runtime layer (the offline
+//! vendor set has no `anyhow`). Construct with [`Error::msg`] or the
+//! `rt_err!` macro; convert upstream errors by formatting them in.
+
+use std::fmt;
+
+/// A runtime-layer error: a formatted message.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow!`-style construction: `rt_err!("no artifact named {name:?}")`.
+macro_rules! rt_err {
+    ($($arg:tt)*) => {
+        $crate::runtime::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!`-style early return with a formatted [`Error`].
+macro_rules! rt_bail {
+    ($($arg:tt)*) => {
+        return Err($crate::runtime::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub(crate) use rt_bail;
+pub(crate) use rt_err;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn macros_format() {
+        fn fails() -> Result<()> {
+            rt_bail!("bad {}", 7);
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "bad 7");
+        let e = rt_err!("x={x}", x = 1);
+        assert_eq!(e.to_string(), "x=1");
+    }
+}

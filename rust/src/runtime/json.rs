@@ -1,8 +1,10 @@
-//! Minimal JSON parser for the AOT manifest (the offline vendor set has
-//! no serde). Supports the full JSON grammar minus `\u` surrogate pairs,
-//! which the manifest never contains.
+//! Minimal JSON parser and writer (the offline vendor set has no
+//! serde): parses the AOT manifest and serializes [`crate::api`] run
+//! reports. Supports the full JSON grammar minus `\u` surrogate pairs,
+//! which neither use ever contains.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,6 +59,72 @@ impl Json {
             Json::Arr(v) => Some(v),
             _ => None,
         }
+    }
+
+    /// Serialize compactly. Non-finite numbers (which JSON cannot
+    /// represent) are written as `null`.
+    pub fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) if !v.is_finite() => out.push_str("null"),
+            Json::Num(v) => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "{v}");
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -234,5 +302,34 @@ mod tests {
     fn whitespace_tolerant() {
         let j = Json::parse(" {\n\t\"k\" :  [ ] \r\n} ").unwrap();
         assert_eq!(j.get("k").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn writer_round_trips() {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str("a\"b\\c\nd".to_string()));
+        m.insert("n".to_string(), Json::Num(-2.5e3));
+        m.insert(
+            "arr".to_string(),
+            Json::Arr(vec![Json::Null, Json::Bool(true), Json::Num(1.0)]),
+        );
+        let j = Json::Obj(m);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn writer_maps_non_finite_to_null() {
+        let j = Json::Arr(vec![Json::Num(f64::NAN), Json::Num(f64::INFINITY), Json::Num(2.0)]);
+        assert_eq!(j.to_string(), "[null,null,2]");
+    }
+
+    #[test]
+    fn writer_escapes_control_chars() {
+        let j = Json::Str("\u{1}x".to_string());
+        let text = j.to_string();
+        assert_eq!(text, "\"\\u0001x\"");
+        assert_eq!(Json::parse("\"a\\tb\"").unwrap(), Json::Str("a\tb".to_string()));
     }
 }

@@ -4,8 +4,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use super::error::{rt_bail, rt_err, Result};
 use super::json::Json;
 
 /// What a compiled artifact computes.
@@ -33,7 +32,7 @@ impl Kind {
             "update_c" => Kind::UpdateC,
             "eigh" => Kind::Eigh,
             "warmup" => Kind::Warmup,
-            other => bail!("unknown artifact kind {other:?}"),
+            other => rt_bail!("unknown artifact kind {other:?}"),
         })
     }
 }
@@ -62,38 +61,42 @@ impl Manifest {
     /// Load `dir/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
-        let text = fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let text = fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            rt_err!("reading {}/manifest.json (run `make artifacts`): {e}", dir.display())
+        })?;
+        let json = Json::parse(&text).map_err(|e| rt_err!("manifest parse error: {e}"))?;
         let format = json
             .get("format")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing format"))?;
+            .ok_or_else(|| rt_err!("manifest missing format"))?;
         if format != 1 {
-            bail!("unsupported manifest format {format}");
+            rt_bail!("unsupported manifest format {format}");
         }
         let mut artifacts = Vec::new();
         for a in json
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .ok_or_else(|| rt_err!("manifest missing artifacts"))?
         {
             let name = a
                 .get("name")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .ok_or_else(|| rt_err!("artifact missing name"))?
                 .to_string();
             let kind = Kind::parse(
-                a.get("kind").and_then(Json::as_str).ok_or_else(|| anyhow!("{name}: missing kind"))?,
+                a.get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| rt_err!("{name}: missing kind"))?,
             )?;
-            let n = a.get("n").and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: missing n"))?;
+            let n =
+                a.get("n").and_then(Json::as_usize).ok_or_else(|| rt_err!("{name}: missing n"))?;
             let file = a
                 .get("file")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+                .ok_or_else(|| rt_err!("{name}: missing file"))?;
             let path = dir.join(file);
             if !path.exists() {
-                bail!("artifact file missing: {}", path.display());
+                rt_bail!("artifact file missing: {}", path.display());
             }
             artifacts.push(Artifact {
                 name,

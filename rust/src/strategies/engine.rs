@@ -1,13 +1,19 @@
 //! The discrete-event engine shared by every strategy: real search
 //! trajectories, virtual time (see module docs of [`crate::strategies`]).
+//!
+//! The engine is problem- and backend-agnostic: it optimizes any
+//! [`Problem`] (BBOB instance, closure, fitting workload, …) and
+//! evaluates through an [`Exec`]-supplied [`BatchEvaluator`] (e.g. the
+//! scatter/gather thread pool) or, by default, a serial closure. An
+//! optional [`Observer`] receives per-iteration / per-descent telemetry.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
-use crate::bbob::Instance;
+use crate::api::{Event, Observer, Problem};
 use crate::cluster::{CommStats, Communicator, CostModel, OccupancySpan};
-use crate::cmaes::{Descent, FnEvaluator, StopReason};
+use crate::cmaes::{BatchEvaluator, Descent, FnEvaluator, StopReason};
 use crate::ipop::{self, IpopConfig};
 use crate::metrics::HitRecorder;
 use crate::rng::derive_stream;
@@ -47,7 +53,13 @@ pub struct VirtualConfig {
 impl VirtualConfig {
     /// Paper-shaped configuration: BBOB box, paper target ladder,
     /// Fugaku-like cost constants with T = λ_start threads per process.
-    pub fn paper_like(dim: usize, lambda_start: usize, k_max: usize, extra_cost_s: f64, seed: u64) -> Self {
+    pub fn paper_like(
+        dim: usize,
+        lambda_start: usize,
+        k_max: usize,
+        extra_cost_s: f64,
+        seed: u64,
+    ) -> Self {
         VirtualConfig {
             ipop: IpopConfig::bbob(lambda_start, k_max),
             dim,
@@ -116,6 +128,27 @@ pub trait Policy {
     fn on_finish(&mut self, eng: &mut Engine<'_>, slot: usize);
 }
 
+/// Execution context threaded from the [`crate::api::Solver`] facade
+/// into the engine: an optional batch evaluator replacing the serial
+/// closure (e.g. the thread pool), and an optional telemetry observer.
+#[derive(Default)]
+pub struct Exec<'a> {
+    /// Evaluates each iteration's λ points. `None` = serial closure over
+    /// the problem on the caller thread.
+    pub eval: Option<&'a mut dyn BatchEvaluator>,
+    /// Receives per-iteration / per-descent / per-target events.
+    pub observer: Option<&'a mut dyn Observer>,
+}
+
+impl<'a> Exec<'a> {
+    /// Emit an event if an observer is attached.
+    pub fn emit(&mut self, event: &Event) {
+        if let Some(obs) = self.observer.as_mut() {
+            obs.on_event(event);
+        }
+    }
+}
+
 pub(crate) struct EngineSlot {
     pub descent: Descent,
     pub k: usize,
@@ -159,7 +192,7 @@ impl Ord for HeapItem {
 /// The discrete-event executor. Strategies spawn descents; the engine
 /// advances whichever has the smallest virtual time by one iteration.
 pub struct Engine<'a> {
-    pub inst: &'a Instance,
+    pub problem: &'a dyn Problem,
     pub cfg: &'a VirtualConfig,
     pub mode: Mode,
     pub(crate) slots: Vec<EngineSlot>,
@@ -169,13 +202,14 @@ pub struct Engine<'a> {
     /// No iteration *starts* at or beyond this time.
     pub cutoff: f64,
     spawn_counter: u64,
+    exec: Exec<'a>,
 }
 
 impl<'a> Engine<'a> {
-    pub fn new(inst: &'a Instance, cfg: &'a VirtualConfig, mode: Mode) -> Engine<'a> {
-        assert_eq!(inst.dim, cfg.dim, "instance/config dimension mismatch");
+    pub fn new(problem: &'a dyn Problem, cfg: &'a VirtualConfig, mode: Mode) -> Engine<'a> {
+        assert_eq!(problem.dim(), cfg.dim, "problem/config dimension mismatch");
         Engine {
-            inst,
+            problem,
             cfg,
             mode,
             slots: Vec::new(),
@@ -184,7 +218,14 @@ impl<'a> Engine<'a> {
             total_evals: 0,
             cutoff: cfg.budget_s,
             spawn_counter: 0,
+            exec: Exec::default(),
         }
+    }
+
+    /// Attach an execution context (facade evaluator / observer).
+    pub fn with_exec(mut self, exec: Exec<'a>) -> Engine<'a> {
+        self.exec = exec;
+        self
     }
 
     /// Start a descent with coefficient `k` on `comm` at virtual `start_t`.
@@ -192,7 +233,7 @@ impl<'a> Engine<'a> {
         let seed = derive_stream(self.cfg.seed, self.spawn_counter);
         self.spawn_counter += 1;
         let mut stop = self.cfg.ipop.stop.clone();
-        stop.target_f = Some(self.inst.fopt + self.cfg.final_target());
+        stop.target_f = Some(self.problem.fopt() + self.cfg.final_target());
         stop.max_evals = self.cfg.ipop.max_evals;
         let ipop_for_descent = IpopConfig { stop, ..self.cfg.ipop.clone() };
         let descent = ipop::make_descent(
@@ -218,6 +259,13 @@ impl<'a> Engine<'a> {
         let id = self.slots.len();
         self.slots.push(slot);
         self.heap.push(HeapItem { t: start_t, slot: id });
+        self.exec.emit(&Event::DescentStart {
+            slot: id,
+            k,
+            replica,
+            lambda: k * self.cfg.ipop.lambda_start,
+            start_s: start_t,
+        });
         id
     }
 
@@ -232,14 +280,19 @@ impl<'a> Engine<'a> {
     }
 
     fn finalize(&mut self, id: usize, stop: Option<StopReason>) {
-        let s = &mut self.slots[id];
-        s.done = true;
-        s.stop = stop;
+        let (k, replica, end_s) = {
+            let s = &mut self.slots[id];
+            s.done = true;
+            s.stop = stop;
+            (s.k, s.replica, s.t)
+        };
+        self.exec.emit(&Event::DescentEnd { slot: id, k, replica, stop, end_s });
     }
 
     /// Drive the event loop until every descent is done.
     pub fn run(&mut self, policy: &mut dyn Policy) {
-        let inst = self.inst;
+        let problem = self.problem;
+        let fopt = problem.fopt();
         while let Some(HeapItem { t, slot }) = self.heap.pop() {
             if self.slots[slot].done {
                 continue;
@@ -251,12 +304,19 @@ impl<'a> Engine<'a> {
                 continue;
             }
 
-            // One real CMA-ES iteration.
+            // One real CMA-ES iteration, evaluated through the attached
+            // backend (thread pool, …) or a serial closure.
             let lambda = self.slots[slot].descent.params.lambda;
             let report = {
-                let s = &mut self.slots[slot];
-                let mut eval = FnEvaluator(|x: &[f64]| inst.eval(x));
-                s.descent.run_iteration(&mut eval)
+                let (slots, exec) = (&mut self.slots, &mut self.exec);
+                let s = &mut slots[slot];
+                match exec.eval.as_mut() {
+                    Some(ev) => s.descent.run_iteration(&mut **ev),
+                    None => {
+                        let mut eval = FnEvaluator(|x: &[f64]| problem.eval(x));
+                        s.descent.run_iteration(&mut eval)
+                    }
+                }
             };
             self.total_evals += lambda;
 
@@ -276,13 +336,30 @@ impl<'a> Engine<'a> {
                     c
                 }
             };
-            let s = &mut self.slots[slot];
-            s.t += cost.total_s;
-            s.iters += 1;
-            s.hits.observe(report.best_so_far - inst.fopt, s.t);
+            let best_delta = report.best_so_far - fopt;
+            let (k, t_now, iters_now, hit_lo, hit_hi) = {
+                let s = &mut self.slots[slot];
+                s.t += cost.total_s;
+                s.iters += 1;
+                let before = s.hits.hit_count();
+                s.hits.observe(best_delta, s.t);
+                (s.k, s.t, s.iters, before, s.hits.hit_count())
+            };
+            for index in hit_lo..hit_hi {
+                let target = self.cfg.targets[index];
+                self.exec.emit(&Event::TargetHit { slot, index, target, t_s: t_now });
+            }
+            self.exec.emit(&Event::Iteration {
+                slot,
+                k,
+                iter: iters_now,
+                evals: report.evals,
+                best_delta,
+                t_s: t_now,
+            });
 
-            if self.cfg.stop_at_final_target && s.hits.all_hit() {
-                let hit_t = s.hits.hits.last().unwrap().unwrap();
+            if self.cfg.stop_at_final_target && self.slots[slot].hits.all_hit() {
+                let hit_t = self.slots[slot].hits.hits.last().unwrap().unwrap();
                 if hit_t < self.cutoff {
                     self.cutoff = hit_t;
                 }
@@ -298,8 +375,8 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Assemble the run trace after [`run`] returned.
-    pub fn into_trace(self, algo: &'static str, real_t0: Instant) -> RunTrace {
+    /// Assemble the run trace after [`Engine::run`] returned.
+    pub fn into_trace(mut self, algo: &'static str, real_t0: Instant) -> RunTrace {
         let cfg = self.cfg;
         let end_s = self
             .slots
@@ -331,11 +408,19 @@ impl<'a> Engine<'a> {
             fixed.hits[i] = hits.hits[i];
         }
 
+        let fopt = self.problem.fopt();
         let best_delta = self
             .slots
             .iter()
-            .map(|s| s.descent.best_f - self.inst.fopt)
+            .map(|s| s.descent.best_f - fopt)
             .fold(f64::INFINITY, f64::min);
+
+        self.exec.emit(&Event::RunEnd {
+            best_delta,
+            end_s,
+            total_evals: self.total_evals,
+            descents: self.slots.len(),
+        });
 
         let occupancy: Vec<OccupancySpan> = self
             .slots
@@ -355,7 +440,7 @@ impl<'a> Engine<'a> {
                 evals: s.descent.evals,
                 stop: s.stop,
                 hits: s.hits,
-                best_delta: s.descent.best_f - self.inst.fopt,
+                best_delta: s.descent.best_f - fopt,
             })
             .collect();
 
@@ -384,6 +469,7 @@ impl Policy for NoContinuation {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bbob::Instance;
     use crate::cluster::CostModel;
 
     fn cfg(seed: u64) -> VirtualConfig {
@@ -434,5 +520,20 @@ mod tests {
         let a = HeapItem { t: 1.0, slot: 0 };
         let b = HeapItem { t: 2.0, slot: 1 };
         assert!(a > b); // min-heap: smaller time = greater priority
+    }
+
+    #[test]
+    fn engine_accepts_non_bbob_problems() {
+        // A closure problem through the raw engine (the facade normally
+        // does this wiring).
+        let p = crate::api::ClosureProblem::new(4, |x: &[f64]| {
+            x.iter().map(|v| v * v).sum()
+        });
+        let c = cfg(11);
+        let mut eng = Engine::new(&p, &c, Mode::Parallel);
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let tr = eng.into_trace("test", Instant::now());
+        assert!(tr.hits.all_hit(), "best={}", tr.best_delta);
     }
 }

@@ -7,10 +7,10 @@
 
 use std::time::Instant;
 
-use crate::bbob::Instance;
+use crate::api::{Event, Problem};
 use crate::cluster::Communicator;
 
-use super::engine::{Engine, Mode, Policy, RunTrace, VirtualConfig};
+use super::engine::{Engine, Exec, Mode, Policy, RunTrace, VirtualConfig};
 
 struct RestartSameK {
     enabled: bool,
@@ -45,13 +45,28 @@ impl Policy for RestartSameK {
 }
 
 /// Run K-Distributed on `(2·K_max − 1)·λ_start` virtual cores.
-pub fn run_k_distributed(inst: &Instance, cfg: &VirtualConfig) -> RunTrace {
+pub fn run_k_distributed(problem: &dyn Problem, cfg: &VirtualConfig) -> RunTrace {
+    run_k_distributed_exec(problem, cfg, Exec::default())
+}
+
+/// [`run_k_distributed`] with a facade execution context (evaluator
+/// backend and/or telemetry observer).
+pub fn run_k_distributed_exec<'a>(
+    problem: &'a dyn Problem,
+    cfg: &'a VirtualConfig,
+    mut exec: Exec<'a>,
+) -> RunTrace {
     let t0 = Instant::now();
+    exec.emit(&Event::RunStart {
+        algo: super::Algo::KDistributed.name(),
+        dim: cfg.dim,
+        targets: cfg.targets.len(),
+    });
     let ladder = cfg.ipop.ladder();
     let total_cores: usize = ladder.iter().map(|k| k * cfg.ipop.lambda_start).sum();
     let mut rest = Communicator::world(total_cores);
 
-    let mut eng = Engine::new(inst, cfg, Mode::Parallel);
+    let mut eng = Engine::new(problem, cfg, Mode::Parallel).with_exec(exec);
     let mut policy = RestartSameK {
         enabled: cfg.restart_distributed,
         replicas: vec![0; 64],
@@ -68,6 +83,7 @@ pub fn run_k_distributed(inst: &Instance, cfg: &VirtualConfig) -> RunTrace {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bbob::Instance;
     use crate::cluster::CostModel;
     use crate::ipop::IpopConfig;
 

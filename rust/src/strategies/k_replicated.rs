@@ -8,10 +8,10 @@
 
 use std::time::Instant;
 
-use crate::bbob::Instance;
+use crate::api::{Event, Problem};
 use crate::cluster::Communicator;
 
-use super::engine::{Engine, Mode, Policy, RunTrace, VirtualConfig};
+use super::engine::{Engine, Exec, Mode, Policy, RunTrace, VirtualConfig};
 
 struct Node {
     comm: Communicator,
@@ -90,14 +90,29 @@ impl Policy for Tree {
 ///
 /// # Panics
 /// `cfg.ipop.k_max` must be a power of two (Algorithm 3's halving).
-pub fn run_k_replicated(inst: &Instance, cfg: &VirtualConfig) -> RunTrace {
+pub fn run_k_replicated(problem: &dyn Problem, cfg: &VirtualConfig) -> RunTrace {
+    run_k_replicated_exec(problem, cfg, Exec::default())
+}
+
+/// [`run_k_replicated`] with a facade execution context (evaluator
+/// backend and/or telemetry observer).
+pub fn run_k_replicated_exec<'a>(
+    problem: &'a dyn Problem,
+    cfg: &'a VirtualConfig,
+    mut exec: Exec<'a>,
+) -> RunTrace {
     let t0 = Instant::now();
     let k_max = cfg.ipop.k_max;
     assert!(k_max.is_power_of_two(), "K-Replicated requires a power-of-two K_max");
+    exec.emit(&Event::RunStart {
+        algo: super::Algo::KReplicated.name(),
+        dim: cfg.dim,
+        targets: cfg.targets.len(),
+    });
     let world = Communicator::world(k_max * cfg.ipop.lambda_start);
 
     let mut tree = Tree::build(world, k_max);
-    let mut eng = Engine::new(inst, cfg, Mode::Parallel);
+    let mut eng = Engine::new(problem, cfg, Mode::Parallel).with_exec(exec);
     for leaf in tree.leaves() {
         let comm = tree.nodes[leaf].comm;
         let slot = eng.spawn(1, tree.node_of_slot.len(), comm, 0.0);
@@ -110,6 +125,7 @@ pub fn run_k_replicated(inst: &Instance, cfg: &VirtualConfig) -> RunTrace {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bbob::Instance;
     use crate::cluster::CostModel;
     use crate::ipop::IpopConfig;
 

@@ -17,10 +17,14 @@ pub mod k_distributed;
 pub mod k_replicated;
 pub mod sequential;
 
-pub use engine::{DescentTrace, Engine, Mode, NoContinuation, Policy, RunTrace, VirtualConfig};
-pub use k_distributed::run_k_distributed;
-pub use k_replicated::run_k_replicated;
-pub use sequential::run_sequential;
+pub use engine::{
+    DescentTrace, Engine, Exec, Mode, NoContinuation, Policy, RunTrace, VirtualConfig,
+};
+pub use k_distributed::{run_k_distributed, run_k_distributed_exec};
+pub use k_replicated::{run_k_replicated, run_k_replicated_exec};
+pub use sequential::{run_sequential, run_sequential_exec};
+
+use crate::api::Problem;
 
 /// Which strategy — for labelling reports.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -41,12 +45,24 @@ impl Algo {
         }
     }
 
-    /// Run this strategy on one BBOB instance.
-    pub fn run(self, inst: &crate::bbob::Instance, cfg: &VirtualConfig) -> RunTrace {
+    /// Run this strategy on one [`Problem`] (any BBOB instance, closure
+    /// problem, or other workload — see [`crate::api`]).
+    pub fn run(self, problem: &dyn Problem, cfg: &VirtualConfig) -> RunTrace {
+        self.run_exec(problem, cfg, Exec::default())
+    }
+
+    /// [`Algo::run`] with a facade execution context: an evaluator
+    /// backend (e.g. the thread pool) and/or a telemetry observer.
+    pub fn run_exec<'a>(
+        self,
+        problem: &'a dyn Problem,
+        cfg: &'a VirtualConfig,
+        exec: Exec<'a>,
+    ) -> RunTrace {
         match self {
-            Algo::Sequential => run_sequential(inst, cfg),
-            Algo::KReplicated => run_k_replicated(inst, cfg),
-            Algo::KDistributed => run_k_distributed(inst, cfg),
+            Algo::Sequential => run_sequential_exec(problem, cfg, exec),
+            Algo::KReplicated => run_k_replicated_exec(problem, cfg, exec),
+            Algo::KDistributed => run_k_distributed_exec(problem, cfg, exec),
         }
     }
 }

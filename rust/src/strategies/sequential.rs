@@ -3,10 +3,10 @@
 
 use std::time::Instant;
 
-use crate::bbob::Instance;
+use crate::api::{Event, Problem};
 use crate::cluster::Communicator;
 
-use super::engine::{Engine, Mode, Policy, RunTrace, VirtualConfig};
+use super::engine::{Engine, Exec, Mode, Policy, RunTrace, VirtualConfig};
 
 struct Chain {
     ladder: Vec<usize>,
@@ -36,10 +36,25 @@ impl Policy for Chain {
 /// Run the sequential baseline: descents K = 1, 2, 4, … one after the
 /// other, λ serial evaluations per iteration, until the ladder, the
 /// virtual budget, or the final target ends the run.
-pub fn run_sequential(inst: &Instance, cfg: &VirtualConfig) -> RunTrace {
+pub fn run_sequential(problem: &dyn Problem, cfg: &VirtualConfig) -> RunTrace {
+    run_sequential_exec(problem, cfg, Exec::default())
+}
+
+/// [`run_sequential`] with a facade execution context (evaluator backend
+/// and/or telemetry observer).
+pub fn run_sequential_exec<'a>(
+    problem: &'a dyn Problem,
+    cfg: &'a VirtualConfig,
+    mut exec: Exec<'a>,
+) -> RunTrace {
     let t0 = Instant::now();
+    exec.emit(&Event::RunStart {
+        algo: super::Algo::Sequential.name(),
+        dim: cfg.dim,
+        targets: cfg.targets.len(),
+    });
     let ladder = cfg.ipop.ladder();
-    let mut eng = Engine::new(inst, cfg, Mode::Sequential);
+    let mut eng = Engine::new(problem, cfg, Mode::Sequential).with_exec(exec);
     let mut chain = Chain { ladder: ladder.clone(), next: 1 };
     eng.spawn(ladder[0], 0, Communicator::world(1), 0.0);
     eng.run(&mut chain);
@@ -49,6 +64,7 @@ pub fn run_sequential(inst: &Instance, cfg: &VirtualConfig) -> RunTrace {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bbob::Instance;
     use crate::cluster::CostModel;
     use crate::ipop::IpopConfig;
 

@@ -1,0 +1,315 @@
+//! Facade tests: the unified `Solver` builder over problems, strategies,
+//! backends, observers, and JSON reports — including the acceptance path
+//! (a non-BBOB closure objective to a target through all three
+//! strategies AND through the thread-pool backend).
+
+use std::sync::Arc;
+
+use ipopcma::api::{
+    Backend, ClosureProblem, Event, FnObserver, LeastSquares, NoisyRastrigin, Recorder, Solver,
+};
+use ipopcma::cluster::{CostModel, DetCost};
+use ipopcma::strategies::Algo;
+
+fn sphere(dim: usize) -> ClosureProblem<impl Fn(&[f64]) -> f64 + Send + Sync> {
+    ClosureProblem::new(dim, |x: &[f64]| x.iter().map(|v| v * v).sum()).named("sphere")
+}
+
+#[test]
+fn builder_defaults_are_paper_shaped() {
+    let b = Solver::on(sphere(4));
+    let cfg = b.config();
+    assert_eq!(cfg.dim, 4);
+    assert_eq!(cfg.ipop.lambda_start, 8);
+    assert_eq!(cfg.ipop.k_max, 16);
+    assert_eq!(cfg.ipop.multiplier, 2);
+    // σ0 defaults to a quarter of the box width (paper §4.1).
+    assert_eq!(cfg.ipop.sigma0, 2.5);
+    assert_eq!((cfg.ipop.lower, cfg.ipop.upper), (-5.0, 5.0));
+    // 12 h budget, paper target ladder, stop at the final target.
+    assert_eq!(cfg.budget_s, 12.0 * 3600.0);
+    assert_eq!(cfg.targets, ipopcma::metrics::paper_targets());
+    assert!(cfg.stop_at_final_target);
+    assert!(!cfg.restart_distributed);
+    assert_eq!(cfg.seed, 0);
+}
+
+#[test]
+fn builder_knobs_reach_the_config() {
+    let b = Solver::on(sphere(3).with_bounds(-2.0, 2.0))
+        .lambda_start(6)
+        .k_max(4)
+        .sigma0(0.7)
+        .budget_s(100.0)
+        .target(1e-6)
+        .descent_evals(5_000)
+        .eval_budget(20_000)
+        .seed(9);
+    let cfg = b.config();
+    assert_eq!(cfg.ipop.lambda_start, 6);
+    assert_eq!(cfg.ipop.k_max, 4);
+    assert_eq!(cfg.ipop.sigma0, 0.7);
+    assert_eq!((cfg.ipop.lower, cfg.ipop.upper), (-2.0, 2.0));
+    assert_eq!(cfg.budget_s, 100.0);
+    assert_eq!(*cfg.targets.last().unwrap(), 1e-6);
+    // Ladder stays strictly descending with the custom final target.
+    for w in cfg.targets.windows(2) {
+        assert!(w[0] > w[1]);
+    }
+    assert_eq!(cfg.ipop.max_evals, 5_000);
+    assert_eq!(cfg.real_eval_cap, 20_000);
+    assert_eq!(cfg.seed, 9);
+}
+
+/// Acceptance: a closure objective solved to the final 1e-8 target by
+/// all three strategies through the facade.
+#[test]
+fn closure_problem_through_all_three_strategies() {
+    for algo in Algo::ALL {
+        let report = Solver::on(sphere(4))
+            .strategy(algo)
+            .backend(Backend::Serial)
+            .k_max(4)
+            .target(1e-8)
+            .seed(3)
+            .run();
+        assert!(report.solved(), "{} failed: Δf={}", algo.name(), report.best_delta());
+        assert_eq!(report.algo, algo);
+        assert_eq!(report.backend, "serial");
+        assert_eq!(report.problem, "sphere");
+        assert!(report.total_evals() > 0);
+        // Hit times are monotone over the ladder.
+        let hits: Vec<f64> = report.trace.hits.hits.iter().map(|h| h.unwrap()).collect();
+        for w in hits.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}
+
+/// Acceptance: the same closure objective through the real scatter/gather
+/// thread pool, for every strategy.
+#[test]
+fn closure_problem_through_thread_pool_backend() {
+    for algo in Algo::ALL {
+        let pooled = Solver::on(sphere(4))
+            .strategy(algo)
+            .backend(Backend::Threads(3))
+            .k_max(4)
+            .target(1e-8)
+            .seed(5)
+            .run();
+        assert!(pooled.solved(), "{} via pool: Δf={}", algo.name(), pooled.best_delta());
+        assert_eq!(pooled.backend, "threads(3)");
+    }
+}
+
+/// The pool changes *where* evaluations run, never their values: with the
+/// sequential strategy (whose event order does not depend on measured
+/// timings) the pooled trajectory is identical to the serial one.
+#[test]
+fn pool_trajectories_match_serial() {
+    let run = |backend: Backend| {
+        Solver::on(sphere(4))
+            .strategy(Algo::Sequential)
+            .backend(backend)
+            .k_max(4)
+            .target(1e-8)
+            .seed(5)
+            .run()
+    };
+    let serial = run(Backend::Serial);
+    let pooled = run(Backend::Threads(3));
+    assert_eq!(serial.total_evals(), pooled.total_evals());
+    assert_eq!(serial.best_delta(), pooled.best_delta());
+    assert_eq!(serial.trace.descents.len(), pooled.trace.descents.len());
+    for (a, b) in serial.trace.descents.iter().zip(&pooled.trace.descents) {
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.best_delta, b.best_delta);
+    }
+}
+
+#[test]
+fn virtual_backend_is_deterministic() {
+    let cost = CostModel::deterministic(8, 1e-3, DetCost::default());
+    let run = || {
+        Solver::on(sphere(5))
+            .strategy(Algo::KDistributed)
+            .backend(Backend::Virtual(cost))
+            .k_max(4)
+            .target(1e-8)
+            .seed(11)
+            .run()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.solved());
+    assert_eq!(a.total_evals(), b.total_evals());
+    assert_eq!(a.best_delta(), b.best_delta());
+    assert_eq!(a.trace.hits.hits, b.trace.hits.hits);
+    assert_eq!(a.backend, "virtual-cluster");
+}
+
+#[test]
+fn least_squares_fit_solves() {
+    let report = Solver::on(LeastSquares::quadratic_demo())
+        .strategy(Algo::Sequential)
+        .target(1e-8)
+        .seed(2)
+        .run();
+    assert!(report.solved(), "Δf={}", report.best_delta());
+    assert_eq!(report.problem, "quadratic-fit");
+}
+
+#[test]
+fn noisy_rastrigin_reaches_mid_ladder() {
+    // Multiplicative noise keeps the optimum at 0; the restart ladder
+    // must still reach at least the 1e0 precision band.
+    let report = Solver::on(NoisyRastrigin::new(3, 0.01, 7))
+        .strategy(Algo::KDistributed)
+        .k_max(8)
+        .descent_evals(30_000)
+        .eval_budget(300_000)
+        .seed(4)
+        .run();
+    // Even a run stuck in the best local minimum sits near Δf ≈ 1, so
+    // these margins only require reaching the optimum's basin family.
+    assert!(report.best_delta() < 2.0, "Δf={}", report.best_delta());
+    assert!(report.targets_hit() >= 4, "hit {} targets", report.targets_hit());
+}
+
+#[test]
+fn observer_event_ordering() {
+    let mut rec = Recorder::new();
+    let report = Solver::on(sphere(4))
+        .strategy(Algo::Sequential)
+        .k_max(4)
+        .target(1e-8)
+        .seed(8)
+        .run_observed(&mut rec);
+    assert!(report.solved());
+    let ev = &rec.events;
+    assert!(ev.len() >= 4, "got {} events", ev.len());
+
+    // RunStart first, RunEnd last — and exactly one of each.
+    assert!(matches!(ev.first().unwrap(), Event::RunStart { algo: "sequential-ipop", .. }));
+    assert!(matches!(ev.last().unwrap(), Event::RunEnd { .. }));
+    assert_eq!(rec.count(|e| matches!(e, Event::RunStart { .. })), 1);
+    assert_eq!(rec.count(|e| matches!(e, Event::RunEnd { .. })), 1);
+
+    // Per slot: DescentStart < every Iteration/TargetHit < DescentEnd.
+    let pos = |pred: &dyn Fn(&Event) -> bool| -> Vec<usize> {
+        ev.iter().enumerate().filter(|&(_, e)| pred(e)).map(|(i, _)| i).collect()
+    };
+    let starts = pos(&|e| matches!(e, Event::DescentStart { .. }));
+    let ends = pos(&|e| matches!(e, Event::DescentEnd { .. }));
+    assert_eq!(starts.len(), report.trace.descents.len());
+    assert_eq!(ends.len(), starts.len());
+    for (i, e) in ev.iter().enumerate() {
+        let slot = match e {
+            Event::Iteration { slot, .. } | Event::TargetHit { slot, .. } => *slot,
+            _ => continue,
+        };
+        let start_i = ev
+            .iter()
+            .position(|x| matches!(x, Event::DescentStart { slot: s, .. } if *s == slot))
+            .unwrap();
+        let end_i = ev
+            .iter()
+            .position(|x| matches!(x, Event::DescentEnd { slot: s, .. } if *s == slot))
+            .unwrap();
+        assert!(start_i < i && i < end_i, "event {i} outside its descent window");
+    }
+
+    // Per slot: TargetHit indices ascend and iteration times are
+    // monotone (each descent has its own ladder and timeline).
+    let mut last_hit_index: std::collections::HashMap<usize, usize> = Default::default();
+    let mut last_t: std::collections::HashMap<usize, f64> = Default::default();
+    for e in ev {
+        match e {
+            Event::TargetHit { slot, index, .. } => {
+                if let Some(prev) = last_hit_index.get(slot) {
+                    assert!(index > prev, "ladder indices must ascend per slot");
+                }
+                last_hit_index.insert(*slot, *index);
+            }
+            Event::Iteration { slot, t_s, .. } => {
+                if let Some(prev) = last_t.get(slot) {
+                    assert!(t_s >= prev, "iteration time went backwards in slot {slot}");
+                }
+                last_t.insert(*slot, *t_s);
+            }
+            _ => {}
+        }
+    }
+    // Every per-descent first hit produced exactly one event (descents
+    // each carry their own ladder, so sum per descent, not the merged
+    // strategy-level count).
+    let per_descent_hits: usize =
+        report.trace.descents.iter().map(|d| d.hits.hit_count()).sum();
+    assert_eq!(
+        rec.count(|e| matches!(e, Event::TargetHit { .. })),
+        per_descent_hits,
+    );
+
+    // Closures work as observers through the FnObserver adapter.
+    let mut n = 0usize;
+    let _ = Solver::on(sphere(4))
+        .k_max(2)
+        .target(1e-2)
+        .eval_budget(50_000)
+        .run_observed(&mut FnObserver(|_e: &Event| n += 1));
+    assert!(n > 0);
+}
+
+#[test]
+fn json_report_round_trips() {
+    let report = Solver::on(sphere(4)).k_max(4).target(1e-8).seed(6).run();
+    let text = report.to_json_string();
+    let parsed = ipopcma::runtime::json::Json::parse(&text).expect("report JSON must parse");
+    assert_eq!(parsed.get("problem").unwrap().as_str(), Some("sphere"));
+    assert_eq!(parsed.get("algo").unwrap().as_str(), Some("sequential-ipop"));
+    assert_eq!(parsed.get("dim").unwrap().as_usize(), Some(4));
+    assert_eq!(
+        parsed.get("total_evals").unwrap().as_usize(),
+        Some(report.total_evals())
+    );
+    let descents = parsed.get("descents").unwrap().as_arr().unwrap();
+    assert_eq!(descents.len(), report.trace.descents.len());
+    let hits = parsed.get("hits").unwrap().as_arr().unwrap();
+    assert_eq!(hits.len(), report.targets.len());
+    // Solved run: every hit is a number.
+    assert!(hits.iter().all(|h| h.as_f64().is_some()));
+    // λ of each descent is k·λ_start.
+    let k0 = descents[0].get("k").unwrap().as_usize().unwrap();
+    let l0 = descents[0].get("lambda").unwrap().as_usize().unwrap();
+    assert_eq!(l0, k0 * report.lambda_start);
+}
+
+#[test]
+fn shared_problem_runs_all_strategies_without_cloning() {
+    let inst = Arc::new(ipopcma::bbob::Instance::new(1, 4, 1));
+    for algo in Algo::ALL {
+        let report = Solver::on_shared(Arc::clone(&inst))
+            .strategy(algo)
+            .k_max(4)
+            .target(1e-8)
+            .seed(1)
+            .run();
+        assert!(report.solved(), "{} failed", algo.name());
+        // BBOB instances carry their own fopt; deltas are relative to it.
+        assert!(report.best_delta() >= 0.0);
+    }
+}
+
+#[test]
+fn bounds_drive_initialization() {
+    // A problem whose box excludes the optimum region start: still found.
+    let p = ClosureProblem::new(3, |x: &[f64]| {
+        x.iter().map(|v| (v - 1.0) * (v - 1.0)).sum()
+    })
+    .with_bounds(0.0, 4.0)
+    .named("shifted-sphere");
+    let report = Solver::on(p).k_max(4).target(1e-8).seed(12).run();
+    assert!(report.solved(), "Δf={}", report.best_delta());
+}
