@@ -1,0 +1,138 @@
+//! Checkpoint overhead — real cost of durability: per-snapshot capture,
+//! JSON encode, and atomic disk append versus the per-generation compute
+//! of the descent, for d ∈ {10, 40, 100}.
+//!
+//! `cargo bench --bench bench_checkpoint` — writes
+//! bench_out/checkpoint.csv.
+
+use std::time::Instant;
+
+use ipopcma::bbob::Instance;
+use ipopcma::cluster::{Communicator, CostModel, DetCost};
+use ipopcma::ipop::IpopConfig;
+use ipopcma::persist::{encode_snapshot, SnapshotStore};
+use ipopcma::report::{ascii_table, Csv};
+use ipopcma::strategies::{Algo, Engine, Mode, NoContinuation, VirtualConfig};
+
+fn main() {
+    let lambda_start = 8;
+    let cadence = 25usize; // the facade default checkpoint_every
+    let reps = 40;
+    let mut csv = Csv::new(&[
+        "dim",
+        "iters",
+        "iter_ms",
+        "capture_ms",
+        "encode_ms",
+        "append_ms",
+        "snapshot_bytes",
+        "overhead_pct_at_every_25",
+    ]);
+    let mut rows = Vec::new();
+    let mut sink = 0usize; // defeat dead-code elimination without black_box
+
+    for &dim in &[10usize, 40, 100] {
+        let mut ipop = IpopConfig::bbob(lambda_start, 1);
+        ipop.max_evals = if dim >= 100 { 4_000 } else { 10_000 };
+        let cfg = VirtualConfig {
+            ipop,
+            dim,
+            cost: CostModel::deterministic(lambda_start, 0.0, DetCost::default()),
+            budget_s: 1e9,
+            targets: ipopcma::metrics::paper_targets(),
+            stop_at_final_target: false,
+            restart_distributed: false,
+            real_eval_cap: 1_000_000,
+            seed: 1,
+        };
+        let inst = Instance::new(8, dim, 1); // Rosenbrock: long descents
+
+        // A real mid-run state to photograph, plus the baseline
+        // per-generation compute time.
+        let t_run = Instant::now();
+        let mut eng = Engine::new(&inst, &cfg, Mode::Parallel, Algo::KDistributed);
+        eng.spawn(1, 0, Communicator::world(lambda_start), 0.0);
+        eng.run(&mut NoContinuation);
+        let run_s = t_run.elapsed().as_secs_f64();
+        let snap = eng.snapshot();
+        let iters: usize = snap.slots.iter().map(|s| s.iters).sum();
+        let iter_ms = 1e3 * run_s / iters.max(1) as f64;
+
+        // Capture: clone the resumable state out of the live engine.
+        let t = Instant::now();
+        for _ in 0..reps {
+            sink += eng.snapshot().slots.len();
+        }
+        let capture_ms = 1e3 * t.elapsed().as_secs_f64() / reps as f64;
+
+        // Encode: state → bit-exact JSON text.
+        let mut bytes = 0usize;
+        let t = Instant::now();
+        for _ in 0..reps {
+            let mut text = String::new();
+            encode_snapshot(&snap).write(&mut text);
+            bytes = text.len();
+            sink += text.len();
+        }
+        let encode_ms = 1e3 * t.elapsed().as_secs_f64() / reps as f64;
+
+        // Append: encode + temp-file write + rename + manifest rewrite.
+        let dir = std::env::temp_dir()
+            .join(format!("ipopcma-bench-checkpoint-{dim}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = SnapshotStore::open(&dir).expect("open store");
+        let t = Instant::now();
+        for _ in 0..reps {
+            store.append(&snap).expect("append snapshot");
+        }
+        let append_ms = 1e3 * t.elapsed().as_secs_f64() / reps as f64;
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // One durable checkpoint (capture + append, append includes the
+        // encode) amortized over the default cadence, vs one generation.
+        let overhead_pct = 100.0 * (capture_ms + append_ms) / (cadence as f64 * iter_ms);
+
+        csv.row(&[
+            dim.to_string(),
+            iters.to_string(),
+            format!("{iter_ms:.4}"),
+            format!("{capture_ms:.4}"),
+            format!("{encode_ms:.4}"),
+            format!("{append_ms:.4}"),
+            bytes.to_string(),
+            format!("{overhead_pct:.3}"),
+        ]);
+        rows.push(vec![
+            dim.to_string(),
+            format!("{iter_ms:.3} ms"),
+            format!("{capture_ms:.3} ms"),
+            format!("{encode_ms:.3} ms"),
+            format!("{append_ms:.3} ms"),
+            format!("{:.1} KiB", bytes as f64 / 1024.0),
+            format!("{overhead_pct:.2}%"),
+        ]);
+    }
+
+    csv.write_to("bench_out/checkpoint.csv").expect("write csv");
+    println!(
+        "{}",
+        ascii_table(
+            "Checkpoint overhead per snapshot vs per-generation compute (K=1, λ=8)",
+            &[
+                "dim".into(),
+                "iter".into(),
+                "capture".into(),
+                "encode".into(),
+                "append".into(),
+                "size".into(),
+                "overhead @every=25".into(),
+            ],
+            &rows,
+        )
+    );
+    println!(
+        "snapshot size is dominated by the two n×n matrices (C, B·D): it grows\n\
+         quadratically with dim, but at the default cadence the amortized overhead\n\
+         stays a small fraction of compute. CSV: bench_out/checkpoint.csv  [{sink}]"
+    );
+}

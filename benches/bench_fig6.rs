@@ -30,7 +30,12 @@ fn main() {
         let fids = [1usize, 8, 12, 17];
         for &fid in &fids {
             let inst = Instance::new(fid, dim, 1);
-            let mut eng = Engine::new(&inst, &cfg, Mode::Parallel);
+            let mut eng = Engine::new(
+                &inst,
+                &cfg,
+                Mode::Parallel,
+                ipopcma::strategies::Algo::KDistributed,
+            );
             eng.spawn(k, 0, Communicator::world(k * lambda_start), 0.0);
             eng.run(&mut ipopcma::strategies::engine::NoContinuation);
             main_share += eng.comm.main_comm_share();

@@ -17,7 +17,9 @@ use ipopcma::strategies::{Algo, Engine, Mode, RunTrace};
 /// rest of the machine idles.
 fn run_naive(inst: &Instance, cfg: &ipopcma::strategies::VirtualConfig) -> RunTrace {
     let t0 = std::time::Instant::now();
-    let mut eng = Engine::new(inst, cfg, Mode::Parallel);
+    // Labelled Sequential: it is the sequential ladder, merely evaluated
+    // on the parallel machine (Mode::Parallel charges parallel costs).
+    let mut eng = Engine::new(inst, cfg, Mode::Parallel, Algo::Sequential);
     // Chain descents manually: spawn next K when the previous stops.
     let ladder = cfg.ipop.ladder();
     let mut slot = eng.spawn(ladder[0], 0, Communicator::world(ladder[0] * cfg.ipop.lambda_start), 0.0);
@@ -32,7 +34,7 @@ fn run_naive(inst: &Instance, cfg: &ipopcma::strategies::VirtualConfig) -> RunTr
         next += 1;
         slot = eng.spawn(k, 0, Communicator::world(k * cfg.ipop.lambda_start), s.0);
     }
-    eng.into_trace("naive-successive", t0)
+    eng.into_trace(t0)
 }
 
 fn main() {

@@ -34,6 +34,9 @@
 //! | [`SolverBuilder::target`] / [`SolverBuilder::targets`] | the precision ladder ε ∈ {10², …, 10⁻⁸} of §4.3.1 |
 //! | [`SolverBuilder::restart_distributed`] | §5's recommendation to restart stopped K-Distributed descents |
 //! | [`SolverBuilder::run_observed`] / [`Observer`] | per-iteration telemetry (the serving-layer hook; no direct paper analogue) |
+//! | [`SolverBuilder::checkpoint_every`] / [`SolverBuilder::checkpoint_dir`] | durable snapshots of the full IPOP restart state (see below) |
+//! | [`SolverBuilder::resume_from`] | continue a killed run bit-identically from its last snapshot |
+//! | [`SolverBuilder::fault_plan`] | virtual rank failures / stragglers answered with the paper's recovery cost (§4.1) |
 //! | [`RunReport`] | first-hit times per target feeding ERT/ECDF (§4.3.1) via [`crate::metrics`] |
 //!
 //! Deployment strategies never touch the objective directly: the engine
@@ -41,13 +44,48 @@
 //! [`LeastSquares`] fit, or a BBOB instance all run identically on all
 //! three strategies — and identically again on the thread pool, whose
 //! trajectories are bit-equal to serial evaluation.
+//!
+//! # Durability & fault injection
+//!
+//! The paper's 12-hour, 6144-core campaigns (§4.1) make checkpointing a
+//! first-class concern: a rank failure hours into an IPOP ladder must
+//! not lose the ladder. The facade exposes the [`crate::persist`]
+//! subsystem through three knobs:
+//!
+//! * [`SolverBuilder::checkpoint_every`]`(n)` +
+//!   [`SolverBuilder::checkpoint_dir`]`(dir)` — every `n` engine
+//!   iterations, atomically write a numbered snapshot of the *complete*
+//!   resumable state: every descent's `CmaState` (m, σ, C, B·D, paths,
+//!   generation — §2.1), the position in the IPOP restart ladder
+//!   (which K values ran, which replicas — §2.2/§IPOP), the exact RNG
+//!   stream positions, per-target hit times, and the virtual clock.
+//!   Each write emits [`Event::Checkpoint`].
+//! * [`SolverBuilder::resume_from`]`(path)` — rebuild the run from a
+//!   snapshot file (or the latest snapshot in a directory) and continue.
+//!   Because snapshots are bit-exact (float bits, not decimal text) and
+//!   include the restart ladder and RNG positions, a resumed run with a
+//!   deterministic cost model ([`crate::cluster::CostModel::deterministic`])
+//!   reproduces the uninterrupted run's trajectory *bit-for-bit*: same
+//!   hits, same virtual end time, same evaluation counts. Emits
+//!   [`Event::Restored`].
+//! * [`SolverBuilder::fault_plan`] — inject
+//!   [`crate::cluster::FaultPlan`] failures into the virtual cluster: a
+//!   rank dies at virtual time t ([`Event::Fault`]), or a straggler
+//!   slows a core range by a factor. The engine answers a rank death
+//!   with the paper's recovery policy: reload the descent's last
+//!   in-memory snapshot onto the surviving cores and continue, charging
+//!   the §4.1 α·log₂P + β·bytes model for re-scattering the full CMA-ES
+//!   state ([`Event::Recovered`]). Lost iterations are replayed, so the
+//!   search trajectory is unchanged while the virtual clock pays for the
+//!   failure — exactly how a restart-from-checkpoint behaves on a real
+//!   machine.
 
 pub mod backend;
-pub mod observer;
-pub mod problem;
 pub mod solver;
 
+pub use crate::core::{
+    ClosureProblem, Event, FnObserver, LeastSquares, NoisyRastrigin, Observer, Problem,
+    Recorder,
+};
 pub use backend::Backend;
-pub use observer::{Event, FnObserver, Observer, Recorder};
-pub use problem::{ClosureProblem, LeastSquares, NoisyRastrigin, Problem};
 pub use solver::{RunReport, Solver, SolverBuilder};

@@ -16,20 +16,21 @@
 //! ```
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::cluster::CostModel;
-use crate::cmaes::StopConfig;
+use crate::cluster::{CostModel, FaultPlan};
+use crate::cmaes::{BatchEvaluator, StopConfig};
+use crate::core::{Observer, Problem};
 use crate::evaluator::ThreadPoolEvaluator;
 use crate::ipop::IpopConfig;
 use crate::metrics::paper_targets;
+use crate::persist::SnapshotStore;
 use crate::runtime::json::Json;
-use crate::strategies::{Algo, Exec, RunTrace, VirtualConfig};
+use crate::strategies::{Algo, Checkpoint, Exec, RunTrace, SnapshotSink, VirtualConfig};
 
 use super::backend::Backend;
-use super::observer::Observer;
-use super::problem::Problem;
 
 /// Entry point of the facade: `Solver::on(problem)` starts a
 /// [`SolverBuilder`].
@@ -59,6 +60,10 @@ impl Solver {
             restart_distributed: false,
             stop_at_final_target: true,
             override_cfg: None,
+            checkpoint_dir: None,
+            checkpoint_every: 25,
+            resume_from: None,
+            faults: None,
         }
     }
 }
@@ -81,6 +86,10 @@ pub struct SolverBuilder<P> {
     restart_distributed: bool,
     stop_at_final_target: bool,
     override_cfg: Option<VirtualConfig>,
+    checkpoint_dir: Option<PathBuf>,
+    checkpoint_every: usize,
+    resume_from: Option<PathBuf>,
+    faults: Option<FaultPlan>,
 }
 
 impl<P: Problem + 'static> SolverBuilder<P> {
@@ -172,6 +181,45 @@ impl<P: Problem + 'static> SolverBuilder<P> {
         self
     }
 
+    /// Persist a full resumable snapshot into `dir` every
+    /// [`SolverBuilder::checkpoint_every`] engine iterations (see
+    /// [`crate::persist`]). The directory is created if needed; numbered
+    /// `snap-NNNNNN.json` files are written atomically alongside a
+    /// human-readable `manifest.json`.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Checkpoint cadence in engine iterations (default 25). Only takes
+    /// effect when [`SolverBuilder::checkpoint_dir`] is set.
+    pub fn checkpoint_every(mut self, iters: usize) -> Self {
+        assert!(iters >= 1, "checkpoint cadence must be at least 1");
+        self.checkpoint_every = iters;
+        self
+    }
+
+    /// Continue a previous run from a snapshot: `path` may be a single
+    /// `snap-NNNNNN.json` file or a checkpoint directory (its newest
+    /// snapshot is used). The run's configuration — strategy, ladder
+    /// position, cost model, seed — comes from the snapshot; this
+    /// builder's search knobs are ignored, but its backend, observer,
+    /// checkpointing, and fault plan still apply.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Inject faults (rank failures, stragglers) at virtual times — see
+    /// [`crate::cluster::FaultPlan`]. Rank failures trigger the recovery
+    /// policy: roll the affected descent back to its last in-memory
+    /// backup, shrink its communicator, and charge the §4.1 cost model
+    /// for the re-scatter.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Expert escape hatch: run with this exact [`VirtualConfig`],
     /// bypassing every other knob — used by the benchmark harness to
     /// keep its scaled paper configurations byte-identical.
@@ -216,45 +264,113 @@ impl<P: Problem + 'static> SolverBuilder<P> {
         }
     }
 
-    /// Run without telemetry.
+    /// Run without telemetry. Panics on a durability error (unreadable
+    /// resume snapshot, unwritable checkpoint directory) — use
+    /// [`SolverBuilder::try_run`] to handle those gracefully.
     pub fn run(self) -> RunReport {
         self.execute(None)
+            .unwrap_or_else(|e| panic!("ipopcma solver: {e}"))
     }
 
     /// Run, streaming [`crate::api::Event`]s into `observer`.
     pub fn run_observed(self, observer: &mut dyn Observer) -> RunReport {
         self.execute(Some(observer))
+            .unwrap_or_else(|e| panic!("ipopcma solver: {e}"))
     }
 
-    fn execute(self, observer: Option<&mut dyn Observer>) -> RunReport {
-        let cfg = self.config();
+    /// [`SolverBuilder::run`], surfacing durability errors instead of
+    /// panicking.
+    pub fn try_run(self) -> Result<RunReport, String> {
+        self.execute(None)
+    }
+
+    /// [`SolverBuilder::run_observed`], surfacing durability errors
+    /// instead of panicking.
+    pub fn try_run_observed(
+        self,
+        observer: &mut dyn Observer,
+    ) -> Result<RunReport, String> {
+        self.execute(Some(observer))
+    }
+
+    fn execute(self, observer: Option<&mut dyn Observer>) -> Result<RunReport, String> {
         let backend_label = self.backend.label();
         let t0 = Instant::now();
-        let trace = match self.backend {
+
+        // Resume path: the snapshot carries the run's full configuration.
+        let resume_snap = match &self.resume_from {
+            Some(path) => {
+                let snap = SnapshotStore::load_resume(path).map_err(|e| e.to_string())?;
+                if snap.problem != self.problem.name() {
+                    return Err(format!(
+                        "snapshot is of problem '{}', not '{}'",
+                        snap.problem,
+                        self.problem.name()
+                    ));
+                }
+                if snap.dim != self.problem.dim() {
+                    return Err(format!(
+                        "snapshot dimension {} does not match problem dimension {}",
+                        snap.dim,
+                        self.problem.dim()
+                    ));
+                }
+                Some(snap)
+            }
+            None => None,
+        };
+        let fresh_cfg = match &resume_snap {
+            Some(_) => None,
+            None => Some(self.config()),
+        };
+
+        let mut store = match &self.checkpoint_dir {
+            Some(dir) => Some(SnapshotStore::open(dir).map_err(|e| e.to_string())?),
+            None => None,
+        };
+
+        let mut pool = match self.backend {
             Backend::Threads(workers) => {
                 let shared = Arc::clone(&self.problem);
-                let mut pool = ThreadPoolEvaluator::new(
+                Some(ThreadPoolEvaluator::new(
                     Arc::new(move |x: &[f64]| shared.eval(x)),
                     workers.max(1),
-                );
-                self.algo.run_exec(
-                    &*self.problem,
-                    &cfg,
-                    Exec { eval: Some(&mut pool), observer },
-                )
+                ))
             }
-            _ => self.algo.run_exec(&*self.problem, &cfg, Exec { eval: None, observer }),
+            _ => None,
         };
-        RunReport {
+
+        let exec = Exec {
+            eval: pool.as_mut().map(|p| p as &mut dyn BatchEvaluator),
+            observer,
+            checkpoint: store.as_mut().map(|s| Checkpoint {
+                every: self.checkpoint_every,
+                sink: s as &mut dyn SnapshotSink,
+            }),
+            faults: self.faults.as_ref(),
+        };
+
+        let (trace, algo, cfg) = match (&resume_snap, &fresh_cfg) {
+            (Some(snap), _) => (
+                snap.algo.resume_exec(&*self.problem, snap, exec),
+                snap.algo,
+                &snap.cfg,
+            ),
+            (None, Some(cfg)) => {
+                (self.algo.run_exec(&*self.problem, cfg, exec), self.algo, cfg)
+            }
+            (None, None) => unreachable!(),
+        };
+        Ok(RunReport {
             problem: self.problem.name().to_string(),
             dim: cfg.dim,
-            algo: self.algo,
+            algo,
             backend: backend_label,
             lambda_start: cfg.ipop.lambda_start,
-            targets: cfg.targets,
+            targets: cfg.targets.clone(),
             trace,
             wall_s: t0.elapsed().as_secs_f64(),
-        }
+        })
     }
 }
 

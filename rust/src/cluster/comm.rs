@@ -3,6 +3,11 @@
 //! A [`Communicator`] is a contiguous block of virtual cores. The only
 //! operation the strategies need is the recursive halving of Algorithm 3
 //! (`MPI_Comm_split` on `rank ≤ size/2`), plus size/rank bookkeeping.
+//! Bad sizes (odd halves, oversized carves) are reported as typed
+//! [`CommError`]s rather than panics, so strategy construction can
+//! surface configuration mistakes to the facade.
+
+use std::fmt;
 
 /// A contiguous set of virtual cores `[offset, offset + cores)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -11,6 +16,30 @@ pub struct Communicator {
     pub cores: usize,
 }
 
+/// A communicator operation received an impossible size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// [`Communicator::split_half`] on an odd or sub-2-core communicator.
+    UnevenSplit { cores: usize },
+    /// [`Communicator::take`] asked for more cores than are available.
+    TakeTooMany { want: usize, have: usize },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::UnevenSplit { cores } => {
+                write!(f, "cannot halve a communicator of {cores} cores")
+            }
+            CommError::TakeTooMany { want, have } => {
+                write!(f, "cannot take {want} cores from a communicator of {have}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
 impl Communicator {
     /// The "world" communicator over `cores` cores.
     pub fn world(cores: usize) -> Communicator {
@@ -18,26 +47,34 @@ impl Communicator {
     }
 
     /// `MPI_Comm_split` into two halves of equal size (Algorithm 3).
-    ///
-    /// # Panics
-    /// Panics if the size is odd or too small to split.
-    pub fn split_half(self) -> (Communicator, Communicator) {
-        assert!(self.cores >= 2 && self.cores % 2 == 0, "cannot halve {} cores", self.cores);
+    /// Errors if the size is odd or too small to split.
+    pub fn split_half(self) -> Result<(Communicator, Communicator), CommError> {
+        if self.cores < 2 || self.cores % 2 != 0 {
+            return Err(CommError::UnevenSplit { cores: self.cores });
+        }
         let half = self.cores / 2;
-        (
+        Ok((
             Communicator { offset: self.offset, cores: half },
             Communicator { offset: self.offset + half, cores: half },
-        )
+        ))
     }
 
     /// Split off the first `cores` cores (used by K-Distributed to carve
-    /// one sub-communicator per population size).
-    pub fn take(self, cores: usize) -> (Communicator, Communicator) {
-        assert!(cores <= self.cores);
-        (
+    /// one sub-communicator per population size). Errors if more cores
+    /// are requested than the communicator holds.
+    pub fn take(self, cores: usize) -> Result<(Communicator, Communicator), CommError> {
+        if cores > self.cores {
+            return Err(CommError::TakeTooMany { want: cores, have: self.cores });
+        }
+        Ok((
             Communicator { offset: self.offset, cores },
             Communicator { offset: self.offset + cores, cores: self.cores - cores },
-        )
+        ))
+    }
+
+    /// Does this communicator contain virtual core `core`?
+    pub fn contains(&self, core: usize) -> bool {
+        core >= self.offset && core < self.offset + self.cores
     }
 
     /// Number of MPI processes this communicator holds given `threads`
@@ -54,10 +91,25 @@ mod tests {
     #[test]
     fn halving_partitions() {
         let w = Communicator::world(96);
-        let (a, b) = w.split_half();
+        let (a, b) = w.split_half().unwrap();
         assert_eq!(a.cores + b.cores, 96);
         assert_eq!(a.offset, 0);
         assert_eq!(b.offset, 48);
+    }
+
+    #[test]
+    fn halving_odd_or_tiny_is_typed_error() {
+        assert_eq!(
+            Communicator::world(7).split_half(),
+            Err(CommError::UnevenSplit { cores: 7 })
+        );
+        assert_eq!(
+            Communicator::world(1).split_half(),
+            Err(CommError::UnevenSplit { cores: 1 })
+        );
+        // Errors are displayable (facade surfaces them as strings).
+        let msg = CommError::UnevenSplit { cores: 7 }.to_string();
+        assert!(msg.contains('7'), "{msg}");
     }
 
     #[test]
@@ -68,7 +120,7 @@ mod tests {
             comms = comms
                 .into_iter()
                 .flat_map(|c| {
-                    let (a, b) = c.split_half();
+                    let (a, b) = c.split_half().unwrap();
                     [a, b]
                 })
                 .collect();
@@ -84,10 +136,27 @@ mod tests {
     #[test]
     fn take_carves_prefix() {
         let w = Communicator::world(100);
-        let (a, rest) = w.take(24);
+        let (a, rest) = w.take(24).unwrap();
         assert_eq!(a.cores, 24);
         assert_eq!(rest.offset, 24);
         assert_eq!(rest.cores, 76);
+    }
+
+    #[test]
+    fn take_too_many_is_typed_error() {
+        assert_eq!(
+            Communicator::world(10).take(11),
+            Err(CommError::TakeTooMany { want: 11, have: 10 })
+        );
+    }
+
+    #[test]
+    fn containment() {
+        let c = Communicator { offset: 6, cores: 12 };
+        assert!(c.contains(6));
+        assert!(c.contains(17));
+        assert!(!c.contains(5));
+        assert!(!c.contains(18));
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Fault injection for the virtual cluster: scripted rank failures and
+//! stragglers, answered by the engine with a recovery policy.
+//!
+//! The paper's Fugaku campaigns span thousands of cores for hours —
+//! rank failures and slow nodes are facts of life at that scale. A
+//! [`FaultPlan`] scripts them deterministically on the virtual clock:
+//!
+//! * [`FaultKind::RankFailure`] — virtual core `core` dies at time
+//!   `t_s`. The descent whose communicator holds that core loses its
+//!   iteration in flight; the engine reloads the descent's last
+//!   in-memory snapshot onto the surviving cores and continues,
+//!   charging [`CostModel::recovery_rescatter_s`] (the §4.1
+//!   α·log₂P + β·bytes model applied to re-broadcasting the full
+//!   CMA-ES state) to the virtual clock. Lost generations are replayed
+//!   bit-identically (same RNG stream), so only the clock — not the
+//!   search trajectory — pays for the failure.
+//! * [`FaultKind::Straggler`] — a core evaluates `factor`× slower over
+//!   the window `[t_s, until_s]`, stretching the evaluation wall time
+//!   of every iteration whose descent holds that core (one slow core
+//!   delays the whole scatter/gather barrier, §3.2.1).
+//!
+//! Plans are pure data and live outside [`super::CostModel`] /
+//! `VirtualConfig`, threaded through the strategy `Exec` context, so a
+//! faulted run shares its configuration byte-for-byte with the
+//! fault-free baseline it is compared against.
+
+use super::CostModel;
+
+/// What goes wrong, and when (virtual seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Virtual core `core` dies permanently at the fault time.
+    RankFailure { core: usize },
+    /// Virtual core `core` runs `factor`× slower until `until_s`.
+    Straggler { core: usize, factor: f64, until_s: f64 },
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fault {
+    /// Virtual time at which the fault strikes.
+    pub t_s: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of virtual-cluster faults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// In-memory recovery snapshots are refreshed every this many
+    /// descent generations (the rollback distance a rank failure costs).
+    pub backup_every: usize,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { faults: Vec::new(), backup_every: 8 }
+    }
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule virtual core `core` to die at virtual time `t_s`.
+    pub fn kill_rank(mut self, core: usize, t_s: f64) -> Self {
+        assert!(t_s >= 0.0);
+        self.faults.push(Fault { t_s, kind: FaultKind::RankFailure { core } });
+        self
+    }
+
+    /// Make virtual core `core` run `factor`× slower over
+    /// `[from_s, until_s]`.
+    pub fn straggler(mut self, core: usize, factor: f64, from_s: f64, until_s: f64) -> Self {
+        assert!(factor >= 1.0, "straggler factor must be >= 1");
+        assert!(from_s >= 0.0 && until_s > from_s);
+        self.faults
+            .push(Fault { t_s: from_s, kind: FaultKind::Straggler { core, factor, until_s } });
+        self
+    }
+
+    /// Refresh the in-memory recovery snapshots every `gens` descent
+    /// generations (default 8). Smaller = less replay after a failure,
+    /// more capture overhead.
+    pub fn backup_every(mut self, gens: usize) -> Self {
+        assert!(gens >= 1);
+        self.backup_every = gens;
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+impl CostModel {
+    /// Virtual cost of recovering a descent after a rank failure: the
+    /// surviving cores must receive the full resumable CMA-ES state
+    /// (C, B·D, mean, σ, both paths — (n² + O(n))·8 bytes… dominated by
+    /// the two n×n matrices) via a broadcast tree, charged with the same
+    /// α·log₂P + β·bytes constants as the per-iteration scatter (§4.1).
+    pub fn recovery_rescatter_s(&self, n: usize, cores: usize) -> f64 {
+        let procs = cores.div_ceil(self.threads).max(1);
+        let state_bytes = ((2 * n * n + 4 * n + 2) * 8) as f64;
+        let hops = (procs as f64).log2().ceil().max(1.0);
+        self.alpha_s * hops + state_bytes * self.beta_s_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_builder_accumulates() {
+        let p = FaultPlan::new()
+            .kill_rank(3, 10.0)
+            .straggler(0, 4.0, 5.0, 25.0)
+            .backup_every(4);
+        assert_eq!(p.faults.len(), 2);
+        assert_eq!(p.backup_every, 4);
+        assert!(!p.is_empty());
+        assert!(matches!(p.faults[0].kind, FaultKind::RankFailure { core: 3 }));
+    }
+
+    #[test]
+    fn recovery_cost_positive_and_grows_with_dim() {
+        let cm = CostModel::fugaku_like(12, 0.0);
+        let small = cm.recovery_rescatter_s(10, 24);
+        let large = cm.recovery_rescatter_s(100, 24);
+        assert!(small > 0.0);
+        assert!(large > small);
+        // More processes → more hops.
+        let wide = cm.recovery_rescatter_s(10, 24 * 16);
+        assert!(wide > small);
+    }
+}

@@ -22,8 +22,10 @@
 //! core-occupancy timelines of Figs. 2–4.
 
 pub mod comm;
+pub mod fault;
 
-pub use comm::Communicator;
+pub use comm::{CommError, Communicator};
+pub use fault::{Fault, FaultKind, FaultPlan};
 
 use crate::cmaes::Timings;
 

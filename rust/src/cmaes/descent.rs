@@ -6,12 +6,43 @@
 use std::time::Instant;
 
 use crate::linalg::Matrix;
-use crate::rng::NormalSource;
+use crate::rng::{NormalSource, RngState};
 
 use super::compute::Compute;
 use super::params::CmaParams;
 use super::state::CmaState;
 use super::stopping::{check, StopConfig, StopInputs, StopReason, StopState};
+
+/// The complete resumable state of one [`Descent`] — everything needed
+/// to rebuild a descent that continues *bit-identically* to the original
+/// (see [`crate::persist`] for the serialized form).
+///
+/// Three members are easy to forget and each silently breaks bit-exact
+/// resume: the RNG spare (polar method caches one deviate), the `order`
+/// ranking buffer (re-sorted *in place* each iteration, so stable-sort
+/// tie-breaking depends on its current permutation), and the stop-state
+/// history windows. `CmaParams` is not stored: it is a pure function of
+/// `(n, lambda)` and is recomputed on restore.
+#[derive(Clone)]
+pub struct DescentState {
+    pub n: usize,
+    pub lambda: usize,
+    pub state: CmaState,
+    pub rng: RngState,
+    pub stop_cfg: StopConfig,
+    /// Stop-history windows (short, long_best, long_median), oldest first.
+    pub hist_short: Vec<f64>,
+    pub hist_long_best: Vec<f64>,
+    pub hist_long_median: Vec<f64>,
+    pub eager_eigen: bool,
+    pub best_f: f64,
+    pub best_x: Vec<f64>,
+    pub evals: usize,
+    pub timings: Timings,
+    /// Current ranking permutation (stable-sort carry-over).
+    pub order: Vec<usize>,
+    pub stopped: Option<StopReason>,
+}
 
 /// Batched objective evaluation: `xs` columns are the λ points; `out`
 /// receives their fitness. Implementations may be a plain closure, a
@@ -127,6 +158,67 @@ impl Descent {
             params,
             compute,
             stop_cfg,
+        }
+    }
+
+    /// Capture the complete resumable state: a descent restored from it
+    /// (with the same compute tier) continues bit-identically.
+    pub fn capture(&self) -> DescentState {
+        let (hist_short, hist_long_best, hist_long_median) = self.stop_state.history();
+        DescentState {
+            n: self.params.n,
+            lambda: self.params.lambda,
+            state: self.state.clone(),
+            rng: self.rng.state(),
+            stop_cfg: self.stop_cfg.clone(),
+            hist_short,
+            hist_long_best,
+            hist_long_median,
+            eager_eigen: self.eager_eigen,
+            best_f: self.best_f,
+            best_x: self.best_x.clone(),
+            evals: self.evals,
+            timings: self.timings,
+            order: self.order.clone(),
+            stopped: self.stopped,
+        }
+    }
+
+    /// Rebuild a descent from a [`DescentState`] snapshot. `compute` is
+    /// supplied by the caller (trait objects are not serializable); use
+    /// the same tier as the original for bit-identical trajectories.
+    pub fn restore(snap: DescentState, compute: Box<dyn Compute>) -> Descent {
+        let n = snap.n;
+        let lambda = snap.lambda;
+        let params = CmaParams::new(n, lambda);
+        assert_eq!(snap.state.dim(), n, "snapshot state/dimension mismatch");
+        assert_eq!(snap.order.len(), lambda, "snapshot order/lambda mismatch");
+        let stop_state = StopState::restore(
+            n,
+            lambda,
+            snap.hist_short,
+            snap.hist_long_best,
+            snap.hist_long_median,
+        );
+        Descent {
+            state: snap.state,
+            rng: NormalSource::from_state(snap.rng),
+            stop_state,
+            eager_eigen: snap.eager_eigen,
+            best_f: snap.best_f,
+            best_x: snap.best_x,
+            evals: snap.evals,
+            timings: snap.timings,
+            z: Matrix::zeros(n, lambda),
+            y: Matrix::zeros(n, lambda),
+            xs: Matrix::zeros(n, lambda),
+            fitness: vec![0.0; lambda],
+            order: snap.order,
+            y_sel: Matrix::zeros(n, params.mu),
+            stopped: snap.stopped,
+            params,
+            compute,
+            stop_cfg: snap.stop_cfg,
         }
     }
 
@@ -455,6 +547,32 @@ mod tests {
             matches!(reason, StopReason::EqualFunValues | StopReason::TolFun),
             "{reason:?}"
         );
+    }
+
+    #[test]
+    fn capture_restore_continues_bit_identically() {
+        let mut a = make_descent(6, 9, 33);
+        let mut e = FnEvaluator(sphere());
+        for _ in 0..5 {
+            a.run_iteration(&mut e);
+        }
+        let snap = a.capture();
+        let mut b = Descent::restore(snap, Box::new(NativeCompute::level3()));
+        for _ in 0..20 {
+            let ra = a.run_iteration(&mut FnEvaluator(sphere()));
+            let rb = b.run_iteration(&mut FnEvaluator(sphere()));
+            assert_eq!(ra.gen_best.to_bits(), rb.gen_best.to_bits());
+            assert_eq!(ra.best_so_far.to_bits(), rb.best_so_far.to_bits());
+            assert_eq!(ra.stop, rb.stop);
+            if ra.stop.is_some() {
+                break;
+            }
+        }
+        assert_eq!(a.state.sigma.to_bits(), b.state.sigma.to_bits());
+        for (x, y) in a.state.mean.iter().zip(&b.state.mean) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.evals, b.evals);
     }
 
     #[test]

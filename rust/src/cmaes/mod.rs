@@ -17,7 +17,9 @@ pub mod state;
 pub mod stopping;
 
 pub use compute::{Compute, NativeCompute};
-pub use descent::{BatchEvaluator, Descent, FnEvaluator, IterationReport, Timings};
+pub use descent::{
+    BatchEvaluator, Descent, DescentState, FnEvaluator, IterationReport, Timings,
+};
 pub use params::CmaParams;
 pub use state::CmaState;
 pub use stopping::{StopConfig, StopReason};

@@ -53,6 +53,24 @@ impl StopReason {
             StopReason::MaxEvals => "maxevals",
         }
     }
+
+    /// Inverse of [`StopReason::name`] — used by the snapshot codec.
+    pub fn from_name(name: &str) -> Option<StopReason> {
+        let all = [
+            StopReason::TargetReached,
+            StopReason::TolFun,
+            StopReason::EqualFunValues,
+            StopReason::TolX,
+            StopReason::TolUpSigma,
+            StopReason::ConditionCov,
+            StopReason::NoEffectAxis,
+            StopReason::NoEffectCoord,
+            StopReason::Stagnation,
+            StopReason::MaxIter,
+            StopReason::MaxEvals,
+        ];
+        all.into_iter().find(|r| r.name() == name)
+    }
 }
 
 /// Thresholds (reference C code defaults unless noted).
@@ -106,6 +124,36 @@ impl StopState {
             long_median: VecDeque::with_capacity(long_cap + 1),
             long_cap,
         }
+    }
+
+    /// The rolling histories in push order (oldest first) — captured by
+    /// checkpoint snapshots so history-based criteria resume exactly.
+    pub fn history(&self) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        (
+            self.short.iter().copied().collect(),
+            self.long_best.iter().copied().collect(),
+            self.long_median.iter().copied().collect(),
+        )
+    }
+
+    /// Rebuild a history state captured with [`StopState::history`].
+    /// Caps are recomputed from `(n, lambda)`; the stored windows must
+    /// not exceed them.
+    pub fn restore(
+        n: usize,
+        lambda: usize,
+        short: Vec<f64>,
+        long_best: Vec<f64>,
+        long_median: Vec<f64>,
+    ) -> StopState {
+        let mut st = StopState::new(n, lambda);
+        assert!(short.len() <= st.short_cap, "short history exceeds cap");
+        assert!(long_best.len() <= st.long_cap, "long history exceeds cap");
+        assert_eq!(long_best.len(), long_median.len());
+        st.short.extend(short);
+        st.long_best.extend(long_best);
+        st.long_median.extend(long_median);
+        st
     }
 
     pub fn push_generation(&mut self, gen_best: f64, gen_median: f64) {
@@ -354,6 +402,39 @@ mod tests {
             matches!(r, Some(StopReason::Stagnation) | Some(StopReason::TolFun)),
             "{r:?}"
         );
+    }
+
+    #[test]
+    fn history_round_trip_preserves_windows() {
+        let mut a = StopState::new(4, 8);
+        for i in 0..200 {
+            a.push_generation(i as f64, i as f64 + 0.5);
+        }
+        let (s, lb, lm) = a.history();
+        let b = StopState::restore(4, 8, s, lb, lm);
+        assert_eq!(a.history(), b.history());
+        assert_eq!(a.short_range(), b.short_range());
+        assert_eq!(a.stagnated(), b.stagnated());
+    }
+
+    #[test]
+    fn stop_reason_names_round_trip() {
+        for r in [
+            StopReason::TargetReached,
+            StopReason::TolFun,
+            StopReason::EqualFunValues,
+            StopReason::TolX,
+            StopReason::TolUpSigma,
+            StopReason::ConditionCov,
+            StopReason::NoEffectAxis,
+            StopReason::NoEffectCoord,
+            StopReason::Stagnation,
+            StopReason::MaxIter,
+            StopReason::MaxEvals,
+        ] {
+            assert_eq!(StopReason::from_name(r.name()), Some(r));
+        }
+        assert_eq!(StopReason::from_name("nonsense"), None);
     }
 
     #[test]

@@ -1,0 +1,14 @@
+//! Foundation vocabulary shared by every layer: what a [`Problem`] is,
+//! and the [`Event`]/[`Observer`] telemetry contract.
+//!
+//! This module sits *below* both the strategy engine and the
+//! [`crate::api`] facade. The engine consumes these types directly;
+//! `api` re-exports them unchanged, so facade users never import from
+//! here — but the dependency now points one way only (strategies →
+//! core, api → {strategies, core}), keeping the facade a pure consumer.
+
+pub mod observer;
+pub mod problem;
+
+pub use observer::{Event, FnObserver, Observer, Recorder};
+pub use problem::{ClosureProblem, LeastSquares, NoisyRastrigin, Problem};

@@ -8,7 +8,11 @@
 //! * per slot, `DescentStart` precedes every `Iteration`/`TargetHit`,
 //!   and `DescentEnd` follows all of them;
 //! * `TargetHit` indices are emitted in ascending ladder order per slot;
-//! * per slot, `Iteration` virtual times are non-decreasing.
+//! * per slot, `Iteration` virtual times are non-decreasing;
+//! * on a resumed run, `Restored` follows `RunStart` and precedes every
+//!   other event; `Checkpoint` events carry strictly increasing `seq`;
+//! * every `Fault` is immediately followed by its `Recovered` (or by the
+//!   `DescentEnd` of the slot when no cores survive).
 
 use crate::cmaes::StopReason;
 
@@ -26,6 +30,19 @@ pub enum Event {
     TargetHit { slot: usize, index: usize, target: f64, t_s: f64 },
     /// A descent finished (`stop: None` = cut by the budget/cutoff).
     DescentEnd { slot: usize, k: usize, replica: usize, stop: Option<StopReason>, end_s: f64 },
+    /// A snapshot of the full run state was durably written
+    /// ([`crate::persist`]); `seq` is its number in the manifest.
+    Checkpoint { seq: u64, t_s: f64 },
+    /// The run was rebuilt from a snapshot: `slots` descents restored
+    /// (live ones resume from virtual time `t_s`).
+    Restored { slots: usize, t_s: f64 },
+    /// Fault injection: a virtual rank of `slot`'s communicator died at
+    /// virtual time `t_s`, losing the iteration in flight.
+    Fault { slot: usize, core: usize, t_s: f64 },
+    /// The engine recovered `slot` from its last in-memory snapshot onto
+    /// `cores_left` surviving cores, charging `recovery_s` of virtual
+    /// time for the state re-scatter (§4.1 comm model).
+    Recovered { slot: usize, cores_left: usize, recovery_s: f64, t_s: f64 },
     /// The strategy run is over.
     RunEnd { best_delta: f64, end_s: f64, total_evals: usize, descents: usize },
 }

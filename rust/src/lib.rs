@@ -42,6 +42,20 @@
 //! telemetry. The [`api`] module docs map every builder knob to the
 //! paper section it reproduces.
 //!
+//! ## Durability & fault injection
+//!
+//! Long IPOP campaigns survive crashes through the [`persist`]
+//! subsystem: `.checkpoint_every(n).checkpoint_dir(dir)` writes
+//! atomic, versioned snapshots of the complete resumable state (every
+//! descent's CMA-ES distribution, the restart ladder position, exact
+//! RNG stream positions, the virtual clock), and `.resume_from(path)`
+//! continues a killed run — bit-identically under a deterministic cost
+//! model. `.fault_plan(...)` injects virtual rank failures and
+//! stragglers ([`cluster::FaultPlan`]) that the engine answers with the
+//! paper's recovery policy, charging the §4.1 communication model for
+//! the state re-scatter. See the "Durability & fault injection" section
+//! of the [`api`] module docs and `examples/checkpoint_resume.rs`.
+//!
 //! ## Layers
 //!
 //! * **L3 (this crate)** — the coordinator: CMA-ES / IPOP-CMA-ES
@@ -66,11 +80,13 @@ pub mod bbob;
 pub mod cli;
 pub mod cluster;
 pub mod cmaes;
+pub mod core;
 pub mod evaluator;
 pub mod harness;
 pub mod ipop;
 pub mod linalg;
 pub mod metrics;
+pub mod persist;
 pub mod report;
 pub mod rng;
 pub mod runtime;

@@ -36,6 +36,7 @@ fn main() {
                  usage:\n\
                  \x20 ipopcma info\n\
                  \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0] [--workers 1] [--json out.json]\n\
+                 \x20                  [--checkpoint-dir DIR] [--checkpoint-every 25] [--resume DIR|SNAP.json]\n\
                  \x20 ipopcma compare  --fid 7  --dim 10 [--cost-ms 1] [--seed 0]\n\
                  \x20 ipopcma suite    --dim 10 [--cost-ms 0] [--seed 0]\n"
             );
@@ -75,6 +76,9 @@ fn optimize(args: &Args) -> Result<(), String> {
     let seed: u64 = args.typed("seed", 0)?;
     let workers: usize = args.typed("workers", 1)?;
     let json_path = args.get("json").map(str::to_string);
+    let checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
+    let checkpoint_every: usize = args.typed("checkpoint-every", 25)?;
+    let resume = args.get("resume").map(str::to_string);
 
     // Validate before the builder: its knobs assert on these, and bad
     // flags should get the CLI's formatted error, not a panic.
@@ -90,6 +94,9 @@ fn optimize(args: &Args) -> Result<(), String> {
     if workers < 1 {
         return Err(format!("--workers must be >= 1, got {workers}"));
     }
+    if checkpoint_every < 1 {
+        return Err(format!("--checkpoint-every must be >= 1, got {checkpoint_every}"));
+    }
 
     let inst = Instance::new(fid, dim, seed + 1);
     let name = ipopcma::bbob::Instance::name(&inst);
@@ -98,7 +105,7 @@ fn optimize(args: &Args) -> Result<(), String> {
     let backend = if workers > 1 { Backend::Threads(workers) } else { Backend::Serial };
 
     let t0 = std::time::Instant::now();
-    let report = Solver::on(inst)
+    let mut builder = Solver::on(inst)
         .strategy(Algo::Sequential)
         .backend(backend)
         .lambda_start(lambda_start)
@@ -107,7 +114,16 @@ fn optimize(args: &Args) -> Result<(), String> {
         .descent_evals(max_evals)
         .eval_budget(max_evals)
         .seed(seed)
-        .run();
+        .checkpoint_every(checkpoint_every);
+    if let Some(dir) = &checkpoint_dir {
+        builder = builder.checkpoint_dir(dir);
+    }
+    if let Some(path) = &resume {
+        // The snapshot carries the run's configuration (strategy, ladder
+        // position, seed); the search knobs above are ignored.
+        builder = builder.resume_from(path);
+    }
+    let report = builder.try_run()?;
     println!(
         "f{fid} ({}) dim {dim}: Δf = {:.3e} after {} evals in {:.2}s",
         name,
@@ -119,11 +135,14 @@ fn optimize(args: &Args) -> Result<(), String> {
         println!(
             "  K={:<4} λ={:<5} iters={:<6} Δf={:.3e} stop={}",
             d.k,
-            d.k * lambda_start,
+            d.k * report.lambda_start,
             d.iters,
             d.best_delta,
             d.stop.map(|s| s.name()).unwrap_or("budget")
         );
+    }
+    if let Some(dir) = &checkpoint_dir {
+        println!("checkpoints in {dir} (resume with --resume {dir})");
     }
     if let Some(path) = json_path {
         report.write_json(&path).map_err(|e| format!("writing {path}: {e}"))?;

@@ -38,6 +38,17 @@ impl HitRecorder {
         HitRecorder { targets, hits: vec![None; n], next: 0 }
     }
 
+    /// Rebuild a recorder from previously recorded hits (checkpoint
+    /// restore). `next` is recomputed as the leading run of hit targets,
+    /// matching the invariant [`HitRecorder::observe`] maintains.
+    pub fn with_hits(targets: Vec<f64>, hits: Vec<Option<f64>>) -> HitRecorder {
+        assert_eq!(targets.len(), hits.len());
+        let mut r = HitRecorder::new(targets);
+        r.next = hits.iter().take_while(|h| h.is_some()).count();
+        r.hits = hits;
+        r
+    }
+
     /// Observe the best-so-far quality `delta = f_best − f_opt` at `time`.
     pub fn observe(&mut self, delta: f64, time: f64) {
         while self.next < self.targets.len() && delta <= self.targets[self.next] {
@@ -151,6 +162,18 @@ mod tests {
         assert_eq!(r.hits[5], None);
         r.observe(1e-9, 3.0);
         assert!(r.all_hit());
+    }
+
+    #[test]
+    fn with_hits_resumes_observation() {
+        let mut r = HitRecorder::new(paper_targets());
+        r.observe(0.5, 2.0);
+        let mut restored = HitRecorder::with_hits(r.targets.clone(), r.hits.clone());
+        assert_eq!(restored.hit_count(), r.hit_count());
+        restored.observe(1e-9, 3.0);
+        r.observe(1e-9, 3.0);
+        assert_eq!(restored.hits, r.hits);
+        assert!(restored.all_hit());
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Snapshot ↔ JSON codec.
+//!
+//! Every `f64` is encoded as the 16-hex-digit image of its IEEE-754
+//! bits (`format!("{:016x}", v.to_bits())`), and every integer as a hex
+//! string, because the JSON number path is lossy in exactly the ways
+//! that break bit-identical resume: decimal printing drops ULPs, and
+//! the writer maps non-finite values to `null` (a diverged σ is `inf`
+//! for one generation before TolUpSigma fires — a snapshot taken there
+//! must survive).
+
+use std::collections::BTreeMap;
+
+use super::{PersistError, FORMAT_VERSION};
+use crate::cluster::{CommStats, Communicator, CostModel, DetCost};
+use crate::cmaes::{CmaState, DescentState, StopConfig, StopReason, Timings};
+use crate::ipop::IpopConfig;
+use crate::linalg::Matrix;
+use crate::rng::RngState;
+use crate::runtime::json::Json;
+use crate::strategies::{Algo, RunSnapshot, SlotSnapshot, VirtualConfig};
+
+fn corrupt(msg: impl Into<String>) -> PersistError {
+    PersistError::Corrupt(msg.into())
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json, PersistError> {
+    j.get(key).ok_or_else(|| corrupt(format!("missing field '{key}'")))
+}
+
+// ---- scalar encoders / decoders -----------------------------------------
+
+fn enc_f64(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn enc_u64(v: u64) -> Json {
+    Json::Str(format!("{v:x}"))
+}
+
+fn enc_usize(v: usize) -> Json {
+    enc_u64(v as u64)
+}
+
+fn dec_f64_raw(j: &Json) -> Result<f64, PersistError> {
+    let s = j.as_str().ok_or_else(|| corrupt("expected hex-f64 string"))?;
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| corrupt(format!("bad hex-f64 '{s}'")))
+}
+
+fn dec_f64(j: &Json, key: &str) -> Result<f64, PersistError> {
+    dec_f64_raw(get(j, key)?).map_err(|e| corrupt(format!("{key}: {e}")))
+}
+
+fn dec_u64(j: &Json, key: &str) -> Result<u64, PersistError> {
+    let s = get(j, key)?
+        .as_str()
+        .ok_or_else(|| corrupt(format!("{key}: expected hex-int string")))?;
+    u64::from_str_radix(s, 16).map_err(|_| corrupt(format!("{key}: bad hex-int '{s}'")))
+}
+
+fn dec_usize(j: &Json, key: &str) -> Result<usize, PersistError> {
+    Ok(dec_u64(j, key)? as usize)
+}
+
+fn dec_bool(j: &Json, key: &str) -> Result<bool, PersistError> {
+    match get(j, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(corrupt(format!("{key}: expected bool"))),
+    }
+}
+
+fn dec_str(j: &Json, key: &str) -> Result<String, PersistError> {
+    get(j, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| corrupt(format!("{key}: expected string")))
+}
+
+// ---- aggregate encoders / decoders --------------------------------------
+
+fn enc_vec_f64(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| enc_f64(x)).collect())
+}
+
+fn dec_vec_f64(j: &Json, key: &str) -> Result<Vec<f64>, PersistError> {
+    get(j, key)?
+        .as_arr()
+        .ok_or_else(|| corrupt(format!("{key}: expected array")))?
+        .iter()
+        .map(|x| dec_f64_raw(x).map_err(|e| corrupt(format!("{key}: {e}"))))
+        .collect()
+}
+
+fn enc_vec_usize(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| enc_usize(x)).collect())
+}
+
+fn dec_vec_usize(j: &Json, key: &str) -> Result<Vec<usize>, PersistError> {
+    get(j, key)?
+        .as_arr()
+        .ok_or_else(|| corrupt(format!("{key}: expected array")))?
+        .iter()
+        .map(|x| {
+            let s = x
+                .as_str()
+                .ok_or_else(|| corrupt(format!("{key}: expected hex-int string")))?;
+            usize::from_str_radix(s, 16)
+                .map_err(|_| corrupt(format!("{key}: bad hex-int '{s}'")))
+        })
+        .collect()
+}
+
+fn enc_opt_f64(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => enc_f64(x),
+        None => Json::Null,
+    }
+}
+
+fn dec_opt_f64(j: &Json, key: &str) -> Result<Option<f64>, PersistError> {
+    match get(j, key)? {
+        Json::Null => Ok(None),
+        other => dec_f64_raw(other).map(Some).map_err(|e| corrupt(format!("{key}: {e}"))),
+    }
+}
+
+fn enc_matrix(m: &Matrix) -> Json {
+    obj(vec![
+        ("rows", enc_usize(m.rows())),
+        ("cols", enc_usize(m.cols())),
+        ("data", enc_vec_f64(m.as_slice())),
+    ])
+}
+
+fn dec_matrix(j: &Json, key: &str) -> Result<Matrix, PersistError> {
+    let m = get(j, key)?;
+    let rows = dec_usize(m, "rows")?;
+    let cols = dec_usize(m, "cols")?;
+    let data = dec_vec_f64(m, "data")?;
+    if data.len() != rows * cols {
+        return Err(corrupt(format!("{key}: {rows}x{cols} matrix with {} entries", data.len())));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn enc_stop_reason(r: Option<StopReason>) -> Json {
+    match r {
+        Some(r) => Json::Str(r.name().to_string()),
+        None => Json::Null,
+    }
+}
+
+fn dec_stop_reason(j: &Json, key: &str) -> Result<Option<StopReason>, PersistError> {
+    match get(j, key)? {
+        Json::Null => Ok(None),
+        other => {
+            let name = other
+                .as_str()
+                .ok_or_else(|| corrupt(format!("{key}: expected stop-reason string")))?;
+            StopReason::from_name(name)
+                .map(Some)
+                .ok_or_else(|| corrupt(format!("{key}: unknown stop reason '{name}'")))
+        }
+    }
+}
+
+fn enc_rng(r: &RngState) -> Json {
+    obj(vec![
+        ("s", Json::Arr(r.s.iter().map(|&w| enc_u64(w)).collect())),
+        ("spare", enc_opt_f64(r.spare)),
+    ])
+}
+
+fn dec_rng(j: &Json, key: &str) -> Result<RngState, PersistError> {
+    let r = get(j, key)?;
+    let words = get(r, "s")?
+        .as_arr()
+        .ok_or_else(|| corrupt("rng.s: expected array"))?;
+    if words.len() != 4 {
+        return Err(corrupt(format!("rng.s: expected 4 words, got {}", words.len())));
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        let t = w.as_str().ok_or_else(|| corrupt("rng.s: expected hex string"))?;
+        s[i] = u64::from_str_radix(t, 16).map_err(|_| corrupt(format!("rng.s: bad hex '{t}'")))?;
+    }
+    Ok(RngState { s, spare: dec_opt_f64(r, "spare")? })
+}
+
+fn enc_stop_cfg(c: &StopConfig) -> Json {
+    obj(vec![
+        ("tol_fun", enc_f64(c.tol_fun)),
+        ("tol_x_rel", enc_f64(c.tol_x_rel)),
+        ("tol_up_sigma", enc_f64(c.tol_up_sigma)),
+        ("max_condition", enc_f64(c.max_condition)),
+        ("max_iters", enc_usize(c.max_iters)),
+        ("max_evals", enc_usize(c.max_evals)),
+        ("target_f", enc_opt_f64(c.target_f)),
+    ])
+}
+
+fn dec_stop_cfg(j: &Json, key: &str) -> Result<StopConfig, PersistError> {
+    let c = get(j, key)?;
+    Ok(StopConfig {
+        tol_fun: dec_f64(c, "tol_fun")?,
+        tol_x_rel: dec_f64(c, "tol_x_rel")?,
+        tol_up_sigma: dec_f64(c, "tol_up_sigma")?,
+        max_condition: dec_f64(c, "max_condition")?,
+        max_iters: dec_usize(c, "max_iters")?,
+        max_evals: dec_usize(c, "max_evals")?,
+        target_f: dec_opt_f64(c, "target_f")?,
+    })
+}
+
+fn enc_timings(t: &Timings) -> Json {
+    obj(vec![
+        ("sample_s", enc_f64(t.sample_s)),
+        ("eval_s", enc_f64(t.eval_s)),
+        ("update_s", enc_f64(t.update_s)),
+        ("eig_s", enc_f64(t.eig_s)),
+    ])
+}
+
+fn dec_timings(j: &Json, key: &str) -> Result<Timings, PersistError> {
+    let t = get(j, key)?;
+    Ok(Timings {
+        sample_s: dec_f64(t, "sample_s")?,
+        eval_s: dec_f64(t, "eval_s")?,
+        update_s: dec_f64(t, "update_s")?,
+        eig_s: dec_f64(t, "eig_s")?,
+    })
+}
+
+fn enc_cma_state(s: &CmaState) -> Json {
+    obj(vec![
+        ("mean", enc_vec_f64(&s.mean)),
+        ("sigma", enc_f64(s.sigma)),
+        ("sigma0", enc_f64(s.sigma0)),
+        ("c", enc_matrix(&s.c)),
+        ("b", enc_matrix(&s.b)),
+        ("d", enc_vec_f64(&s.d)),
+        ("bd", enc_matrix(&s.bd)),
+        ("p_sigma", enc_vec_f64(&s.p_sigma)),
+        ("p_c", enc_vec_f64(&s.p_c)),
+        ("gen", enc_usize(s.gen)),
+        ("eigen_gen", enc_usize(s.eigen_gen)),
+        ("condition", enc_f64(s.condition)),
+    ])
+}
+
+fn dec_cma_state(j: &Json, key: &str) -> Result<CmaState, PersistError> {
+    let s = get(j, key)?;
+    Ok(CmaState {
+        mean: dec_vec_f64(s, "mean")?,
+        sigma: dec_f64(s, "sigma")?,
+        sigma0: dec_f64(s, "sigma0")?,
+        c: dec_matrix(s, "c")?,
+        b: dec_matrix(s, "b")?,
+        d: dec_vec_f64(s, "d")?,
+        bd: dec_matrix(s, "bd")?,
+        p_sigma: dec_vec_f64(s, "p_sigma")?,
+        p_c: dec_vec_f64(s, "p_c")?,
+        gen: dec_usize(s, "gen")?,
+        eigen_gen: dec_usize(s, "eigen_gen")?,
+        condition: dec_f64(s, "condition")?,
+    })
+}
+
+/// Encode one descent's resumable state (public: the round-trip
+/// property tests exercise this directly).
+pub fn encode_descent(d: &DescentState) -> Json {
+    obj(vec![
+        ("n", enc_usize(d.n)),
+        ("lambda", enc_usize(d.lambda)),
+        ("state", enc_cma_state(&d.state)),
+        ("rng", enc_rng(&d.rng)),
+        ("stop_cfg", enc_stop_cfg(&d.stop_cfg)),
+        ("hist_short", enc_vec_f64(&d.hist_short)),
+        ("hist_long_best", enc_vec_f64(&d.hist_long_best)),
+        ("hist_long_median", enc_vec_f64(&d.hist_long_median)),
+        ("eager_eigen", Json::Bool(d.eager_eigen)),
+        ("best_f", enc_f64(d.best_f)),
+        ("best_x", enc_vec_f64(&d.best_x)),
+        ("evals", enc_usize(d.evals)),
+        ("timings", enc_timings(&d.timings)),
+        ("order", enc_vec_usize(&d.order)),
+        ("stopped", enc_stop_reason(d.stopped)),
+    ])
+}
+
+/// Decode one descent's resumable state.
+pub fn decode_descent(j: &Json) -> Result<DescentState, PersistError> {
+    Ok(DescentState {
+        n: dec_usize(j, "n")?,
+        lambda: dec_usize(j, "lambda")?,
+        state: dec_cma_state(j, "state")?,
+        rng: dec_rng(j, "rng")?,
+        stop_cfg: dec_stop_cfg(j, "stop_cfg")?,
+        hist_short: dec_vec_f64(j, "hist_short")?,
+        hist_long_best: dec_vec_f64(j, "hist_long_best")?,
+        hist_long_median: dec_vec_f64(j, "hist_long_median")?,
+        eager_eigen: dec_bool(j, "eager_eigen")?,
+        best_f: dec_f64(j, "best_f")?,
+        best_x: dec_vec_f64(j, "best_x")?,
+        evals: dec_usize(j, "evals")?,
+        timings: dec_timings(j, "timings")?,
+        order: dec_vec_usize(j, "order")?,
+        stopped: dec_stop_reason(j, "stopped")?,
+    })
+}
+
+fn enc_cost_model(c: &CostModel) -> Json {
+    let det = match &c.deterministic {
+        Some(d) => obj(vec![
+            ("eval_point_s", enc_f64(d.eval_point_s)),
+            ("flop_s", enc_f64(d.flop_s)),
+            ("eig_flops_per_n3", enc_f64(d.eig_flops_per_n3)),
+        ]),
+        None => Json::Null,
+    };
+    obj(vec![
+        ("extra_eval_s", enc_f64(c.extra_eval_s)),
+        ("alpha_s", enc_f64(c.alpha_s)),
+        ("beta_s_per_byte", enc_f64(c.beta_s_per_byte)),
+        ("threads", enc_usize(c.threads)),
+        ("deterministic", det),
+    ])
+}
+
+fn dec_cost_model(j: &Json, key: &str) -> Result<CostModel, PersistError> {
+    let c = get(j, key)?;
+    let deterministic = match get(c, "deterministic")? {
+        Json::Null => None,
+        d => Some(DetCost {
+            eval_point_s: dec_f64(d, "eval_point_s")?,
+            flop_s: dec_f64(d, "flop_s")?,
+            eig_flops_per_n3: dec_f64(d, "eig_flops_per_n3")?,
+        }),
+    };
+    Ok(CostModel {
+        extra_eval_s: dec_f64(c, "extra_eval_s")?,
+        alpha_s: dec_f64(c, "alpha_s")?,
+        beta_s_per_byte: dec_f64(c, "beta_s_per_byte")?,
+        threads: dec_usize(c, "threads")?,
+        deterministic,
+    })
+}
+
+fn enc_ipop(c: &IpopConfig) -> Json {
+    obj(vec![
+        ("lambda_start", enc_usize(c.lambda_start)),
+        ("multiplier", enc_usize(c.multiplier)),
+        ("k_max", enc_usize(c.k_max)),
+        ("sigma0", enc_f64(c.sigma0)),
+        ("lower", enc_f64(c.lower)),
+        ("upper", enc_f64(c.upper)),
+        ("max_evals", enc_usize(c.max_evals)),
+        ("stop", enc_stop_cfg(&c.stop)),
+    ])
+}
+
+fn dec_ipop(j: &Json, key: &str) -> Result<IpopConfig, PersistError> {
+    let c = get(j, key)?;
+    Ok(IpopConfig {
+        lambda_start: dec_usize(c, "lambda_start")?,
+        multiplier: dec_usize(c, "multiplier")?,
+        k_max: dec_usize(c, "k_max")?,
+        sigma0: dec_f64(c, "sigma0")?,
+        lower: dec_f64(c, "lower")?,
+        upper: dec_f64(c, "upper")?,
+        max_evals: dec_usize(c, "max_evals")?,
+        stop: dec_stop_cfg(c, "stop")?,
+    })
+}
+
+fn enc_vcfg(c: &VirtualConfig) -> Json {
+    obj(vec![
+        ("ipop", enc_ipop(&c.ipop)),
+        ("dim", enc_usize(c.dim)),
+        ("cost", enc_cost_model(&c.cost)),
+        ("budget_s", enc_f64(c.budget_s)),
+        ("targets", enc_vec_f64(&c.targets)),
+        ("stop_at_final_target", Json::Bool(c.stop_at_final_target)),
+        ("restart_distributed", Json::Bool(c.restart_distributed)),
+        ("real_eval_cap", enc_usize(c.real_eval_cap)),
+        ("seed", enc_u64(c.seed)),
+    ])
+}
+
+fn dec_vcfg(j: &Json, key: &str) -> Result<VirtualConfig, PersistError> {
+    let c = get(j, key)?;
+    Ok(VirtualConfig {
+        ipop: dec_ipop(c, "ipop")?,
+        dim: dec_usize(c, "dim")?,
+        cost: dec_cost_model(c, "cost")?,
+        budget_s: dec_f64(c, "budget_s")?,
+        targets: dec_vec_f64(c, "targets")?,
+        stop_at_final_target: dec_bool(c, "stop_at_final_target")?,
+        restart_distributed: dec_bool(c, "restart_distributed")?,
+        real_eval_cap: dec_usize(c, "real_eval_cap")?,
+        seed: dec_u64(c, "seed")?,
+    })
+}
+
+fn enc_comm_stats(s: &CommStats) -> Json {
+    obj(vec![
+        ("total_s", enc_f64(s.total_s)),
+        ("main_comm_s", enc_f64(s.main_comm_s)),
+        ("main_linalg_s", enc_f64(s.main_linalg_s)),
+        ("evaluator_work_s", enc_f64(s.evaluator_work_s)),
+        ("evaluator_wait_s", enc_f64(s.evaluator_wait_s)),
+    ])
+}
+
+fn dec_comm_stats(j: &Json, key: &str) -> Result<CommStats, PersistError> {
+    let s = get(j, key)?;
+    Ok(CommStats {
+        total_s: dec_f64(s, "total_s")?,
+        main_comm_s: dec_f64(s, "main_comm_s")?,
+        main_linalg_s: dec_f64(s, "main_linalg_s")?,
+        evaluator_work_s: dec_f64(s, "evaluator_work_s")?,
+        evaluator_wait_s: dec_f64(s, "evaluator_wait_s")?,
+    })
+}
+
+fn enc_slot(s: &SlotSnapshot) -> Json {
+    obj(vec![
+        ("descent", encode_descent(&s.descent)),
+        ("k", enc_usize(s.k)),
+        ("replica", enc_usize(s.replica)),
+        ("comm_offset", enc_usize(s.comm.offset)),
+        ("comm_cores", enc_usize(s.comm.cores)),
+        ("t", enc_f64(s.t)),
+        ("start_t", enc_f64(s.start_t)),
+        ("hits", Json::Arr(s.hits.iter().map(|&h| enc_opt_f64(h)).collect())),
+        ("iters", enc_usize(s.iters)),
+        ("done", Json::Bool(s.done)),
+        ("stop", enc_stop_reason(s.stop)),
+    ])
+}
+
+fn dec_slot(j: &Json) -> Result<SlotSnapshot, PersistError> {
+    let hits = get(j, "hits")?
+        .as_arr()
+        .ok_or_else(|| corrupt("hits: expected array"))?
+        .iter()
+        .map(|h| match h {
+            Json::Null => Ok(None),
+            other => dec_f64_raw(other).map(Some),
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(SlotSnapshot {
+        descent: decode_descent(get(j, "descent")?)?,
+        k: dec_usize(j, "k")?,
+        replica: dec_usize(j, "replica")?,
+        comm: Communicator {
+            offset: dec_usize(j, "comm_offset")?,
+            cores: dec_usize(j, "comm_cores")?,
+        },
+        t: dec_f64(j, "t")?,
+        start_t: dec_f64(j, "start_t")?,
+        hits,
+        iters: dec_usize(j, "iters")?,
+        done: dec_bool(j, "done")?,
+        stop: dec_stop_reason(j, "stop")?,
+    })
+}
+
+/// Encode a full run snapshot, including the format version stamp.
+pub fn encode_snapshot(snap: &RunSnapshot) -> Json {
+    obj(vec![
+        ("format", Json::Num(FORMAT_VERSION as f64)),
+        ("algo", Json::Str(snap.algo.name().to_string())),
+        ("problem", Json::Str(snap.problem.clone())),
+        ("dim", enc_usize(snap.dim)),
+        ("cfg", enc_vcfg(&snap.cfg)),
+        ("slots", Json::Arr(snap.slots.iter().map(enc_slot).collect())),
+        ("comm_stats", enc_comm_stats(&snap.comm_stats)),
+        ("total_evals", enc_usize(snap.total_evals)),
+        ("cutoff", enc_f64(snap.cutoff)),
+        ("spawn_counter", enc_u64(snap.spawn_counter)),
+        ("iters_done", enc_u64(snap.iters_done)),
+    ])
+}
+
+/// Decode a full run snapshot, rejecting unknown format versions.
+pub fn decode_snapshot(j: &Json) -> Result<RunSnapshot, PersistError> {
+    let found = get(j, "format")?
+        .as_f64()
+        .ok_or_else(|| corrupt("format: expected number"))? as u64;
+    if found != FORMAT_VERSION {
+        return Err(PersistError::Version { found, expected: FORMAT_VERSION });
+    }
+    let algo_name = dec_str(j, "algo")?;
+    let algo = Algo::from_name(&algo_name)
+        .ok_or_else(|| corrupt(format!("algo: unknown strategy '{algo_name}'")))?;
+    let slots = get(j, "slots")?
+        .as_arr()
+        .ok_or_else(|| corrupt("slots: expected array"))?
+        .iter()
+        .map(dec_slot)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(RunSnapshot {
+        algo,
+        problem: dec_str(j, "problem")?,
+        dim: dec_usize(j, "dim")?,
+        cfg: dec_vcfg(j, "cfg")?,
+        slots,
+        comm_stats: dec_comm_stats(j, "comm_stats")?,
+        total_evals: dec_usize(j, "total_evals")?,
+        cutoff: dec_f64(j, "cutoff")?,
+        spawn_counter: dec_u64(j, "spawn_counter")?,
+        iters_done: dec_u64(j, "iters_done")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_hex_survives_non_finite_and_signed_zero() {
+        for v in [
+            0.0,
+            -0.0,
+            1.5,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            -2.2250738585072014e-308,
+        ] {
+            let j = enc_f64(v);
+            let text = j.to_string();
+            let back = dec_f64_raw(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn stop_reason_option_round_trips() {
+        let j = obj(vec![
+            ("a", enc_stop_reason(Some(StopReason::TolFun))),
+            ("b", enc_stop_reason(None)),
+        ]);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(dec_stop_reason(&back, "a").unwrap(), Some(StopReason::TolFun));
+        assert_eq!(dec_stop_reason(&back, "b").unwrap(), None);
+    }
+
+    #[test]
+    fn unknown_format_version_is_typed() {
+        let j = obj(vec![("format", Json::Num(99.0))]);
+        match decode_snapshot(&j) {
+            Err(PersistError::Version { found: 99, expected }) => {
+                assert_eq!(expected, FORMAT_VERSION)
+            }
+            Err(e) => panic!("expected version error, got {e}"),
+            Ok(_) => panic!("expected version error, got a snapshot"),
+        }
+    }
+}

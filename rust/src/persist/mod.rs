@@ -1,0 +1,87 @@
+//! Durable, versioned snapshots of strategy runs — the checkpoint /
+//! restore subsystem behind the facade's `.checkpoint_every(..)` /
+//! `.resume_from(..)` knobs (and the `optimize --checkpoint-dir /
+//! --resume` CLI flags).
+//!
+//! The paper's campaigns run for 12 hours on 6144 cores (§4.1); losing
+//! an IPOP ladder hours in is not acceptable. This module persists the
+//! *complete* resumable state of a run —
+//! [`crate::strategies::RunSnapshot`]: every descent's CMA-ES
+//! distribution (m, σ, C, B·D, evolution paths, generation), its exact
+//! RNG stream position (including the polar method's cached spare), the
+//! stopping-criteria history windows, the restart-ladder position, the
+//! per-target hit times, and the virtual clock — such that a resumed
+//! run under a deterministic cost model continues **bit-identically**
+//! to the uninterrupted one.
+//!
+//! Design points:
+//!
+//! * **Bit-exact floats.** Every `f64` is stored as the 16-hex-digit
+//!   image of [`f64::to_bits`], never as decimal text: decimal round
+//!   trips lose ULPs and JSON cannot represent non-finite values at all
+//!   (σ can legitimately overflow to `inf` before TolUpSigma fires).
+//! * **Dependency-free.** Snapshots are JSON via the crate's own
+//!   [`crate::runtime::json`] writer/parser; no serde.
+//! * **Atomic.** [`SnapshotStore`] writes `snap-NNNNNN.json` through a
+//!   temp file + `rename` in the same directory, so a crash mid-write
+//!   never corrupts an existing snapshot; a `manifest.json` (also
+//!   written atomically) carries a human-readable index.
+//! * **Versioned.** Every file records [`FORMAT_VERSION`]; loading a
+//!   different version is a typed [`PersistError::Version`] error, not
+//!   a parse failure deep in some field.
+//!
+//! See the "Durability & fault injection" section of the [`crate::api`]
+//! docs for how this composes with fault injection
+//! ([`crate::cluster::FaultPlan`]).
+
+mod codec;
+mod store;
+
+use std::fmt;
+
+pub use codec::{decode_descent, decode_snapshot, encode_descent, encode_snapshot};
+pub use store::SnapshotStore;
+
+/// Version stamp written into every snapshot file and the manifest.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Why a snapshot could not be written or read back.
+#[derive(Debug)]
+pub enum PersistError {
+    /// Filesystem-level failure (create, write, rename, read).
+    Io(std::io::Error),
+    /// The file parsed but does not describe a valid snapshot.
+    Corrupt(String),
+    /// The file was written by an incompatible format version.
+    Version { found: u64, expected: u64 },
+    /// No snapshot found at the given path / in the given directory.
+    NotFound(String),
+}
+
+impl fmt::Display for PersistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PersistError::Io(e) => write!(f, "snapshot I/O error: {e}"),
+            PersistError::Corrupt(msg) => write!(f, "corrupt snapshot: {msg}"),
+            PersistError::Version { found, expected } => {
+                write!(f, "snapshot format v{found} (this build reads v{expected})")
+            }
+            PersistError::NotFound(path) => write!(f, "no snapshot found at {path}"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PersistError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> Self {
+        PersistError::Io(e)
+    }
+}

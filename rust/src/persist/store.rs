@@ -1,0 +1,257 @@
+//! Atomic on-disk snapshot store: numbered `snap-NNNNNN.json` files
+//! plus a human-readable `manifest.json`, all written via temp file +
+//! rename so a crash mid-write never corrupts existing snapshots.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use super::codec::{decode_snapshot, encode_snapshot};
+use super::{PersistError, FORMAT_VERSION};
+use crate::runtime::json::Json;
+use crate::strategies::{RunSnapshot, SnapshotSink};
+
+/// A directory of numbered snapshots. [`SnapshotStore::append`] assigns
+/// monotonically increasing sequence numbers, continuing after any
+/// snapshots already present (so a resumed run keeps appending to the
+/// same directory without clobbering its own history).
+pub struct SnapshotStore {
+    dir: PathBuf,
+    next_seq: u64,
+}
+
+fn seq_of(name: &str) -> Option<u64> {
+    let stem = name.strip_prefix("snap-")?.strip_suffix(".json")?;
+    stem.parse().ok()
+}
+
+impl SnapshotStore {
+    /// Open (creating if needed) a snapshot directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<SnapshotStore, PersistError> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        let mut next_seq = 0;
+        for entry in fs::read_dir(&dir)? {
+            let entry = entry?;
+            if let Some(seq) = entry.file_name().to_str().and_then(seq_of) {
+                next_seq = next_seq.max(seq + 1);
+            }
+        }
+        Ok(SnapshotStore { dir, next_seq })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Sequence numbers + paths of every snapshot present, ascending.
+    pub fn snapshots(&self) -> Result<Vec<(u64, PathBuf)>, PersistError> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            if let Some(seq) = entry.file_name().to_str().and_then(seq_of) {
+                out.push((seq, entry.path()));
+            }
+        }
+        out.sort_by_key(|(seq, _)| *seq);
+        Ok(out)
+    }
+
+    /// Path of the newest snapshot, if any.
+    pub fn latest(&self) -> Result<Option<PathBuf>, PersistError> {
+        Ok(self.snapshots()?.pop().map(|(_, p)| p))
+    }
+
+    /// Durably write one snapshot, returning its sequence number.
+    pub fn append(&mut self, snap: &RunSnapshot) -> Result<u64, PersistError> {
+        let seq = self.next_seq;
+        let name = format!("snap-{seq:06}.json");
+        let mut text = String::new();
+        encode_snapshot(snap).write(&mut text);
+        self.write_atomic(&name, &text)?;
+        self.next_seq = seq + 1;
+        self.write_manifest(snap, seq, &name)?;
+        Ok(seq)
+    }
+
+    /// Write `manifest.json`: a decimal, human-readable index of the
+    /// directory (the snapshots themselves stay bit-exact hex).
+    fn write_manifest(
+        &mut self,
+        last: &RunSnapshot,
+        last_seq: u64,
+        last_file: &str,
+    ) -> Result<(), PersistError> {
+        use std::collections::BTreeMap;
+        let mut files = Vec::new();
+        for (seq, path) in self.snapshots()? {
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("")
+                .to_string();
+            let mut e = BTreeMap::new();
+            e.insert("seq".to_string(), Json::Num(seq as f64));
+            e.insert("file".to_string(), Json::Str(name));
+            files.push(Json::Obj(e));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("format".to_string(), Json::Num(FORMAT_VERSION as f64));
+        m.insert("algo".to_string(), Json::Str(last.algo.name().to_string()));
+        m.insert("problem".to_string(), Json::Str(last.problem.clone()));
+        m.insert("dim".to_string(), Json::Num(last.dim as f64));
+        m.insert("latest_seq".to_string(), Json::Num(last_seq as f64));
+        m.insert("latest_file".to_string(), Json::Str(last_file.to_string()));
+        m.insert("total_evals".to_string(), Json::Num(last.total_evals as f64));
+        m.insert("iters_done".to_string(), Json::Num(last.iters_done as f64));
+        m.insert("snapshots".to_string(), Json::Arr(files));
+        let mut text = String::new();
+        Json::Obj(m).write(&mut text);
+        self.write_atomic("manifest.json", &text)
+    }
+
+    /// Crash-safe write: temp file in the same directory, then rename
+    /// (atomic within one filesystem).
+    fn write_atomic(&self, name: &str, text: &str) -> Result<(), PersistError> {
+        let tmp = self.dir.join(format!(".tmp-{name}"));
+        let dst = self.dir.join(name);
+        fs::write(&tmp, text)?;
+        fs::rename(&tmp, &dst)?;
+        Ok(())
+    }
+
+    /// Load one snapshot file.
+    pub fn load(path: &Path) -> Result<RunSnapshot, PersistError> {
+        let text = fs::read_to_string(path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| PersistError::Corrupt(format!("{}: {e}", path.display())))?;
+        decode_snapshot(&json)
+    }
+
+    /// Resolve a resume path: a snapshot file loads directly; a
+    /// directory loads its newest snapshot.
+    pub fn load_resume(path: &Path) -> Result<RunSnapshot, PersistError> {
+        if path.is_dir() {
+            let store = SnapshotStore::open(path)?;
+            match store.latest()? {
+                Some(p) => SnapshotStore::load(&p),
+                None => Err(PersistError::NotFound(path.display().to_string())),
+            }
+        } else if path.is_file() {
+            SnapshotStore::load(path)
+        } else {
+            Err(PersistError::NotFound(path.display().to_string()))
+        }
+    }
+}
+
+impl SnapshotSink for SnapshotStore {
+    fn write(&mut self, snap: &RunSnapshot) -> Result<u64, String> {
+        self.append(snap).map_err(|e| e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ipopcma-persist-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn tiny_snapshot() -> RunSnapshot {
+        // The cheapest way to a structurally real snapshot: run a tiny
+        // engine and photograph it.
+        use crate::bbob::Instance;
+        use crate::cluster::{Communicator, CostModel, DetCost};
+        use crate::ipop::IpopConfig;
+        use crate::strategies::{Algo, Engine, Mode, NoContinuation, VirtualConfig};
+        let inst = Instance::new(1, 3, 1);
+        let mut ipop = IpopConfig::bbob(6, 2);
+        ipop.max_evals = 600;
+        let cfg = VirtualConfig {
+            ipop,
+            dim: 3,
+            cost: CostModel::deterministic(6, 0.0, DetCost::default()),
+            budget_s: 1e9,
+            targets: vec![1e2, 1e-1],
+            stop_at_final_target: false,
+            restart_distributed: false,
+            real_eval_cap: 10_000,
+            seed: 7,
+        };
+        let mut eng = Engine::new(&inst, &cfg, Mode::Parallel, Algo::KDistributed);
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        eng.snapshot()
+    }
+
+    #[test]
+    fn append_load_and_latest() {
+        let dir = tmp_dir("append");
+        let snap = tiny_snapshot();
+        let mut store = SnapshotStore::open(&dir).unwrap();
+        assert!(store.latest().unwrap().is_none());
+        assert_eq!(store.append(&snap).unwrap(), 0);
+        assert_eq!(store.append(&snap).unwrap(), 1);
+        let latest = store.latest().unwrap().unwrap();
+        assert!(latest.ends_with("snap-000001.json"));
+        let back = SnapshotStore::load(&latest).unwrap();
+        assert_eq!(back.total_evals, snap.total_evals);
+        assert_eq!(back.slots.len(), snap.slots.len());
+        assert_eq!(back.cutoff.to_bits(), snap.cutoff.to_bits());
+        // The manifest is valid decimal JSON.
+        let manifest = fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let j = Json::parse(&manifest).unwrap();
+        assert_eq!(j.get("latest_seq").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("snapshots").unwrap().as_arr().unwrap().len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_continues_numbering() {
+        let dir = tmp_dir("reopen");
+        let snap = tiny_snapshot();
+        {
+            let mut store = SnapshotStore::open(&dir).unwrap();
+            store.append(&snap).unwrap();
+        }
+        let mut store = SnapshotStore::open(&dir).unwrap();
+        assert_eq!(store.append(&snap).unwrap(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_resume_accepts_file_or_dir() {
+        let dir = tmp_dir("resume");
+        let snap = tiny_snapshot();
+        let mut store = SnapshotStore::open(&dir).unwrap();
+        store.append(&snap).unwrap();
+        let by_dir = SnapshotStore::load_resume(&dir).unwrap();
+        let by_file = SnapshotStore::load_resume(&dir.join("snap-000000.json")).unwrap();
+        assert_eq!(by_dir.total_evals, by_file.total_evals);
+        assert!(matches!(
+            SnapshotStore::load_resume(&dir.join("nope.json")),
+            Err(PersistError::NotFound(_))
+        ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_temp_droppings_after_append() {
+        let dir = tmp_dir("tmpfiles");
+        let snap = tiny_snapshot();
+        let mut store = SnapshotStore::open(&dir).unwrap();
+        store.append(&snap).unwrap();
+        for entry in fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            assert!(
+                !name.to_string_lossy().starts_with(".tmp-"),
+                "leftover temp file {name:?}"
+            );
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -13,7 +13,7 @@
 mod xoshiro;
 mod normal;
 
-pub use normal::NormalSource;
+pub use normal::{NormalSource, RngState};
 pub use xoshiro::Xoshiro256pp;
 
 /// Derive the seed of an independent stream `rank` from a `master` seed.

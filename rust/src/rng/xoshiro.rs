@@ -30,6 +30,19 @@ impl Xoshiro256pp {
         Self { s }
     }
 
+    /// Raw 256-bit state — the generator's exact stream position, used
+    /// by checkpoint snapshots ([`crate::persist`]).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact stream position captured with
+    /// [`Xoshiro256pp::state`]. The all-zero state is forbidden.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        assert!(s != [0; 4], "all-zero xoshiro state");
+        Self { s }
+    }
+
     /// Next 64 uniformly distributed bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -95,6 +108,18 @@ mod tests {
     fn deterministic_for_same_seed() {
         let mut a = Xoshiro256pp::new(123);
         let mut b = Xoshiro256pp::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_round_trip_resumes_stream() {
+        let mut a = Xoshiro256pp::new(77);
+        for _ in 0..13 {
+            a.next_u64();
+        }
+        let mut b = Xoshiro256pp::from_state(a.state());
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

@@ -6,14 +6,39 @@
 //! evaluates through an [`Exec`]-supplied [`BatchEvaluator`] (e.g. the
 //! scatter/gather thread pool) or, by default, a serial closure. An
 //! optional [`Observer`] receives per-iteration / per-descent telemetry.
+//!
+//! # Durability
+//!
+//! The engine can photograph itself at any iteration boundary into a
+//! [`RunSnapshot`] — the complete resumable state of a strategy run:
+//! every slot's [`DescentState`] (distribution, RNG stream position,
+//! stopping windows), the per-slot hit times and virtual clocks, the
+//! global evaluation count, cutoff and spawn counter. [`Exec`] carries
+//! an optional [`Checkpoint`] sink that receives a snapshot every
+//! `every` committed iterations, and [`Engine::restore`] rebuilds a
+//! running engine from a snapshot. Under a deterministic cost model the
+//! resumed run replays the uninterrupted trajectory bit-for-bit.
+//!
+//! # Fault injection
+//!
+//! [`Exec`] also carries an optional [`crate::cluster::FaultPlan`]. A
+//! scripted rank failure kills the iteration in flight on the descent
+//! whose communicator owns the dead core; the engine rolls the descent
+//! back to its last in-memory backup, shrinks the communicator by one
+//! core, charges [`crate::cluster::CostModel::recovery_rescatter_s`]
+//! to the virtual clock (the §4.1 α·log₂P + β·bytes model applied to
+//! re-scattering the full CMA-ES state), and replays. Replayed
+//! generations re-draw the same RNG stream, so the search trajectory is
+//! unchanged — only the clock (and the real-compute guard) pays.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
-use crate::api::{Event, Observer, Problem};
-use crate::cluster::{CommStats, Communicator, CostModel, OccupancySpan};
-use crate::cmaes::{BatchEvaluator, Descent, FnEvaluator, StopReason};
+use super::Algo;
+use crate::cluster::{CommStats, Communicator, CostModel, FaultKind, FaultPlan, OccupancySpan};
+use crate::cmaes::{BatchEvaluator, Descent, DescentState, FnEvaluator, StopReason};
+use crate::core::{Event, Observer, Problem};
 use crate::ipop::{self, IpopConfig};
 use crate::metrics::HitRecorder;
 use crate::rng::derive_stream;
@@ -128,9 +153,63 @@ pub trait Policy {
     fn on_finish(&mut self, eng: &mut Engine<'_>, slot: usize);
 }
 
+/// Durable image of one engine slot (one descent) at an iteration
+/// boundary.
+#[derive(Clone)]
+pub struct SlotSnapshot {
+    /// The resumable CMA-ES descent (distribution, RNG, stop windows).
+    pub descent: DescentState,
+    pub k: usize,
+    pub replica: usize,
+    pub comm: Communicator,
+    /// Virtual clock of this slot.
+    pub t: f64,
+    pub start_t: f64,
+    /// Per-target first-hit times (targets live in the config).
+    pub hits: Vec<Option<f64>>,
+    pub iters: usize,
+    pub done: bool,
+    pub stop: Option<StopReason>,
+}
+
+/// Durable image of a whole strategy run at an iteration boundary —
+/// everything [`Engine::restore`] needs to continue bit-identically.
+#[derive(Clone)]
+pub struct RunSnapshot {
+    pub algo: Algo,
+    /// Name of the problem the run was optimizing (validated on resume).
+    pub problem: String,
+    pub dim: usize,
+    pub cfg: VirtualConfig,
+    pub slots: Vec<SlotSnapshot>,
+    pub comm_stats: CommStats,
+    pub total_evals: usize,
+    pub cutoff: f64,
+    /// RNG stream counter: descents spawned so far.
+    pub spawn_counter: u64,
+    /// Committed engine iterations so far (checkpoint cadence counter).
+    pub iters_done: u64,
+}
+
+/// Where checkpoints go. Implemented by the persist layer's
+/// [`crate::persist::SnapshotStore`]; tests plug in in-memory sinks.
+pub trait SnapshotSink {
+    /// Durably record a snapshot, returning its sequence number.
+    fn write(&mut self, snap: &RunSnapshot) -> Result<u64, String>;
+}
+
+/// Checkpoint cadence + destination, threaded through [`Exec`].
+pub struct Checkpoint<'a> {
+    /// Write a snapshot every this many committed engine iterations
+    /// (across all slots). 0 disables.
+    pub every: usize,
+    pub sink: &'a mut dyn SnapshotSink,
+}
+
 /// Execution context threaded from the [`crate::api::Solver`] facade
 /// into the engine: an optional batch evaluator replacing the serial
-/// closure (e.g. the thread pool), and an optional telemetry observer.
+/// closure (e.g. the thread pool), an optional telemetry observer, an
+/// optional checkpoint sink, and an optional fault plan.
 #[derive(Default)]
 pub struct Exec<'a> {
     /// Evaluates each iteration's λ points. `None` = serial closure over
@@ -138,6 +217,10 @@ pub struct Exec<'a> {
     pub eval: Option<&'a mut dyn BatchEvaluator>,
     /// Receives per-iteration / per-descent / per-target events.
     pub observer: Option<&'a mut dyn Observer>,
+    /// Durable snapshots every `every` iterations.
+    pub checkpoint: Option<Checkpoint<'a>>,
+    /// Scripted rank failures / stragglers on the virtual cluster.
+    pub faults: Option<&'a FaultPlan>,
 }
 
 impl<'a> Exec<'a> {
@@ -160,6 +243,13 @@ pub(crate) struct EngineSlot {
     pub iters: usize,
     pub done: bool,
     pub stop: Option<StopReason>,
+}
+
+/// In-memory recovery image a rank failure rolls back to.
+#[derive(Clone)]
+struct SlotBackup {
+    state: DescentState,
+    iters: usize,
 }
 
 struct HeapItem {
@@ -195,6 +285,7 @@ pub struct Engine<'a> {
     pub problem: &'a dyn Problem,
     pub cfg: &'a VirtualConfig,
     pub mode: Mode,
+    pub algo: Algo,
     pub(crate) slots: Vec<EngineSlot>,
     heap: BinaryHeap<HeapItem>,
     pub comm: CommStats,
@@ -202,29 +293,48 @@ pub struct Engine<'a> {
     /// No iteration *starts* at or beyond this time.
     pub cutoff: f64,
     spawn_counter: u64,
+    /// Committed engine iterations (checkpoint cadence).
+    iters_done: u64,
+    /// Per-slot recovery images (populated only when faults are active).
+    backups: Vec<Option<SlotBackup>>,
+    /// Which scheduled faults already fired (each fires at most once).
+    faults_used: Vec<bool>,
     exec: Exec<'a>,
 }
 
 impl<'a> Engine<'a> {
-    pub fn new(problem: &'a dyn Problem, cfg: &'a VirtualConfig, mode: Mode) -> Engine<'a> {
+    pub fn new(
+        problem: &'a dyn Problem,
+        cfg: &'a VirtualConfig,
+        mode: Mode,
+        algo: Algo,
+    ) -> Engine<'a> {
         assert_eq!(problem.dim(), cfg.dim, "problem/config dimension mismatch");
         Engine {
             problem,
             cfg,
             mode,
+            algo,
             slots: Vec::new(),
             heap: BinaryHeap::new(),
             comm: CommStats::default(),
             total_evals: 0,
             cutoff: cfg.budget_s,
             spawn_counter: 0,
+            iters_done: 0,
+            backups: Vec::new(),
+            faults_used: Vec::new(),
             exec: Exec::default(),
         }
     }
 
-    /// Attach an execution context (facade evaluator / observer).
+    /// Attach an execution context (facade evaluator / observer /
+    /// checkpoint sink / fault plan).
     pub fn with_exec(mut self, exec: Exec<'a>) -> Engine<'a> {
         self.exec = exec;
+        if let Some(plan) = self.exec.faults {
+            self.faults_used = vec![false; plan.faults.len()];
+        }
         self
     }
 
@@ -257,6 +367,10 @@ impl<'a> Engine<'a> {
             stop: None,
         };
         let id = self.slots.len();
+        self.backups.push(self.exec.faults.map(|_| SlotBackup {
+            state: slot.descent.capture(),
+            iters: 0,
+        }));
         self.slots.push(slot);
         self.heap.push(HeapItem { t: start_t, slot: id });
         self.exec.emit(&Event::DescentStart {
@@ -289,10 +403,144 @@ impl<'a> Engine<'a> {
         self.exec.emit(&Event::DescentEnd { slot: id, k, replica, stop, end_s });
     }
 
+    /// Photograph the complete resumable state of the run.
+    pub fn snapshot(&self) -> RunSnapshot {
+        RunSnapshot {
+            algo: self.algo,
+            problem: self.problem.name().to_string(),
+            dim: self.cfg.dim,
+            cfg: self.cfg.clone(),
+            slots: self
+                .slots
+                .iter()
+                .map(|s| SlotSnapshot {
+                    descent: s.descent.capture(),
+                    k: s.k,
+                    replica: s.replica,
+                    comm: s.comm,
+                    t: s.t,
+                    start_t: s.start_t,
+                    hits: s.hits.hits.clone(),
+                    iters: s.iters,
+                    done: s.done,
+                    stop: s.stop,
+                })
+                .collect(),
+            comm_stats: self.comm,
+            total_evals: self.total_evals,
+            cutoff: self.cutoff,
+            spawn_counter: self.spawn_counter,
+            iters_done: self.iters_done,
+        }
+    }
+
+    /// Rebuild a running engine from a snapshot. The caller supplies the
+    /// same problem (validated by name and dimension) and a fresh
+    /// execution context; unfinished slots re-enter the event heap at
+    /// their snapshotted virtual times. Emits [`Event::Restored`].
+    pub fn restore(
+        problem: &'a dyn Problem,
+        snap: &'a RunSnapshot,
+        exec: Exec<'a>,
+    ) -> Engine<'a> {
+        assert_eq!(problem.dim(), snap.cfg.dim, "problem/snapshot dimension mismatch");
+        assert_eq!(
+            problem.name(),
+            snap.problem,
+            "snapshot was taken on a different problem"
+        );
+        let faults_on = exec.faults.is_some();
+        let mut slots = Vec::with_capacity(snap.slots.len());
+        let mut backups = Vec::with_capacity(snap.slots.len());
+        let mut heap = BinaryHeap::new();
+        for (id, sl) in snap.slots.iter().enumerate() {
+            let descent =
+                Descent::restore(sl.descent.clone(), Box::new(crate::cmaes::NativeCompute::level3()));
+            backups.push(if faults_on && !sl.done {
+                Some(SlotBackup { state: sl.descent.clone(), iters: sl.iters })
+            } else {
+                None
+            });
+            if !sl.done {
+                heap.push(HeapItem { t: sl.t, slot: id });
+            }
+            slots.push(EngineSlot {
+                descent,
+                k: sl.k,
+                replica: sl.replica,
+                comm: sl.comm,
+                t: sl.t,
+                start_t: sl.start_t,
+                hits: HitRecorder::with_hits(snap.cfg.targets.clone(), sl.hits.clone()),
+                iters: sl.iters,
+                done: sl.done,
+                stop: sl.stop,
+            });
+        }
+        let faults_used = match exec.faults {
+            Some(p) => vec![false; p.faults.len()],
+            None => Vec::new(),
+        };
+        let mut eng = Engine {
+            problem,
+            cfg: &snap.cfg,
+            mode: snap.algo.mode(),
+            algo: snap.algo,
+            slots,
+            heap,
+            comm: snap.comm_stats,
+            total_evals: snap.total_evals,
+            cutoff: snap.cutoff,
+            spawn_counter: snap.spawn_counter,
+            iters_done: snap.iters_done,
+            backups,
+            faults_used,
+            exec,
+        };
+        let resume_t = eng
+            .slots
+            .iter()
+            .filter(|s| !s.done)
+            .map(|s| s.t)
+            .fold(0.0f64, f64::max);
+        let n_slots = eng.slots.len();
+        eng.exec.emit(&Event::Restored { slots: n_slots, t_s: resume_t });
+        eng
+    }
+
+    fn write_checkpoint(&mut self) {
+        let snap = self.snapshot();
+        let res = match self.exec.checkpoint.as_mut() {
+            Some(cp) => cp.sink.write(&snap),
+            None => return,
+        };
+        match res {
+            Ok(seq) => {
+                let t_s = snap
+                    .slots
+                    .iter()
+                    .map(|s| s.t)
+                    .fold(0.0f64, f64::max);
+                self.exec.emit(&Event::Checkpoint { seq, t_s });
+            }
+            Err(e) => {
+                // A failed write must not kill hours of optimization:
+                // warn once and stop checkpointing.
+                eprintln!("ipopcma: checkpoint write failed ({e}); checkpointing disabled");
+                self.exec.checkpoint = None;
+            }
+        }
+    }
+
     /// Drive the event loop until every descent is done.
     pub fn run(&mut self, policy: &mut dyn Policy) {
         let problem = self.problem;
         let fopt = problem.fopt();
+        if let Some(plan) = self.exec.faults {
+            if self.faults_used.len() != plan.faults.len() {
+                self.faults_used = vec![false; plan.faults.len()];
+            }
+        }
         while let Some(HeapItem { t, slot }) = self.heap.pop() {
             if self.slots[slot].done {
                 continue;
@@ -321,21 +569,93 @@ impl<'a> Engine<'a> {
             self.total_evals += lambda;
 
             // Charge virtual time.
-            let cost = match self.mode {
+            let mut cost = match self.mode {
                 Mode::Sequential => {
                     self.cfg.cost.sequential_iteration(lambda, self.cfg.dim, &report.timings)
                 }
-                Mode::Parallel => {
-                    let c = self.cfg.cost.parallel_iteration(
-                        lambda,
-                        self.cfg.dim,
-                        self.slots[slot].comm.cores,
-                        &report.timings,
-                    );
-                    self.comm.absorb(&c);
-                    c
-                }
+                Mode::Parallel => self.cfg.cost.parallel_iteration(
+                    lambda,
+                    self.cfg.dim,
+                    self.slots[slot].comm.cores,
+                    &report.timings,
+                ),
             };
+
+            // Fault injection (no effect without a plan).
+            let plan = self.exec.faults;
+            if let Some(plan) = plan {
+                let s_t = self.slots[slot].t;
+                let comm = self.slots[slot].comm;
+                // Stragglers stretch the evaluation wall time of every
+                // iteration overlapping their window (§3.2.1: one slow
+                // core delays the whole scatter/gather barrier).
+                for f in &plan.faults {
+                    if let FaultKind::Straggler { core, factor, until_s } = f.kind {
+                        if comm.contains(core) && s_t < until_s && s_t + cost.total_s > f.t_s {
+                            let extra = cost.eval_wall_s * (factor - 1.0);
+                            cost.eval_wall_s += extra;
+                            cost.total_s += extra;
+                        }
+                    }
+                }
+                // A rank failure inside this iteration's window kills
+                // the iteration in flight.
+                let mut struck: Option<(usize, f64, usize)> = None;
+                for (fi, f) in plan.faults.iter().enumerate() {
+                    if self.faults_used[fi] {
+                        continue;
+                    }
+                    if let FaultKind::RankFailure { core } = f.kind {
+                        if comm.contains(core) && f.t_s >= s_t && f.t_s < s_t + cost.total_s {
+                            struck = Some((fi, f.t_s, core));
+                            break;
+                        }
+                    }
+                }
+                if let Some((fi, fault_t, core)) = struck {
+                    self.faults_used[fi] = true;
+                    self.exec.emit(&Event::Fault { slot, core, t_s: fault_t });
+                    let cores_left = self.slots[slot].comm.cores - 1;
+                    if cores_left == 0 {
+                        // No survivors: the descent dies where the
+                        // fault struck (budget-cut semantics).
+                        self.slots[slot].t = fault_t;
+                        self.finalize(slot, None);
+                        policy.on_finish(self, slot);
+                        continue;
+                    }
+                    // Roll back to the last in-memory backup, shrink
+                    // the communicator, charge the state re-scatter,
+                    // and replay (same RNG stream → same trajectory).
+                    let backup = self.backups[slot]
+                        .clone()
+                        .expect("fault plan active but slot has no backup");
+                    let recovery_s = self.cfg.cost.recovery_rescatter_s(self.cfg.dim, cores_left);
+                    {
+                        let s = &mut self.slots[slot];
+                        s.comm.cores = cores_left;
+                        s.descent = Descent::restore(
+                            backup.state,
+                            Box::new(crate::cmaes::NativeCompute::level3()),
+                        );
+                        s.iters = backup.iters;
+                        s.t = fault_t + recovery_s;
+                    }
+                    let t_next = self.slots[slot].t;
+                    self.exec.emit(&Event::Recovered {
+                        slot,
+                        cores_left,
+                        recovery_s,
+                        t_s: t_next,
+                    });
+                    self.heap.push(HeapItem { t: t_next, slot });
+                    continue;
+                }
+            }
+            if self.mode == Mode::Parallel {
+                self.comm.absorb(&cost);
+            }
+
             let best_delta = report.best_so_far - fopt;
             let (k, t_now, iters_now, hit_lo, hit_hi) = {
                 let s = &mut self.slots[slot];
@@ -358,6 +678,17 @@ impl<'a> Engine<'a> {
                 t_s: t_now,
             });
 
+            // Refresh this slot's recovery image at the configured
+            // cadence (committed boundaries only).
+            if let Some(plan) = self.exec.faults {
+                let every = plan.backup_every.max(1);
+                if report.stop.is_none() && iters_now % every == 0 {
+                    let s = &self.slots[slot];
+                    self.backups[slot] =
+                        Some(SlotBackup { state: s.descent.capture(), iters: s.iters });
+                }
+            }
+
             if self.cfg.stop_at_final_target && self.slots[slot].hits.all_hit() {
                 let hit_t = self.slots[slot].hits.hits.last().unwrap().unwrap();
                 if hit_t < self.cutoff {
@@ -372,11 +703,22 @@ impl<'a> Engine<'a> {
                 let t_next = self.slots[slot].t;
                 self.heap.push(HeapItem { t: t_next, slot });
             }
+
+            // Durable checkpoint at the configured cadence, after the
+            // iteration (and any policy continuation) fully committed.
+            self.iters_done += 1;
+            let due = match &self.exec.checkpoint {
+                Some(cp) => cp.every > 0 && self.iters_done % (cp.every as u64) == 0,
+                None => false,
+            };
+            if due {
+                self.write_checkpoint();
+            }
         }
     }
 
     /// Assemble the run trace after [`Engine::run`] returned.
-    pub fn into_trace(mut self, algo: &'static str, real_t0: Instant) -> RunTrace {
+    pub fn into_trace(mut self, real_t0: Instant) -> RunTrace {
         let cfg = self.cfg;
         let end_s = self
             .slots
@@ -445,7 +787,7 @@ impl<'a> Engine<'a> {
             .collect();
 
         RunTrace {
-            algo,
+            algo: self.algo.name(),
             hits: fixed,
             best_delta,
             end_s,
@@ -492,14 +834,15 @@ mod tests {
     fn single_descent_engine_run() {
         let inst = Instance::new(1, 4, 1);
         let c = cfg(3);
-        let mut eng = Engine::new(&inst, &c, Mode::Parallel);
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed);
         eng.spawn(1, 0, Communicator::world(6), 0.0);
         eng.run(&mut NoContinuation);
-        let tr = eng.into_trace("test", Instant::now());
+        let tr = eng.into_trace(Instant::now());
         assert!(tr.hits.all_hit(), "best={}", tr.best_delta);
         assert_eq!(tr.descents.len(), 1);
         assert!(tr.descents[0].evals > 0);
         assert!(tr.end_s > 0.0);
+        assert_eq!(tr.algo, "k-distributed");
     }
 
     #[test]
@@ -507,10 +850,10 @@ mod tests {
         let inst = Instance::new(3, 4, 1); // multimodal: won't solve fast
         let mut c = cfg(5);
         c.budget_s = 1e-4; // absurdly small budget
-        let mut eng = Engine::new(&inst, &c, Mode::Parallel);
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed);
         eng.spawn(1, 0, Communicator::world(6), 0.0);
         eng.run(&mut NoContinuation);
-        let tr = eng.into_trace("test", Instant::now());
+        let tr = eng.into_trace(Instant::now());
         assert!(tr.descents[0].stop.is_none() || tr.descents[0].iters < 10_000);
         assert!(tr.end_s <= 1e-4 + 1.0);
     }
@@ -526,14 +869,111 @@ mod tests {
     fn engine_accepts_non_bbob_problems() {
         // A closure problem through the raw engine (the facade normally
         // does this wiring).
-        let p = crate::api::ClosureProblem::new(4, |x: &[f64]| {
+        let p = crate::core::ClosureProblem::new(4, |x: &[f64]| {
             x.iter().map(|v| v * v).sum()
         });
         let c = cfg(11);
-        let mut eng = Engine::new(&p, &c, Mode::Parallel);
+        let mut eng = Engine::new(&p, &c, Mode::Parallel, Algo::KDistributed);
         eng.spawn(1, 0, Communicator::world(6), 0.0);
         eng.run(&mut NoContinuation);
-        let tr = eng.into_trace("test", Instant::now());
+        let tr = eng.into_trace(Instant::now());
         assert!(tr.hits.all_hit(), "best={}", tr.best_delta);
+    }
+
+    /// Sink that remembers every snapshot it is handed.
+    struct MemSink {
+        snaps: Vec<RunSnapshot>,
+    }
+    impl SnapshotSink for MemSink {
+        fn write(&mut self, snap: &RunSnapshot) -> Result<u64, String> {
+            self.snaps.push(snap.clone());
+            Ok(self.snaps.len() as u64 - 1)
+        }
+    }
+
+    #[test]
+    fn checkpoint_sink_receives_snapshots_and_restore_finishes() {
+        let inst = Instance::new(1, 4, 1);
+        let mut c = cfg(17);
+        c.cost =
+            crate::cluster::CostModel::deterministic(6, 0.0, crate::cluster::DetCost::default());
+        let mut sink = MemSink { snaps: Vec::new() };
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed)
+            .with_exec(Exec {
+                checkpoint: Some(Checkpoint { every: 5, sink: &mut sink }),
+                ..Exec::default()
+            });
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let tr = eng.into_trace(Instant::now());
+        assert!(tr.hits.all_hit());
+        assert!(!sink.snaps.is_empty(), "cadence 5 must produce snapshots");
+        let snap = &sink.snaps[sink.snaps.len() / 2];
+        assert_eq!(snap.dim, 4);
+        assert_eq!(snap.slots.len(), 1);
+
+        // Restoring mid-run and finishing must land on the same result.
+        let mut eng2 = Engine::restore(&inst, snap, Exec::default());
+        eng2.run(&mut NoContinuation);
+        let tr2 = eng2.into_trace(Instant::now());
+        assert_eq!(tr.best_delta.to_bits(), tr2.best_delta.to_bits());
+        assert_eq!(tr.end_s.to_bits(), tr2.end_s.to_bits());
+        for (a, b) in tr.hits.hits.iter().zip(&tr2.hits.hits) {
+            assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits));
+        }
+    }
+
+    #[test]
+    fn rank_failure_recovers_and_completes() {
+        let inst = Instance::new(1, 4, 1);
+        let mut c = cfg(23);
+        c.cost =
+            crate::cluster::CostModel::deterministic(6, 0.0, crate::cluster::DetCost::default());
+        // Fault-free baseline to place the fault mid-run.
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed);
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let base = eng.into_trace(Instant::now());
+        assert!(base.hits.all_hit());
+        let t_mid = base.end_s * 0.4;
+
+        let plan = FaultPlan::new().kill_rank(2, t_mid).backup_every(4);
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed)
+            .with_exec(Exec { faults: Some(&plan), ..Exec::default() });
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let faulted = eng.into_trace(Instant::now());
+        assert!(faulted.hits.all_hit(), "run must survive the rank failure");
+        // The trajectory is replayed, so quality matches; the clock pays.
+        assert_eq!(faulted.best_delta.to_bits(), base.best_delta.to_bits());
+        assert!(
+            faulted.end_s > base.end_s,
+            "recovery must cost virtual time: {} vs {}",
+            faulted.end_s,
+            base.end_s
+        );
+        // The surviving communicator is one core short.
+        assert_eq!(faulted.occupancy[0].cores, 5);
+    }
+
+    #[test]
+    fn straggler_slows_the_clock() {
+        let inst = Instance::new(1, 4, 1);
+        let mut c = cfg(29);
+        c.cost =
+            crate::cluster::CostModel::deterministic(6, 0.0, crate::cluster::DetCost::default());
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed);
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let base = eng.into_trace(Instant::now());
+
+        let plan = FaultPlan::new().straggler(0, 8.0, 0.0, base.end_s * 2.0);
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed)
+            .with_exec(Exec { faults: Some(&plan), ..Exec::default() });
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let slow = eng.into_trace(Instant::now());
+        assert_eq!(slow.best_delta.to_bits(), base.best_delta.to_bits());
+        assert!(slow.end_s > base.end_s, "{} vs {}", slow.end_s, base.end_s);
     }
 }

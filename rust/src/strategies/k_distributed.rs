@@ -7,10 +7,10 @@
 
 use std::time::Instant;
 
-use crate::api::{Event, Problem};
 use crate::cluster::Communicator;
+use crate::core::{Event, Problem};
 
-use super::engine::{Engine, Exec, Mode, Policy, RunTrace, VirtualConfig};
+use super::engine::{Engine, Exec, Mode, Policy, RunSnapshot, RunTrace, VirtualConfig};
 
 struct RestartSameK {
     enabled: bool,
@@ -66,18 +66,47 @@ pub fn run_k_distributed_exec<'a>(
     let total_cores: usize = ladder.iter().map(|k| k * cfg.ipop.lambda_start).sum();
     let mut rest = Communicator::world(total_cores);
 
-    let mut eng = Engine::new(problem, cfg, Mode::Parallel).with_exec(exec);
+    let mut eng = Engine::new(problem, cfg, Mode::Parallel, super::Algo::KDistributed)
+        .with_exec(exec);
     let mut policy = RestartSameK {
         enabled: cfg.restart_distributed,
         replicas: vec![0; 64],
     };
     for &k in &ladder {
-        let (comm, remaining) = rest.take(k * cfg.ipop.lambda_start);
+        let (comm, remaining) = rest
+            .take(k * cfg.ipop.lambda_start)
+            .expect("the ladder's sub-communicators must fit the world by construction");
         rest = remaining;
         eng.spawn(k, 0, comm, 0.0);
     }
     eng.run(&mut policy);
-    eng.into_trace(super::Algo::KDistributed.name(), t0)
+    eng.into_trace(t0)
+}
+
+/// Continue a snapshotted K-Distributed run. The restart bookkeeping
+/// (next replica index per K) is reconstructed from the slots already
+/// present in the snapshot.
+pub fn resume_k_distributed_exec<'a>(
+    problem: &'a dyn Problem,
+    snap: &'a RunSnapshot,
+    mut exec: Exec<'a>,
+) -> RunTrace {
+    let t0 = Instant::now();
+    exec.emit(&Event::RunStart {
+        algo: super::Algo::KDistributed.name(),
+        dim: snap.cfg.dim,
+        targets: snap.cfg.targets.len(),
+    });
+    let mut replicas = vec![0usize; 64];
+    for sl in &snap.slots {
+        let idx = sl.k.trailing_zeros() as usize;
+        replicas[idx] = replicas[idx].max(sl.replica);
+    }
+    let mut policy =
+        RestartSameK { enabled: snap.cfg.restart_distributed, replicas };
+    let mut eng = Engine::restore(problem, snap, exec);
+    eng.run(&mut policy);
+    eng.into_trace(t0)
 }
 
 #[cfg(test)]

@@ -8,10 +8,10 @@
 
 use std::time::Instant;
 
-use crate::api::{Event, Problem};
-use crate::cluster::Communicator;
+use crate::cluster::{CommError, Communicator};
+use crate::core::{Event, Problem};
 
-use super::engine::{Engine, Exec, Mode, Policy, RunTrace, VirtualConfig};
+use super::engine::{Engine, Exec, Mode, Policy, RunSnapshot, RunTrace, VirtualConfig};
 
 struct Node {
     comm: Communicator,
@@ -29,8 +29,9 @@ struct Tree {
 
 impl Tree {
     /// Build the Algorithm-3 communicator tree: root spans the world with
-    /// coefficient `k_max`; children halve both.
-    fn build(world: Communicator, k_max: usize) -> Tree {
+    /// coefficient `k_max`; children halve both. Errors if any level
+    /// cannot be halved evenly (non-power-of-two sizing).
+    fn build(world: Communicator, k_max: usize) -> Result<Tree, CommError> {
         let mut nodes = Vec::new();
         let mut stack = vec![(world, k_max, None::<usize>)];
         while let Some((comm, k, parent)) = stack.pop() {
@@ -43,12 +44,12 @@ impl Tree {
                 children_end_max: 0.0,
             });
             if k > 1 {
-                let (a, b) = comm.split_half();
+                let (a, b) = comm.split_half()?;
                 stack.push((a, k / 2, Some(id)));
                 stack.push((b, k / 2, Some(id)));
             }
         }
-        Tree { nodes, node_of_slot: Vec::new() }
+        Ok(Tree { nodes, node_of_slot: Vec::new() })
     }
 
     fn leaves(&self) -> Vec<usize> {
@@ -111,15 +112,57 @@ pub fn run_k_replicated_exec<'a>(
     });
     let world = Communicator::world(k_max * cfg.ipop.lambda_start);
 
-    let mut tree = Tree::build(world, k_max);
-    let mut eng = Engine::new(problem, cfg, Mode::Parallel).with_exec(exec);
+    let mut tree = Tree::build(world, k_max)
+        .expect("a power-of-two K_max · λ_start world halves cleanly");
+    let mut eng = Engine::new(problem, cfg, Mode::Parallel, super::Algo::KReplicated)
+        .with_exec(exec);
     for leaf in tree.leaves() {
         let comm = tree.nodes[leaf].comm;
         let slot = eng.spawn(1, tree.node_of_slot.len(), comm, 0.0);
         tree.node_of_slot.push((slot, leaf));
     }
     eng.run(&mut tree);
-    eng.into_trace(super::Algo::KReplicated.name(), t0)
+    eng.into_trace(t0)
+}
+
+/// Continue a snapshotted K-Replicated run. The Algorithm-3 tree is
+/// rebuilt deterministically from the config; snapshot slots are mapped
+/// back onto tree nodes by `(core offset, K)` — invariant even when a
+/// rank failure shrank a slot's communicator — and finished descents
+/// are replayed into the parents' pending-children bookkeeping.
+pub fn resume_k_replicated_exec<'a>(
+    problem: &'a dyn Problem,
+    snap: &'a RunSnapshot,
+    mut exec: Exec<'a>,
+) -> RunTrace {
+    let t0 = Instant::now();
+    let k_max = snap.cfg.ipop.k_max;
+    exec.emit(&Event::RunStart {
+        algo: super::Algo::KReplicated.name(),
+        dim: snap.cfg.dim,
+        targets: snap.cfg.targets.len(),
+    });
+    let world = Communicator::world(k_max * snap.cfg.ipop.lambda_start);
+    let mut tree = Tree::build(world, k_max)
+        .expect("a power-of-two K_max · λ_start world halves cleanly");
+    for (slot, sl) in snap.slots.iter().enumerate() {
+        let node = tree
+            .nodes
+            .iter()
+            .position(|n| n.comm.offset == sl.comm.offset && n.k == sl.k)
+            .expect("snapshot slot does not map onto the Algorithm-3 tree");
+        tree.node_of_slot.push((slot, node));
+        if sl.done {
+            if let Some(p) = tree.nodes[node].parent {
+                let parent = &mut tree.nodes[p];
+                parent.pending_children -= 1;
+                parent.children_end_max = parent.children_end_max.max(sl.t);
+            }
+        }
+    }
+    let mut eng = Engine::restore(problem, snap, exec);
+    eng.run(&mut tree);
+    eng.into_trace(t0)
 }
 
 #[cfg(test)]
@@ -147,7 +190,7 @@ mod tests {
 
     #[test]
     fn tree_structure_matches_algorithm3() {
-        let t = Tree::build(Communicator::world(48), 8);
+        let t = Tree::build(Communicator::world(48), 8).unwrap();
         // 8 leaves + 4 + 2 + 1 internal = 15 nodes.
         assert_eq!(t.nodes.len(), 15);
         assert_eq!(t.leaves().len(), 8);

@@ -18,13 +18,14 @@ pub mod k_replicated;
 pub mod sequential;
 
 pub use engine::{
-    DescentTrace, Engine, Exec, Mode, NoContinuation, Policy, RunTrace, VirtualConfig,
+    Checkpoint, DescentTrace, Engine, Exec, Mode, NoContinuation, Policy, RunSnapshot,
+    RunTrace, SlotSnapshot, SnapshotSink, VirtualConfig,
 };
-pub use k_distributed::{run_k_distributed, run_k_distributed_exec};
-pub use k_replicated::{run_k_replicated, run_k_replicated_exec};
-pub use sequential::{run_sequential, run_sequential_exec};
+pub use k_distributed::{run_k_distributed, run_k_distributed_exec, resume_k_distributed_exec};
+pub use k_replicated::{run_k_replicated, run_k_replicated_exec, resume_k_replicated_exec};
+pub use sequential::{run_sequential, run_sequential_exec, resume_sequential_exec};
 
-use crate::api::Problem;
+use crate::core::Problem;
 
 /// Which strategy — for labelling reports.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -42,6 +43,19 @@ impl Algo {
             Algo::Sequential => "sequential-ipop",
             Algo::KReplicated => "k-replicated",
             Algo::KDistributed => "k-distributed",
+        }
+    }
+
+    /// Inverse of [`Algo::name`] (snapshots store the name).
+    pub fn from_name(name: &str) -> Option<Algo> {
+        Algo::ALL.into_iter().find(|a| a.name() == name)
+    }
+
+    /// How this strategy charges iteration costs.
+    pub fn mode(self) -> Mode {
+        match self {
+            Algo::Sequential => Mode::Sequential,
+            Algo::KReplicated | Algo::KDistributed => Mode::Parallel,
         }
     }
 
@@ -63,6 +77,23 @@ impl Algo {
             Algo::Sequential => run_sequential_exec(problem, cfg, exec),
             Algo::KReplicated => run_k_replicated_exec(problem, cfg, exec),
             Algo::KDistributed => run_k_distributed_exec(problem, cfg, exec),
+        }
+    }
+
+    /// Continue a snapshotted run of this strategy: rebuild the engine
+    /// and the strategy's continuation bookkeeping from the snapshot
+    /// and drive the remaining descents to completion.
+    pub fn resume_exec<'a>(
+        self,
+        problem: &'a dyn Problem,
+        snap: &'a RunSnapshot,
+        exec: Exec<'a>,
+    ) -> RunTrace {
+        assert_eq!(self, snap.algo, "snapshot was taken by a different strategy");
+        match self {
+            Algo::Sequential => resume_sequential_exec(problem, snap, exec),
+            Algo::KReplicated => resume_k_replicated_exec(problem, snap, exec),
+            Algo::KDistributed => resume_k_distributed_exec(problem, snap, exec),
         }
     }
 }

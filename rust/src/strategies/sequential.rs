@@ -3,10 +3,10 @@
 
 use std::time::Instant;
 
-use crate::api::{Event, Problem};
 use crate::cluster::Communicator;
+use crate::core::{Event, Problem};
 
-use super::engine::{Engine, Exec, Mode, Policy, RunTrace, VirtualConfig};
+use super::engine::{Engine, Exec, Mode, Policy, RunSnapshot, RunTrace, VirtualConfig};
 
 struct Chain {
     ladder: Vec<usize>,
@@ -54,11 +54,32 @@ pub fn run_sequential_exec<'a>(
         targets: cfg.targets.len(),
     });
     let ladder = cfg.ipop.ladder();
-    let mut eng = Engine::new(problem, cfg, Mode::Sequential).with_exec(exec);
+    let mut eng = Engine::new(problem, cfg, Mode::Sequential, super::Algo::Sequential)
+        .with_exec(exec);
     let mut chain = Chain { ladder: ladder.clone(), next: 1 };
     eng.spawn(ladder[0], 0, Communicator::world(1), 0.0);
     eng.run(&mut chain);
-    eng.into_trace(super::Algo::Sequential.name(), t0)
+    eng.into_trace(t0)
+}
+
+/// Continue a snapshotted sequential run. The ladder position is
+/// implicit in the snapshot: each slot spawned one ladder step, so the
+/// next K to try is `ladder[slots.len()]`.
+pub fn resume_sequential_exec<'a>(
+    problem: &'a dyn Problem,
+    snap: &'a RunSnapshot,
+    mut exec: Exec<'a>,
+) -> RunTrace {
+    let t0 = Instant::now();
+    exec.emit(&Event::RunStart {
+        algo: super::Algo::Sequential.name(),
+        dim: snap.cfg.dim,
+        targets: snap.cfg.targets.len(),
+    });
+    let mut chain = Chain { ladder: snap.cfg.ipop.ladder(), next: snap.slots.len() };
+    let mut eng = Engine::restore(problem, snap, exec);
+    eng.run(&mut chain);
+    eng.into_trace(t0)
 }
 
 #[cfg(test)]

@@ -1,0 +1,351 @@
+//! Checkpoint/restore + fault-injection integration tests: the resumed
+//! run must reproduce the uninterrupted trajectory **bit-for-bit** under
+//! a deterministic cost model, and a rank failure must recover with the
+//! §4.1 re-scatter cost charged — see ISSUE acceptance criteria.
+
+use std::path::PathBuf;
+
+use ipopcma::api::{Backend, Event, Recorder, Solver};
+use ipopcma::bbob::Instance;
+use ipopcma::cluster::{CostModel, DetCost, FaultPlan};
+use ipopcma::ipop::IpopConfig;
+use ipopcma::metrics::paper_targets;
+use ipopcma::persist::{decode_descent, decode_snapshot, encode_descent, encode_snapshot};
+use ipopcma::runtime::json::Json;
+use ipopcma::strategies::{Algo, Checkpoint, Exec, RunSnapshot, RunTrace, SnapshotSink, VirtualConfig};
+
+/// In-memory sink capturing every snapshot the engine writes.
+#[derive(Default)]
+struct MemSink {
+    snaps: Vec<RunSnapshot>,
+}
+
+impl SnapshotSink for MemSink {
+    fn write(&mut self, snap: &RunSnapshot) -> Result<u64, String> {
+        self.snaps.push(snap.clone());
+        Ok(self.snaps.len() as u64 - 1)
+    }
+}
+
+fn det_cfg(seed: u64) -> VirtualConfig {
+    let mut ipop = IpopConfig::bbob(6, 4);
+    ipop.max_evals = 20_000;
+    VirtualConfig {
+        ipop,
+        dim: 4,
+        cost: CostModel::deterministic(6, 0.0, DetCost::default()),
+        budget_s: 1e6,
+        targets: paper_targets(),
+        stop_at_final_target: true,
+        restart_distributed: false,
+        real_eval_cap: 500_000,
+        seed,
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("ipopcma-checkpoint-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Bit-level equality of two run traces: same hits, same clocks, same
+/// qualities, same per-descent stories.
+fn assert_trace_bits_eq(a: &RunTrace, b: &RunTrace, ctx: &str) {
+    assert_eq!(a.total_evals, b.total_evals, "{ctx}: total_evals");
+    assert_eq!(
+        a.best_delta.to_bits(),
+        b.best_delta.to_bits(),
+        "{ctx}: best_delta {} vs {}",
+        a.best_delta,
+        b.best_delta
+    );
+    assert_eq!(a.end_s.to_bits(), b.end_s.to_bits(), "{ctx}: end_s");
+    assert_eq!(a.hits.hits.len(), b.hits.hits.len(), "{ctx}: ladder length");
+    for (i, (x, y)) in a.hits.hits.iter().zip(&b.hits.hits).enumerate() {
+        assert_eq!(
+            x.map(f64::to_bits),
+            y.map(f64::to_bits),
+            "{ctx}: hit time of target {i}"
+        );
+    }
+    assert_eq!(a.descents.len(), b.descents.len(), "{ctx}: descent count");
+    for (i, (x, y)) in a.descents.iter().zip(&b.descents).enumerate() {
+        assert_eq!(x.k, y.k, "{ctx}: descent {i} k");
+        assert_eq!(x.replica, y.replica, "{ctx}: descent {i} replica");
+        assert_eq!(x.iters, y.iters, "{ctx}: descent {i} iters");
+        assert_eq!(x.evals, y.evals, "{ctx}: descent {i} evals");
+        assert_eq!(
+            x.start_s.to_bits(),
+            y.start_s.to_bits(),
+            "{ctx}: descent {i} start_s"
+        );
+        assert_eq!(x.end_s.to_bits(), y.end_s.to_bits(), "{ctx}: descent {i} end_s");
+        assert_eq!(
+            x.best_delta.to_bits(),
+            y.best_delta.to_bits(),
+            "{ctx}: descent {i} best_delta"
+        );
+        assert_eq!(
+            x.stop.map(|s| s.name()),
+            y.stop.map(|s| s.name()),
+            "{ctx}: descent {i} stop reason"
+        );
+        for (j, (hx, hy)) in x.hits.hits.iter().zip(&y.hits.hits).enumerate() {
+            assert_eq!(
+                hx.map(f64::to_bits),
+                hy.map(f64::to_bits),
+                "{ctx}: descent {i} hit {j}"
+            );
+        }
+    }
+}
+
+/// Run `algo` once plain and once with an in-memory checkpoint sink;
+/// return (baseline trace, captured snapshots).
+fn run_with_snapshots(
+    algo: Algo,
+    inst: &Instance,
+    cfg: &VirtualConfig,
+) -> (RunTrace, Vec<RunSnapshot>) {
+    let base = algo.run(inst, cfg);
+    let mut sink = MemSink::default();
+    let observed = algo.run_exec(
+        inst,
+        cfg,
+        Exec {
+            checkpoint: Some(Checkpoint { every: 3, sink: &mut sink }),
+            ..Exec::default()
+        },
+    );
+    // Checkpointing is pure observation: it must not perturb the run.
+    assert_trace_bits_eq(&base, &observed, &format!("{} checkpointed", algo.name()));
+    assert!(
+        !sink.snaps.is_empty(),
+        "{}: no snapshots were written",
+        algo.name()
+    );
+    (base, sink.snaps)
+}
+
+#[test]
+fn descent_state_round_trips_bit_exactly_including_non_finite_sigma() {
+    let inst = Instance::new(8, 4, 1);
+    let (_, snaps) = run_with_snapshots(Algo::KDistributed, &inst, &det_cfg(3));
+    let mid = &snaps[snaps.len() / 2];
+    // Exercise the codec on a structurally real state, then push the
+    // fields JSON cannot represent natively: non-finite σ, NaN best, a
+    // cached polar-method spare, a negative zero.
+    let mut d = mid.slots[0].descent.clone();
+    d.state.sigma = f64::INFINITY;
+    d.state.condition = f64::NAN;
+    d.best_f = f64::NAN;
+    d.rng.spare = Some(-0.0);
+    d.hist_short.push(-0.0);
+    let mut text = String::new();
+    encode_descent(&d).write(&mut text);
+    let back = decode_descent(&Json::parse(&text).unwrap()).unwrap();
+
+    assert_eq!(back.n, d.n);
+    assert_eq!(back.lambda, d.lambda);
+    assert_eq!(back.state.mean.len(), d.state.mean.len());
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&back.state.mean), bits(&d.state.mean));
+    assert_eq!(back.state.sigma.to_bits(), d.state.sigma.to_bits());
+    assert_eq!(back.state.sigma0.to_bits(), d.state.sigma0.to_bits());
+    assert_eq!(bits(back.state.c.as_slice()), bits(d.state.c.as_slice()));
+    assert_eq!(bits(back.state.b.as_slice()), bits(d.state.b.as_slice()));
+    assert_eq!(bits(back.state.bd.as_slice()), bits(d.state.bd.as_slice()));
+    assert_eq!(bits(&back.state.d), bits(&d.state.d));
+    assert_eq!(bits(&back.state.p_sigma), bits(&d.state.p_sigma));
+    assert_eq!(bits(&back.state.p_c), bits(&d.state.p_c));
+    assert_eq!(back.state.gen, d.state.gen);
+    assert_eq!(back.state.eigen_gen, d.state.eigen_gen);
+    assert_eq!(back.state.condition.to_bits(), d.state.condition.to_bits());
+    assert_eq!(back.rng.s, d.rng.s);
+    assert_eq!(back.rng.spare.map(f64::to_bits), d.rng.spare.map(f64::to_bits));
+    assert_eq!(bits(&back.hist_short), bits(&d.hist_short));
+    assert_eq!(bits(&back.hist_long_best), bits(&d.hist_long_best));
+    assert_eq!(bits(&back.hist_long_median), bits(&d.hist_long_median));
+    assert_eq!(back.eager_eigen, d.eager_eigen);
+    assert_eq!(back.best_f.to_bits(), d.best_f.to_bits());
+    assert_eq!(bits(&back.best_x), bits(&d.best_x));
+    assert_eq!(back.evals, d.evals);
+    assert_eq!(back.order, d.order);
+    assert_eq!(back.stopped.map(|s| s.name()), d.stopped.map(|s| s.name()));
+}
+
+#[test]
+fn every_snapshot_of_a_run_round_trips_through_json() {
+    let inst = Instance::new(1, 4, 1);
+    let (_, snaps) = run_with_snapshots(Algo::KReplicated, &inst, &det_cfg(5));
+    for (i, snap) in snaps.iter().enumerate() {
+        let mut text = String::new();
+        encode_snapshot(snap).write(&mut text);
+        let back = decode_snapshot(&Json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("snapshot {i}: {e}"));
+        assert_eq!(back.algo, snap.algo, "snapshot {i}");
+        assert_eq!(back.problem, snap.problem);
+        assert_eq!(back.dim, snap.dim);
+        assert_eq!(back.total_evals, snap.total_evals);
+        assert_eq!(back.cutoff.to_bits(), snap.cutoff.to_bits());
+        assert_eq!(back.spawn_counter, snap.spawn_counter);
+        assert_eq!(back.iters_done, snap.iters_done);
+        assert_eq!(back.cfg.seed, snap.cfg.seed);
+        assert_eq!(back.slots.len(), snap.slots.len());
+        for (a, b) in back.slots.iter().zip(&snap.slots) {
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.replica, b.replica);
+            assert_eq!(a.comm.offset, b.comm.offset);
+            assert_eq!(a.comm.cores, b.comm.cores);
+            assert_eq!(a.t.to_bits(), b.t.to_bits());
+            assert_eq!(a.start_t.to_bits(), b.start_t.to_bits());
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.done, b.done);
+            assert_eq!(
+                a.descent.state.mean.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.descent.state.mean.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(a.descent.rng.s, b.descent.rng.s);
+        }
+    }
+}
+
+/// The headline acceptance test: for every strategy, a run killed
+/// mid-descent and resumed from its snapshot reproduces the
+/// uninterrupted trajectory bit-for-bit.
+#[test]
+fn killed_and_resumed_runs_match_uninterrupted_bit_for_bit() {
+    let inst = Instance::new(1, 4, 2);
+    let cfg = det_cfg(11);
+    for algo in Algo::ALL {
+        let (base, snaps) = run_with_snapshots(algo, &inst, &cfg);
+        // "Kill" the run at several points: everything after each
+        // snapshot is discarded, then resumed from disk-equivalent state.
+        for idx in [0, snaps.len() / 2, snaps.len() - 1] {
+            let snap = &snaps[idx];
+            let resumed = algo.resume_exec(&inst, snap, Exec::default());
+            assert_trace_bits_eq(
+                &base,
+                &resumed,
+                &format!("{} resumed from snapshot {idx}", algo.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn facade_checkpoints_to_disk_and_resumes_through_the_store() {
+    let dir = tmp_dir("facade");
+    let cfg = det_cfg(17);
+    let baseline = Solver::on(Instance::new(1, 4, 2))
+        .strategy(Algo::KDistributed)
+        .backend(Backend::Virtual(cfg.cost))
+        .virtual_config(cfg.clone())
+        .run();
+
+    let mut rec = Recorder::new();
+    let checkpointed = Solver::on(Instance::new(1, 4, 2))
+        .strategy(Algo::KDistributed)
+        .backend(Backend::Virtual(cfg.cost))
+        .virtual_config(cfg.clone())
+        .checkpoint_dir(&dir)
+        .checkpoint_every(2)
+        .run_observed(&mut rec);
+    assert_trace_bits_eq(&baseline.trace, &checkpointed.trace, "facade checkpointed");
+    // Checkpoint events carry strictly increasing sequence numbers.
+    let seqs: Vec<u64> = rec
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Checkpoint { seq, .. } => Some(*seq),
+            _ => None,
+        })
+        .collect();
+    assert!(!seqs.is_empty(), "no Checkpoint events observed");
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seqs not increasing: {seqs:?}");
+    assert!(dir.join("manifest.json").is_file());
+
+    // Resume from the directory (its newest snapshot): the remaining
+    // work replays and the final report matches the baseline.
+    let mut rec2 = Recorder::new();
+    let resumed = Solver::on(Instance::new(1, 4, 2))
+        .resume_from(&dir)
+        .backend(Backend::Virtual(cfg.cost))
+        .try_run_observed(&mut rec2)
+        .unwrap();
+    assert_trace_bits_eq(&baseline.trace, &resumed.trace, "facade resumed");
+    assert_eq!(resumed.algo, Algo::KDistributed);
+    assert_eq!(
+        rec2.events
+            .iter()
+            .filter(|e| matches!(e, Event::Restored { .. }))
+            .count(),
+        1
+    );
+
+    // A mismatched problem is a typed error, not a corrupt run.
+    let err = Solver::on(Instance::new(2, 4, 2))
+        .resume_from(&dir)
+        .try_run()
+        .unwrap_err();
+    assert!(err.contains("snapshot is of problem"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fault acceptance: a scripted rank failure mid-run recovers onto the
+/// surviving cores, reproduces the same search trajectory, and pays the
+/// §4.1 re-scatter cost on the virtual clock.
+#[test]
+fn rank_failure_recovers_with_recovery_cost_charged() {
+    // A one-rung ladder (K_max = 1): the single descent owns all 6
+    // cores, so the killed core is unambiguously its, and the recovery
+    // delay shows up in the run's end time.
+    let mut cfg = det_cfg(23);
+    cfg.ipop = {
+        let mut ipop = IpopConfig::bbob(6, 1);
+        ipop.max_evals = 20_000;
+        ipop
+    };
+    let inst = Instance::new(1, 4, 2);
+    let baseline = Solver::on(Instance::new(1, 4, 2))
+        .strategy(Algo::KDistributed)
+        .backend(Backend::Virtual(cfg.cost))
+        .virtual_config(cfg.clone())
+        .run();
+    assert!(baseline.solved(), "baseline must solve sphere");
+
+    let kill_t = 0.4 * baseline.trace.end_s;
+    let mut rec = Recorder::new();
+    let faulted = Solver::on(inst)
+        .strategy(Algo::KDistributed)
+        .backend(Backend::Virtual(cfg.cost))
+        .virtual_config(cfg)
+        .fault_plan(FaultPlan::new().kill_rank(2, kill_t).backup_every(4))
+        .run_observed(&mut rec);
+
+    // Same trajectory (the replay re-draws the same RNG stream) …
+    assert!(faulted.solved(), "faulted run must still solve");
+    assert_eq!(
+        faulted.best_delta().to_bits(),
+        baseline.best_delta().to_bits()
+    );
+    // … but the clock paid for the failure.
+    assert!(
+        faulted.trace.end_s > baseline.trace.end_s,
+        "recovery must cost virtual time: faulted {} vs baseline {}",
+        faulted.trace.end_s,
+        baseline.trace.end_s
+    );
+    let faults = rec.count(|e| matches!(e, Event::Fault { .. }));
+    let recoveries = rec.count(|e| matches!(e, Event::Recovered { .. }));
+    assert_eq!(faults, 1, "the scripted fault fires exactly once");
+    assert_eq!(recoveries, 1);
+    for e in &rec.events {
+        if let Event::Recovered { recovery_s, cores_left, .. } = e {
+            assert!(*recovery_s > 0.0);
+            assert_eq!(*cores_left, 5, "K=1 descent loses one of its 6 cores");
+        }
+    }
+}
