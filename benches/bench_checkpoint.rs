@@ -43,6 +43,7 @@ fn main() {
             stop_at_final_target: false,
             restart_distributed: false,
             real_eval_cap: 1_000_000,
+            linalg_threads: 1,
             seed: 1,
         };
         let inst = Instance::new(8, dim, 1); // Rosenbrock: long descents

@@ -1,17 +1,141 @@
-//! Fig. 5 — performance gains of the linear-algebra rewrites (§3.1/§4.2):
-//! eigendecomposition (reference Jacobi vs `syev`), covariance
-//! adaptation and sampling (naive vs Level-2 vs Level-3), for dims
-//! {10, 40, 200, 1000} and K ∈ {1, big}.
+//! Linalg kernel benchmark, two modes:
 //!
-//! `cargo bench --bench bench_linalg` — writes bench_out/fig5.csv.
+//! * default — sweep GEMM / SYRK / SYEV over dimensions × pool widths and
+//!   emit `BENCH_linalg.json` (schema `bench_linalg/v1`), the file the CI
+//!   bench-smoke job uploads and `ipopcma bench-diff` gates on:
+//!
+//!   `cargo bench --bench bench_linalg -- [--max-dim 512] [--threads 1,2,4,8]
+//!                                        [--reps 5] [--json bench_out/BENCH_linalg.json]`
+//!
+//! * `--fig5` — the paper's Fig. 5 tier comparison (reference vs Level-2
+//!   vs Level-3; writes bench_out/fig5.csv).
 
+use ipopcma::cli::Args;
 use ipopcma::cmaes::{CmaState, Compute, NativeCompute};
+use ipopcma::harness::linalg_bench::BenchReport;
 use ipopcma::harness::time_median;
-use ipopcma::linalg::{EigKind, Matrix};
+use ipopcma::linalg::{gemm, syev_mt, syrk_mt, EigKind, GemmKind, Matrix};
 use ipopcma::report::{ascii_table, fmt_val, Csv};
 use ipopcma::rng::NormalSource;
 
 const LAMBDA_START: usize = 12; // the paper's λ_start
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = if args.flag("fig5") { fig5() } else { sweep(&args) };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+// ---- default mode: the bench-JSON sweep ----------------------------------
+
+fn parse_threads(s: &str) -> Result<Vec<usize>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let t: usize = part
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad thread count '{part}' in --threads"))?;
+        if t < 1 {
+            return Err("--threads entries must be >= 1".into());
+        }
+        out.push(t);
+    }
+    out.sort_unstable();
+    out.dedup();
+    if !out.contains(&1) {
+        // The serial column anchors every speedup; always measure it.
+        out.insert(0, 1);
+    }
+    Ok(out)
+}
+
+fn sweep(args: &Args) -> Result<(), String> {
+    let max_dim: usize = args.typed("max-dim", 512)?;
+    let reps: usize = args.typed("reps", 5)?;
+    let threads = parse_threads(args.get("threads").unwrap_or("1,2,4,8"))?;
+    let json_path = args.get("json").unwrap_or("bench_out/BENCH_linalg.json").to_string();
+    if reps < 1 {
+        return Err("--reps must be >= 1".into());
+    }
+
+    let dims: Vec<usize> = [32usize, 64, 128, 256, 512, 1024]
+        .into_iter()
+        .filter(|&d| d <= max_dim)
+        .collect();
+    if dims.is_empty() {
+        return Err(format!("--max-dim {max_dim} leaves no dimensions to sweep"));
+    }
+
+    let mut report = BenchReport::new();
+    for &d in &dims {
+        let mut g = NormalSource::new(42);
+
+        // GEMM: the sampling y = B·D·z shape, squared up (d × d × d).
+        let a = Matrix::from_fn(d, d, |_, _| g.sample());
+        let b = Matrix::from_fn(d, d, |_, _| g.sample());
+        let mut c = Matrix::zeros(d, d);
+        let gemm_flops = 2.0 * (d as f64).powi(3);
+        for &t in &threads {
+            let kind = if t == 1 { GemmKind::Level3 } else { GemmKind::Level3Mt(t) };
+            let secs = time_median(reps, || {
+                gemm(kind, 1.0, &a, &b, 0.0, &mut c);
+                c[(0, 0)]
+            });
+            report.push("gemm", d, t, secs, gemm_flops / secs / 1e9);
+        }
+
+        // SYRK: the rank-μ update shape (μ = d/2, COCO-style weights).
+        let mu = (d / 2).max(1);
+        let y = Matrix::from_fn(d, mu, |_, _| g.sample());
+        let w = vec![1.0 / mu as f64; mu];
+        let mut cm = Matrix::zeros(d, d);
+        // Lower triangle: d(d+1)/2 dots of length μ, 2 FLOPs per MAC.
+        let syrk_flops = (d * (d + 1) * mu) as f64;
+        for &t in &threads {
+            let secs = time_median(reps, || {
+                syrk_mt(t, 0.1, &y, &w, 0.0, &mut cm);
+                cm[(0, 0)]
+            });
+            report.push("syrk", d, t, secs, syrk_flops / secs / 1e9);
+        }
+
+        // SYEV on a random symmetric matrix (tred2 + tql2, ~(4/3)d³).
+        let mut s = Matrix::from_fn(d, d, |_, _| g.sample());
+        s.symmetrize();
+        let eig_flops = 4.0 / 3.0 * (d as f64).powi(3);
+        let eig_reps = reps.min(3);
+        for &t in &threads {
+            let secs = time_median(eig_reps, || {
+                syev_mt(t, &s).expect("syev convergence").values[0]
+            });
+            report.push("syev", d, t, secs, eig_flops / secs / 1e9);
+        }
+        eprintln!("d={d}: done ({} entries)", report.entries.len());
+    }
+
+    if let Some(dir) = std::path::Path::new(&json_path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    report
+        .write_file(&json_path)
+        .map_err(|e| format!("writing {json_path}: {e}"))?;
+    println!("{}", report.speedup_table());
+    println!("wrote {json_path}");
+    Ok(())
+}
+
+// ---- --fig5: the paper's tier comparison ---------------------------------
 
 fn random_state(n: usize, seed: u64) -> CmaState {
     // A mildly anisotropic SPD covariance so eig/gemm see real work.
@@ -25,7 +149,7 @@ fn random_state(n: usize, seed: u64) -> CmaState {
         }
         st.c[(i, i)] = 1.0 + 0.5 * (i as f64 / n as f64);
     }
-    st.refresh_eigen(EigKind::Syev);
+    st.refresh_eigen(EigKind::Syev).expect("syev convergence");
     st
 }
 
@@ -62,12 +186,12 @@ fn time_update(tier: NativeCompute, n: usize, lambda: usize, reps: usize) -> f64
 
 fn time_eig(kind: EigKind, st: &CmaState, reps: usize) -> f64 {
     time_median(reps, || {
-        let e = kind.decompose(&st.c);
+        let e = kind.decompose(&st.c).expect("eig convergence");
         e.values[0]
     })
 }
 
-fn main() {
+fn fig5() -> Result<(), String> {
     let dims: &[usize] = &[10, 40, 200, 1000];
     let mut csv = Csv::new(&[
         "dim", "k", "lambda", "eig_ref_s", "eig_syev_s", "adapt_naive_s", "adapt_l2_s",
@@ -79,7 +203,13 @@ fn main() {
         // Paper columns: K = 1 and K = 2⁸ (scaled down for n > 40 to keep
         // naive-tier timing tractable on one core).
         let k_big = if n <= 40 { 256 } else { 16 };
-        let reps = if n >= 1000 { 1 } else if n >= 200 { 3 } else { 9 };
+        let reps = if n >= 1000 {
+            1
+        } else if n >= 200 {
+            3
+        } else {
+            9
+        };
         let st = random_state(n, 3);
 
         for (klabel, lambda) in [("1", LAMBDA_START), ("big", k_big * LAMBDA_START)] {
@@ -140,7 +270,7 @@ fn main() {
         }
     }
 
-    csv.write_to("bench_out/fig5.csv").expect("write csv");
+    csv.write_to("bench_out/fig5.csv").map_err(|e| format!("write csv: {e}"))?;
     println!(
         "{}",
         ascii_table(
@@ -158,4 +288,5 @@ fn main() {
         )
     );
     println!("paper shape: eig gain grows with dim; adaptation L3 >> L2 ~ 1; sampling L3 > L2;\nall GEMM gains grow with K. CSV: bench_out/fig5.csv");
+    Ok(())
 }

@@ -40,7 +40,7 @@ fn main() {
                 }
                 st.c[(i, i)] = 1.0 + 0.1 * i as f64;
             }
-            st.refresh_eigen(EigKind::Syev);
+            st.refresh_eigen(EigKind::Syev).expect("syev convergence");
 
             let z = Matrix::from_fn(n, lam, |_, _| g.sample());
             let mut y = Matrix::zeros(n, lam);
@@ -124,13 +124,13 @@ fn main() {
         let t_nat = time_median(reps, || {
             let mut s2 = st.clone();
             s2.c = c0.clone();
-            s2.refresh_eigen(EigKind::Syev);
+            s2.refresh_eigen(EigKind::Syev).expect("syev convergence");
             s2.d[0]
         });
         let t_xla = time_median(reps, || {
             let mut s2 = st.clone();
             s2.c = c0.clone();
-            xla.refresh_eigen(&mut s2);
+            xla.refresh_eigen(&mut s2).expect("xla eigh");
             s2.d[0]
         });
         csv.row(&[

@@ -1,27 +1,89 @@
-//! §Perf probe: GFLOP/s of the three GEMM tiers and the two eigensolvers
-//! at CMA-ES-relevant shapes. Used for the EXPERIMENTS.md §Perf log.
+//! §Perf probe: GFLOP/s of the GEMM tiers and eigensolvers at
+//! CMA-ES-relevant shapes, plus a thread sweep of the multithreaded
+//! kernels printed as the Fig. 5-style speedup table (same schema as
+//! `BENCH_linalg.json`). Used for the EXPERIMENTS.md §Perf log.
+//!
+//! `cargo run --release --example perf_gemm`
+
+use ipopcma::harness::linalg_bench::BenchReport;
+use ipopcma::harness::time_median;
+use ipopcma::linalg::*;
+use ipopcma::rng::Xoshiro256pp;
+
 fn main() {
-    use ipopcma::harness::time_median;
-    use ipopcma::linalg::*;
-    use ipopcma::rng::Xoshiro256pp;
     let mut rng = Xoshiro256pp::new(1);
-    for &(m, k, n, reps) in &[(1000usize, 1000usize, 1000usize, 3usize), (1000, 1000, 192, 5), (40, 40, 192, 50), (200, 200, 96, 20)] {
+
+    // Serial tier comparison at mixed shapes (the original probe).
+    let shapes = [
+        (1000usize, 1000usize, 1000usize, 3usize),
+        (1000, 1000, 192, 5),
+        (40, 40, 192, 50),
+        (200, 200, 96, 20),
+    ];
+    for &(m, k, n, reps) in &shapes {
         let a = Matrix::from_fn(m, k, |_, _| rng.uniform(-1.0, 1.0));
         let b = Matrix::from_fn(k, n, |_, _| rng.uniform(-1.0, 1.0));
         let mut c = Matrix::zeros(m, n);
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
         for kind in [GemmKind::Level3, GemmKind::Level2, GemmKind::Naive] {
-            if kind != GemmKind::Level3 && m >= 1000 && n >= 1000 { continue; }
-            let t = time_median(reps, || { gemm(kind, 1.0, &a, &b, 0.0, &mut c); c[(0,0)] });
+            if kind != GemmKind::Level3 && m >= 1000 && n >= 1000 {
+                continue;
+            }
+            let t = time_median(reps, || {
+                gemm(kind, 1.0, &a, &b, 0.0, &mut c);
+                c[(0, 0)]
+            });
             println!("gemm {} {m}x{k}x{n}: {:.3}s  {:.2} GF/s", kind.name(), t, flops / t / 1e9);
         }
     }
     for &n in &[40usize, 200] {
         let mut a = Matrix::from_fn(n, n, |_, _| rng.uniform(-1.0, 1.0));
         a.symmetrize();
-        let t = time_median(3, || syev(&a).values[0]);
+        let t = time_median(3, || syev(&a).unwrap().values[0]);
         println!("syev n={n}: {:.4}s", t);
         let t = time_median(3, || jacobi_eig(&a).values[0]);
         println!("jacobi n={n}: {:.4}s", t);
     }
+
+    // Thread sweep of the pool-backed kernels: one BenchReport in memory,
+    // printed as the same speedup table bench_linalg writes to JSON.
+    let threads = [1usize, 2, 4, 8];
+    let mut report = BenchReport::new();
+    for &d in &[128usize, 512] {
+        let a = Matrix::from_fn(d, d, |_, _| rng.uniform(-1.0, 1.0));
+        let b = Matrix::from_fn(d, d, |_, _| rng.uniform(-1.0, 1.0));
+        let mut c = Matrix::zeros(d, d);
+        let gemm_flops = 2.0 * (d as f64).powi(3);
+        let reps = if d >= 512 { 3 } else { 9 };
+        for &t in &threads {
+            let kind = if t == 1 { GemmKind::Level3 } else { GemmKind::Level3Mt(t) };
+            let secs = time_median(reps, || {
+                gemm(kind, 1.0, &a, &b, 0.0, &mut c);
+                c[(0, 0)]
+            });
+            report.push("gemm", d, t, secs, gemm_flops / secs / 1e9);
+        }
+
+        let mu = d / 2;
+        let y = Matrix::from_fn(d, mu, |_, _| rng.uniform(-1.0, 1.0));
+        let w = vec![1.0 / mu as f64; mu];
+        let mut cm = Matrix::zeros(d, d);
+        let syrk_flops = (d * (d + 1) * mu) as f64;
+        for &t in &threads {
+            let secs = time_median(reps, || {
+                syrk_mt(t, 0.1, &y, &w, 0.0, &mut cm);
+                cm[(0, 0)]
+            });
+            report.push("syrk", d, t, secs, syrk_flops / secs / 1e9);
+        }
+
+        let mut s = Matrix::from_fn(d, d, |_, _| rng.uniform(-1.0, 1.0));
+        s.symmetrize();
+        let eig_flops = 4.0 / 3.0 * (d as f64).powi(3);
+        for &t in &threads {
+            let secs = time_median(3, || syev_mt(t, &s).unwrap().values[0]);
+            report.push("syev", d, t, secs, eig_flops / secs / 1e9);
+        }
+    }
+    println!("{}", report.speedup_table());
 }

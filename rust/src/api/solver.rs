@@ -59,6 +59,7 @@ impl Solver {
             seed: 0,
             restart_distributed: false,
             stop_at_final_target: true,
+            linalg_threads: 1,
             override_cfg: None,
             checkpoint_dir: None,
             checkpoint_every: 25,
@@ -85,6 +86,7 @@ pub struct SolverBuilder<P> {
     seed: u64,
     restart_distributed: bool,
     stop_at_final_target: bool,
+    linalg_threads: usize,
     override_cfg: Option<VirtualConfig>,
     checkpoint_dir: Option<PathBuf>,
     checkpoint_every: usize,
@@ -181,6 +183,16 @@ impl<P: Problem + 'static> SolverBuilder<P> {
         self
     }
 
+    /// Worker threads for the dense linalg kernels (GEMM/SYRK/SYEV);
+    /// default 1 (serial). Orthogonal to [`SolverBuilder::backend`]
+    /// evaluation workers, and trajectory-neutral: the parallel kernels
+    /// are bit-identical to serial, so this is a pure perf knob.
+    pub fn linalg_threads(mut self, threads: usize) -> Self {
+        assert!(threads >= 1, "linalg_threads must be at least 1");
+        self.linalg_threads = threads;
+        self
+    }
+
     /// Persist a full resumable snapshot into `dir` every
     /// [`SolverBuilder::checkpoint_every`] engine iterations (see
     /// [`crate::persist`]). The directory is created if needed; numbered
@@ -260,6 +272,7 @@ impl<P: Problem + 'static> SolverBuilder<P> {
             stop_at_final_target: self.stop_at_final_target,
             restart_distributed: self.restart_distributed,
             real_eval_cap: self.eval_budget,
+            linalg_threads: self.linalg_threads,
             seed: self.seed,
         }
     }

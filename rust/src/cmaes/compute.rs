@@ -4,9 +4,13 @@
 //! A [`Compute`] implementation is the seam between the coordinator (L3)
 //! and the heavy linear algebra: the native tiers live here; the
 //! AOT-compiled XLA/Pallas path implements the same trait in
-//! [`crate::runtime`].
+//! [`crate::runtime`]. The multithreaded tier
+//! ([`NativeCompute::level3_mt`]) runs the same kernels on the persistent
+//! [`crate::linalg::pool`] worker pool and is bit-identical to the serial
+//! Level-3 tier for every thread count.
 
-use crate::linalg::{gemm, EigKind, GemmKind, Matrix};
+use crate::linalg::{gemm, syrk_mt, EigError, EigKind, GemmKind, Matrix};
+use crate::metrics::KernelTimings;
 
 use super::state::CmaState;
 
@@ -24,32 +28,69 @@ pub trait Compute {
     /// (`y_sel` holds the μ selected columns, best first).
     fn rank_mu_update(&mut self, c: &mut Matrix, keep: f64, c_mu: f64, y_sel: &Matrix, w: &[f64]);
 
-    /// Refresh `B`, `D` (and caches) from `C`.
-    fn refresh_eigen(&mut self, st: &mut CmaState);
+    /// Refresh `B`, `D` (and caches) from `C`. An [`EigError`] is
+    /// recoverable: the descent surfaces it as a restart trigger.
+    fn refresh_eigen(&mut self, st: &mut CmaState) -> Result<(), EigError>;
+
+    /// Per-kernel wall time accumulated so far, if this backend tracks it.
+    fn kernel_timings(&self) -> Option<KernelTimings> {
+        None
+    }
 }
 
-/// Native CPU tiers: a [`GemmKind`] (naive / level2 / level3) paired with
-/// an [`EigKind`] (jacobi / syev) — the axes of the paper's Fig. 5.
+/// Native CPU tiers: a [`GemmKind`] (naive / level2 / level3 / level3-mt)
+/// paired with an [`EigKind`] (jacobi / syev / their -mt variants) — the
+/// axes of the paper's Fig. 5 — plus a per-kernel wall-time accumulator.
 #[derive(Clone, Copy, Debug)]
 pub struct NativeCompute {
     pub gemm: GemmKind,
     pub eig: EigKind,
+    /// Wall time spent inside each kernel since construction.
+    pub timings: KernelTimings,
 }
 
 impl NativeCompute {
     /// "Reference C code": naive loops + Jacobi eigensolver.
     pub fn reference() -> Self {
-        NativeCompute { gemm: GemmKind::Naive, eig: EigKind::Jacobi }
+        NativeCompute {
+            gemm: GemmKind::Naive,
+            eig: EigKind::Jacobi,
+            timings: KernelTimings::default(),
+        }
     }
 
     /// Level-2 BLAS analogue: matvec formulations + `syev`.
     pub fn level2() -> Self {
-        NativeCompute { gemm: GemmKind::Level2, eig: EigKind::Syev }
+        NativeCompute {
+            gemm: GemmKind::Level2,
+            eig: EigKind::Syev,
+            timings: KernelTimings::default(),
+        }
     }
 
     /// The paper's optimized configuration: Level-3 GEMM rewrites + `syev`.
     pub fn level3() -> Self {
-        NativeCompute { gemm: GemmKind::Level3, eig: EigKind::Syev }
+        NativeCompute {
+            gemm: GemmKind::Level3,
+            eig: EigKind::Syev,
+            timings: KernelTimings::default(),
+        }
+    }
+
+    /// The multithreaded BLAS tier (paper §3.1): Level-3 kernels with row
+    /// panels spread over a pool of `threads` workers, `syev` with the
+    /// parallel Householder back-transform. Bit-identical to
+    /// [`NativeCompute::level3`] for every thread count; `threads <= 1`
+    /// degrades to the serial tier.
+    pub fn level3_mt(threads: usize) -> Self {
+        if threads <= 1 {
+            return NativeCompute::level3();
+        }
+        NativeCompute {
+            gemm: GemmKind::Level3Mt(threads),
+            eig: EigKind::SyevMt(threads),
+            timings: KernelTimings::default(),
+        }
     }
 }
 
@@ -63,6 +104,7 @@ impl Compute for NativeCompute {
         let lambda = z.cols();
         debug_assert_eq!(z.rows(), n);
         debug_assert_eq!((y.rows(), y.cols()), (n, lambda));
+        let t0 = std::time::Instant::now();
         match self.gemm {
             GemmKind::Naive => {
                 // Per-point, textbook double loop: y_k = B·(d ∘ z_k) with
@@ -90,18 +132,21 @@ impl Compute for NativeCompute {
                     }
                 }
             }
-            GemmKind::Level3 => {
+            kind @ (GemmKind::Level3 | GemmKind::Level3Mt(_)) => {
                 // The paper's rewrite: all λ points in one GEMM against the
-                // cached B·D.
-                gemm(GemmKind::Level3, 1.0, &st.bd, z, 0.0, y);
+                // cached B·D (row panels parallel in the -mt tier).
+                gemm(kind, 1.0, &st.bd, z, 0.0, y);
             }
         }
+        self.timings.gemm_s += t0.elapsed().as_secs_f64();
+        self.timings.gemm_calls += 1;
     }
 
     fn rank_mu_update(&mut self, c: &mut Matrix, keep: f64, c_mu: f64, y_sel: &Matrix, w: &[f64]) {
         let n = c.rows();
         let mu = w.len();
         debug_assert_eq!(y_sel.cols(), mu);
+        let t0 = std::time::Instant::now();
         match self.gemm {
             GemmKind::Naive => {
                 // Eq. 2 as written: μ rank-one updates, naive loops.
@@ -127,16 +172,29 @@ impl Compute for NativeCompute {
                 }
             }
             GemmKind::Level3 => {
-                // The paper's Eq. 3: M = A·B with A = [y_1 … y_μ] (n×μ)
-                // and B = [w_i·y_iᵀ] (μ×n), one dgemm.
-                let bw = Matrix::from_fn(mu, n, |r, cc| w[r] * y_sel[(cc, r)]);
-                gemm(GemmKind::Level3, c_mu, y_sel, &bw, keep, c);
+                // Eq. 3 with the product's symmetry exploited: a weighted
+                // `dsyrk` computes the lower triangle and mirrors it —
+                // half the FLOPs of the full-GEMM formulation.
+                syrk_mt(1, c_mu, y_sel, w, keep, c);
+            }
+            GemmKind::Level3Mt(threads) => {
+                syrk_mt(threads, c_mu, y_sel, w, keep, c);
             }
         }
+        self.timings.update_s += t0.elapsed().as_secs_f64();
+        self.timings.update_calls += 1;
     }
 
-    fn refresh_eigen(&mut self, st: &mut CmaState) {
-        st.refresh_eigen(self.eig);
+    fn refresh_eigen(&mut self, st: &mut CmaState) -> Result<(), EigError> {
+        let t0 = std::time::Instant::now();
+        let res = st.refresh_eigen(self.eig);
+        self.timings.eig_s += t0.elapsed().as_secs_f64();
+        self.timings.eig_calls += 1;
+        res
+    }
+
+    fn kernel_timings(&self) -> Option<KernelTimings> {
+        Some(self.timings)
     }
 }
 
@@ -155,7 +213,7 @@ mod tests {
         c.symmetrize();
         let mut st = CmaState::new(vec![0.0; n], 1.0);
         st.c = c;
-        st.refresh_eigen(EigKind::Syev);
+        st.refresh_eigen(EigKind::Syev).unwrap();
         st
     }
 
@@ -166,7 +224,11 @@ mod tests {
         let z = Matrix::from_fn(7, 13, |_, _| g.sample());
         let mut y_ref = Matrix::zeros(7, 13);
         NativeCompute::reference().sample_y(&st, &z, &mut y_ref);
-        for tier in [NativeCompute::level2(), NativeCompute::level3()] {
+        for tier in [
+            NativeCompute::level2(),
+            NativeCompute::level3(),
+            NativeCompute::level3_mt(3),
+        ] {
             let mut y = Matrix::zeros(7, 13);
             let mut t = tier;
             t.sample_y(&st, &z, &mut y);
@@ -188,11 +250,68 @@ mod tests {
         };
         let mut c_ref = c0.clone();
         NativeCompute::reference().rank_mu_update(&mut c_ref, 0.8, 0.15, &y, &w);
-        for tier in [NativeCompute::level2(), NativeCompute::level3()] {
+        for tier in [
+            NativeCompute::level2(),
+            NativeCompute::level3(),
+            NativeCompute::level3_mt(4),
+        ] {
             let mut c = c0.clone();
             let mut t = tier;
             t.rank_mu_update(&mut c, 0.8, 0.15, &y, &w);
             assert!(c.max_abs_diff(&c_ref) < 1e-10, "{}", t.label());
+        }
+    }
+
+    /// The whole per-generation pipeline of the -mt tier must match the
+    /// serial Level-3 tier bit for bit — this is what keeps checkpointed
+    /// runs resumable under a different `linalg_threads`.
+    #[test]
+    fn mt_tier_is_bit_identical_to_level3() {
+        let st = random_state(24, 7);
+        let mut g = NormalSource::new(8);
+        let z = Matrix::from_fn(24, 16, |_, _| g.sample());
+        let mut y_ref = Matrix::zeros(24, 16);
+        NativeCompute::level3().sample_y(&st, &z, &mut y_ref);
+        let w = [0.5, 0.3, 0.2];
+        let y_sel = Matrix::from_fn(24, 3, |r, c| y_ref[(r, c)]);
+        let mut c_ref = st.c.clone();
+        NativeCompute::level3().rank_mu_update(&mut c_ref, 0.8, 0.2, &y_sel, &w);
+        let mut st_ref = st.clone();
+        st_ref.c = c_ref.clone();
+        NativeCompute::level3().refresh_eigen(&mut st_ref).unwrap();
+
+        for threads in [2usize, 4, 8] {
+            let mut tier = NativeCompute::level3_mt(threads);
+            let mut y = Matrix::zeros(24, 16);
+            tier.sample_y(&st, &z, &mut y);
+            assert!(
+                y.as_slice()
+                    .iter()
+                    .zip(y_ref.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "sample_y threads={threads}"
+            );
+            let mut c = st.c.clone();
+            tier.rank_mu_update(&mut c, 0.8, 0.2, &y_sel, &w);
+            assert!(
+                c.as_slice()
+                    .iter()
+                    .zip(c_ref.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "rank_mu threads={threads}"
+            );
+            let mut st_mt = st.clone();
+            st_mt.c = c;
+            tier.refresh_eigen(&mut st_mt).unwrap();
+            assert!(
+                st_mt
+                    .bd
+                    .as_slice()
+                    .iter()
+                    .zip(st_ref.bd.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "refresh_eigen threads={threads}"
+            );
         }
     }
 
@@ -206,6 +325,28 @@ mod tests {
         NativeCompute::level3().rank_mu_update(&mut c, 0.9, 0.1, &y, &w);
         let ct = c.transpose();
         assert!(c.max_abs_diff(&ct) < 1e-12);
+    }
+
+    #[test]
+    fn kernel_timings_are_recorded() {
+        let mut st = random_state(6, 13);
+        let mut g = NormalSource::new(14);
+        let z = Matrix::from_fn(6, 8, |_, _| g.sample());
+        let mut y = Matrix::zeros(6, 8);
+        let mut tier = NativeCompute::level3();
+        tier.sample_y(&st, &z, &mut y);
+        tier.sample_y(&st, &z, &mut y);
+        let w = [0.6, 0.4];
+        let y_sel = Matrix::from_fn(6, 2, |r, c| y[(r, c)]);
+        let mut cmat = st.c.clone();
+        tier.rank_mu_update(&mut cmat, 0.9, 0.1, &y_sel, &w);
+        tier.refresh_eigen(&mut st).unwrap();
+        let t = tier.kernel_timings().unwrap();
+        assert_eq!(t.gemm_calls, 2);
+        assert_eq!(t.update_calls, 1);
+        assert_eq!(t.eig_calls, 1);
+        assert!(t.gemm_s >= 0.0 && t.update_s >= 0.0 && t.eig_s >= 0.0);
+        assert!(t.total_s() >= t.eig_s);
     }
 
     #[test]

@@ -226,6 +226,12 @@ impl Descent {
         self.compute.label()
     }
 
+    /// Per-kernel wall times from the compute backend, when it records
+    /// them (the native tiers do; see [`crate::metrics::KernelTimings`]).
+    pub fn kernel_timings(&self) -> Option<crate::metrics::KernelTimings> {
+        self.compute.kernel_timings()
+    }
+
     pub fn stop_reason(&self) -> Option<StopReason> {
         self.stopped
     }
@@ -243,8 +249,23 @@ impl Descent {
         let gap = if self.eager_eigen { 1 } else { self.params.eigen_gap() };
         if self.state.gen == 0 || self.state.gen - self.state.eigen_gen >= gap {
             let t0 = Instant::now();
-            self.compute.refresh_eigen(&mut self.state);
+            let eig = self.compute.refresh_eigen(&mut self.state);
             t.eig_s += t0.elapsed().as_secs_f64();
+            if eig.is_err() {
+                // Non-convergent eigensolve (e.g. non-finite C): surface a
+                // restartable stop instead of panicking; IPOP answers with
+                // a fresh descent at doubled λ.
+                self.stopped = Some(StopReason::EigenFailure);
+                self.timings.add(&t);
+                return IterationReport {
+                    gen: self.state.gen,
+                    evals: self.evals,
+                    gen_best: f64::INFINITY,
+                    best_so_far: self.best_f,
+                    timings: t,
+                    stop: self.stopped,
+                };
+            }
         }
 
         // Sample: Z ~ N(0, I), Y = B·D·Z, X = m·1ᵀ + σ·Y  (Eq. 1).
@@ -573,6 +594,18 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn eigen_failure_is_a_restartable_stop() {
+        let mut d = make_descent(4, 8, 11);
+        d.state.c[(1, 2)] = f64::NAN;
+        d.state.c[(2, 1)] = f64::NAN;
+        let rep = d.run_iteration(&mut FnEvaluator(sphere()));
+        assert_eq!(rep.stop, Some(StopReason::EigenFailure));
+        assert!(rep.stop.unwrap().is_restartable());
+        assert_eq!(d.stop_reason(), Some(StopReason::EigenFailure));
+        assert_eq!(d.evals, 0, "no evaluations after a failed eigensolve");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Mutable state of one CMA-ES descent.
 
-use crate::linalg::{EigKind, Matrix};
+use crate::linalg::{EigError, EigKind, Matrix};
 
 /// Dynamic state: distribution mean/shape/scale plus the evolution paths.
 #[derive(Clone)]
@@ -59,11 +59,15 @@ impl CmaState {
     /// Refresh `B`, `D`, the `B·D` cache and the condition number from `C`
     /// using the given eigensolver tier. Eigenvalues are clamped to a tiny
     /// positive floor so a numerically indefinite `C` degrades gracefully
-    /// (the ConditionCov stop then fires).
-    pub fn refresh_eigen(&mut self, kind: EigKind) {
+    /// (the ConditionCov stop then fires). A solver failure (QL
+    /// non-convergence, e.g. after non-finite values leaked into `C`) is
+    /// returned so the caller can treat it as a restart trigger; the
+    /// state keeps its previous `B`/`D` in that case.
+    pub fn refresh_eigen(&mut self, kind: EigKind) -> Result<(), EigError> {
         self.c.symmetrize();
-        let eig = kind.decompose(&self.c);
+        let eig = kind.decompose(&self.c)?;
         self.apply_eigen(eig.values, eig.vectors);
+        Ok(())
     }
 
     /// Install an externally computed eigendecomposition (ascending
@@ -138,7 +142,7 @@ mod tests {
     fn refresh_eigen_tracks_condition() {
         let mut st = CmaState::new(vec![0.0; 3], 1.0);
         st.c = Matrix::from_vec(3, 3, vec![4.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.25]);
-        st.refresh_eigen(EigKind::Syev);
+        st.refresh_eigen(EigKind::Syev).unwrap();
         assert!((st.condition - 16.0).abs() < 1e-9);
         // d sorted ascending: 0.5, 1, 2.
         assert!((st.d[0] - 0.5).abs() < 1e-12);
@@ -149,7 +153,7 @@ mod tests {
     fn inv_sqrt_c_matches_closed_form_on_diagonal() {
         let mut st = CmaState::new(vec![0.0; 2], 1.0);
         st.c = Matrix::from_vec(2, 2, vec![4.0, 0.0, 0.0, 9.0]);
-        st.refresh_eigen(EigKind::Syev);
+        st.refresh_eigen(EigKind::Syev).unwrap();
         let u = st.inv_sqrt_c_apply(&[2.0, 3.0]);
         // C^{-1/2} = diag(1/2, 1/3)
         assert!((u[0] - 1.0).abs() < 1e-10);

@@ -25,6 +25,9 @@ pub enum StopReason {
     NoEffectCoord,
     /// Long-run best/median no longer improving.
     Stagnation,
+    /// The eigensolver failed to converge (e.g. non-finite values leaked
+    /// into `C`) — recoverable by restarting the descent.
+    EigenFailure,
     /// Iteration budget of the descent exhausted.
     MaxIter,
     /// Evaluation budget exhausted.
@@ -49,6 +52,7 @@ impl StopReason {
             StopReason::NoEffectAxis => "noeffectaxis",
             StopReason::NoEffectCoord => "noeffectcoord",
             StopReason::Stagnation => "stagnation",
+            StopReason::EigenFailure => "eigenfailure",
             StopReason::MaxIter => "maxiter",
             StopReason::MaxEvals => "maxevals",
         }
@@ -66,6 +70,7 @@ impl StopReason {
             StopReason::NoEffectAxis,
             StopReason::NoEffectCoord,
             StopReason::Stagnation,
+            StopReason::EigenFailure,
             StopReason::MaxIter,
             StopReason::MaxEvals,
         ];
@@ -429,6 +434,7 @@ mod tests {
             StopReason::NoEffectAxis,
             StopReason::NoEffectCoord,
             StopReason::Stagnation,
+            StopReason::EigenFailure,
             StopReason::MaxIter,
             StopReason::MaxEvals,
         ] {
@@ -440,6 +446,7 @@ mod tests {
     #[test]
     fn restartable_classification() {
         assert!(StopReason::TolFun.is_restartable());
+        assert!(StopReason::EigenFailure.is_restartable());
         assert!(!StopReason::MaxEvals.is_restartable());
         assert!(!StopReason::TargetReached.is_restartable());
     }

@@ -1,6 +1,15 @@
-//! Real (wall-clock) parallel evaluation: a scatter/gather thread pool
+//! Real (wall-clock) parallel evaluation: a scatter/gather pool
 //! mirroring §3.2.1 — the main process generates the points, scatters
 //! them to worker "processes" (threads here), gathers fitness back.
+//!
+//! Since the multithreaded linalg tier landed, evaluation rides the same
+//! persistent [`crate::linalg::pool`] as the kernels: `--workers N`
+//! borrows the process-wide pool of size N (shared with the linalg tier
+//! when `--linalg-threads` asks for the same width) instead of owning
+//! threads per evaluator. Points are claimed dynamically (atomic counter)
+//! so uneven objective costs balance, and every result lands in
+//! `out[k]` for point k regardless of which worker computed it — the
+//! trajectory stays identical to serial evaluation.
 //!
 //! On this container (1 CPU core) the pool cannot produce wall-clock
 //! speedups — the virtual cluster in [`crate::cluster`] carries the
@@ -9,27 +18,20 @@
 //! end-to-end example.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
 use std::sync::Arc;
-use std::thread;
 
 use crate::cmaes::BatchEvaluator;
+use crate::linalg::pool::{self, SharedMut, WorkerPool};
 use crate::linalg::Matrix;
 
 /// A point-wise objective shared across worker threads.
 pub type SharedObjective = Arc<dyn Fn(&[f64]) -> f64 + Send + Sync>;
 
-enum Job {
-    /// (chunk of flattened points, dim, result sender, base index)
-    Eval(Vec<f64>, usize, mpsc::Sender<(usize, Vec<f64>)>, usize),
-    Shutdown,
-}
-
 /// Scatter/gather evaluation pool with `workers` threads.
 pub struct ThreadPoolEvaluator {
     objective: SharedObjective,
-    senders: Vec<mpsc::Sender<Job>>,
-    handles: Vec<thread::JoinHandle<()>>,
+    pool: &'static WorkerPool,
+    workers: usize,
     /// Total evaluations processed (for tests/metrics).
     pub evals: Arc<AtomicUsize>,
     /// Point buffer reused across serial-path calls (one descent batches
@@ -41,39 +43,18 @@ pub struct ThreadPoolEvaluator {
 impl ThreadPoolEvaluator {
     pub fn new(objective: SharedObjective, workers: usize) -> ThreadPoolEvaluator {
         assert!(workers >= 1);
-        let evals = Arc::new(AtomicUsize::new(0));
-        let mut senders = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            let (tx, rx) = mpsc::channel::<Job>();
-            let obj = Arc::clone(&objective);
-            let ctr = Arc::clone(&evals);
-            handles.push(thread::spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    match job {
-                        Job::Eval(chunk, dim, back, base) => {
-                            let count = chunk.len() / dim;
-                            let mut out = Vec::with_capacity(count);
-                            for i in 0..count {
-                                out.push(obj(&chunk[i * dim..(i + 1) * dim]));
-                            }
-                            ctr.fetch_add(count, Ordering::Relaxed);
-                            // The gather side may have hung up on panic;
-                            // ignore a closed channel.
-                            let _ = back.send((base, out));
-                        }
-                        Job::Shutdown => break,
-                    }
-                }
-            }));
-            senders.push(tx);
+        ThreadPoolEvaluator {
+            objective,
+            pool: pool::global(workers),
+            workers,
+            evals: Arc::new(AtomicUsize::new(0)),
+            scratch: Vec::new(),
         }
-        ThreadPoolEvaluator { objective, senders, handles, evals, scratch: Vec::new() }
     }
 
     /// Number of worker threads.
     pub fn workers(&self) -> usize {
-        self.senders.len()
+        self.workers
     }
 
     /// Evaluate serially on the caller thread (used for tiny batches
@@ -96,54 +77,35 @@ impl BatchEvaluator for ThreadPoolEvaluator {
     fn eval_batch(&mut self, xs: &Matrix, out: &mut [f64]) {
         let lambda = xs.cols();
         let n = xs.rows();
-        let workers = self.senders.len();
+        let workers = self.workers;
         if lambda < 2 * workers || workers == 1 {
             self.eval_serial(xs, out);
             return;
         }
 
-        // Scatter: contiguous chunks of points per worker.
-        let (back_tx, back_rx) = mpsc::channel();
-        let chunk = lambda.div_ceil(workers);
-        let mut sent = 0usize;
-        let mut jobs = 0usize;
-        for w in 0..workers {
-            let lo = w * chunk;
-            let hi = ((w + 1) * chunk).min(lambda);
-            if lo >= hi {
-                break;
-            }
-            let mut flat = Vec::with_capacity((hi - lo) * n);
-            for k in lo..hi {
-                for i in 0..n {
-                    flat.push(xs[(i, k)]);
+        // Scatter: workers claim points off a shared counter (dynamic
+        // balancing for uneven objective costs); each writes only its
+        // own out[k], which keeps SharedMut's disjointness contract.
+        let next = AtomicUsize::new(0);
+        let results = SharedMut::new(out);
+        let obj = &self.objective;
+        self.pool.run(&|_w| {
+            let mut point = vec![0.0; n];
+            loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= lambda {
+                    break;
+                }
+                for (i, p) in point.iter_mut().enumerate() {
+                    *p = xs[(i, k)];
+                }
+                // SAFETY: index k was claimed by exactly one worker.
+                unsafe {
+                    results.slice(k, 1)[0] = obj(&point);
                 }
             }
-            self.senders[w]
-                .send(Job::Eval(flat, n, back_tx.clone(), lo))
-                .expect("worker thread died");
-            sent += hi - lo;
-            jobs += 1;
-        }
-        drop(back_tx);
-        debug_assert_eq!(sent, lambda);
-
-        // Gather.
-        for _ in 0..jobs {
-            let (base, vals) = back_rx.recv().expect("worker thread died");
-            out[base..base + vals.len()].copy_from_slice(&vals);
-        }
-    }
-}
-
-impl Drop for ThreadPoolEvaluator {
-    fn drop(&mut self) {
-        for tx in &self.senders {
-            let _ = tx.send(Job::Shutdown);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        });
+        self.evals.fetch_add(lambda, Ordering::Relaxed);
     }
 }
 
@@ -196,7 +158,7 @@ mod tests {
 
     #[test]
     fn uneven_chunks_cover_all_points() {
-        // λ=17 over 4 workers: chunks 5/5/5/2.
+        // λ=17 over 4 workers: dynamic claiming must still cover all 17.
         let mut pool = ThreadPoolEvaluator::new(sphere_objective(), 4);
         let xs = Matrix::from_fn(2, 17, |r, c| (r + 2 * c) as f64);
         let mut out = vec![-1.0; 17];

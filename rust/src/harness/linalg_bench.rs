@@ -1,0 +1,269 @@
+//! The bench-JSON pipeline for the linalg kernels: a versioned schema
+//! (`bench_linalg/v1`) shared by `benches/bench_linalg.rs` (producer),
+//! `examples/perf_gemm.rs` (Fig. 5-style speedup table), and the
+//! `ipopcma bench-diff` CLI subcommand (CI perf gate: diff a fresh
+//! `BENCH_linalg.json` against the committed baseline).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::report::ascii_table;
+use crate::runtime::json::Json;
+
+/// Schema tag stamped into every report; `bench-diff` rejects mismatches
+/// so stale baselines fail loudly instead of comparing garbage.
+pub const SCHEMA: &str = "bench_linalg/v1";
+
+/// One measured kernel configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchEntry {
+    /// Kernel label: `"gemm"`, `"syrk"`, or `"syev"`.
+    pub kernel: String,
+    /// Square problem dimension d.
+    pub d: usize,
+    /// Linalg pool width the kernel ran with (1 = serial).
+    pub threads: usize,
+    /// Median wall seconds per call.
+    pub seconds: f64,
+    /// Nominal GFLOP/s (FLOP counts are per-kernel conventions, so only
+    /// same-kernel comparisons are meaningful).
+    pub gflops: f64,
+    /// Speedup against the `threads = 1` entry of the same (kernel, d).
+    pub speedup: f64,
+}
+
+/// A full bench report: the in-memory form of `BENCH_linalg.json`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BenchReport {
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport { entries: Vec::new() }
+    }
+
+    /// Append a measurement. The speedup is computed against the already
+    /// recorded `threads = 1` entry of the same (kernel, d) — push the
+    /// serial configuration first — and defaults to 1.0 without one.
+    pub fn push(&mut self, kernel: &str, d: usize, threads: usize, seconds: f64, gflops: f64) {
+        let base = self
+            .entries
+            .iter()
+            .find(|e| e.kernel == kernel && e.d == d && e.threads == 1)
+            .map(|e| e.seconds);
+        let speedup = match base {
+            Some(b) if seconds > 0.0 => b / seconds,
+            _ => 1.0,
+        };
+        self.entries.push(BenchEntry {
+            kernel: kernel.to_string(),
+            d,
+            threads,
+            seconds,
+            gflops,
+            speedup,
+        });
+    }
+
+    pub fn get(&self, kernel: &str, d: usize, threads: usize) -> Option<&BenchEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kernel == kernel && e.d == d && e.threads == threads)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("kernel".to_string(), Json::Str(e.kernel.clone()));
+                o.insert("d".to_string(), Json::Num(e.d as f64));
+                o.insert("threads".to_string(), Json::Num(e.threads as f64));
+                o.insert("seconds".to_string(), Json::Num(e.seconds));
+                o.insert("gflops".to_string(), Json::Num(e.gflops));
+                o.insert("speedup".to_string(), Json::Num(e.speedup));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+        top.insert("entries".to_string(), Json::Arr(entries));
+        Json::Obj(top)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchReport, String> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or("missing 'schema' field")?;
+        if schema != SCHEMA {
+            return Err(format!("schema mismatch: '{schema}', expected '{SCHEMA}'"));
+        }
+        let num = |e: &Json, key: &str| -> Result<f64, String> {
+            e.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("entry missing numeric '{key}'"))
+        };
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'entries' array")?
+        {
+            entries.push(BenchEntry {
+                kernel: e
+                    .get("kernel")
+                    .and_then(Json::as_str)
+                    .ok_or("entry missing 'kernel'")?
+                    .to_string(),
+                d: num(e, "d")? as usize,
+                threads: num(e, "threads")? as usize,
+                seconds: num(e, "seconds")?,
+                gflops: num(e, "gflops")?,
+                speedup: num(e, "speedup")?,
+            });
+        }
+        Ok(BenchReport { entries })
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn read_file(path: impl AsRef<Path>) -> Result<BenchReport, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        BenchReport::from_json(&Json::parse(&text)?)
+    }
+
+    /// Fig. 5-style pivot: one row per (kernel, d), one GFLOP/s +
+    /// speedup column pair per thread count.
+    pub fn speedup_table(&self) -> String {
+        let mut threads: Vec<usize> = self.entries.iter().map(|e| e.threads).collect();
+        threads.sort_unstable();
+        threads.dedup();
+        let mut keys: Vec<(String, usize)> =
+            self.entries.iter().map(|e| (e.kernel.clone(), e.d)).collect();
+        keys.sort();
+        keys.dedup();
+        let mut headers = vec!["kernel".to_string(), "d".to_string()];
+        for &t in &threads {
+            headers.push(format!("t={t} GF/s"));
+            headers.push(format!("t={t} x"));
+        }
+        let mut rows = Vec::new();
+        for (kernel, d) in keys {
+            let mut row = vec![kernel.clone(), d.to_string()];
+            for &t in &threads {
+                match self.get(&kernel, d, t) {
+                    Some(e) => {
+                        row.push(format!("{:.2}", e.gflops));
+                        row.push(format!("{:.2}x", e.speedup));
+                    }
+                    None => {
+                        row.push("-".into());
+                        row.push("-".into());
+                    }
+                }
+            }
+            rows.push(row);
+        }
+        ascii_table(&format!("linalg kernels ({SCHEMA})"), &headers, &rows)
+    }
+}
+
+/// One configuration that got slower than the baseline allows.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub kernel: String,
+    pub d: usize,
+    pub threads: usize,
+    pub base_gflops: f64,
+    pub cur_gflops: f64,
+    /// Percent slower than baseline (positive = regression).
+    pub loss_pct: f64,
+}
+
+/// Diff `current` against `baseline`: every (kernel, d, threads) present
+/// in both whose current GFLOP/s fell more than `warn_pct` percent below
+/// the baseline. Configurations present in only one report are skipped
+/// (the sweep grid may grow or shrink between commits).
+pub fn compare(baseline: &BenchReport, current: &BenchReport, warn_pct: f64) -> Vec<Regression> {
+    let mut out = Vec::new();
+    for b in &baseline.entries {
+        let Some(c) = current.get(&b.kernel, b.d, b.threads) else { continue };
+        if b.gflops <= 0.0 || c.gflops <= 0.0 {
+            continue;
+        }
+        let loss_pct = 100.0 * (1.0 - c.gflops / b.gflops);
+        if loss_pct > warn_pct {
+            out.push(Regression {
+                kernel: b.kernel.clone(),
+                d: b.d,
+                threads: b.threads,
+                base_gflops: b.gflops,
+                cur_gflops: c.gflops,
+                loss_pct,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> BenchReport {
+        let mut r = BenchReport::new();
+        r.push("gemm", 128, 1, 0.010, 4.0);
+        r.push("gemm", 128, 4, 0.004, 10.0);
+        r.push("syev", 128, 1, 0.020, 1.0);
+        r
+    }
+
+    #[test]
+    fn push_computes_speedup_against_serial() {
+        let r = sample_report();
+        assert_eq!(r.get("gemm", 128, 1).unwrap().speedup, 1.0);
+        assert!((r.get("gemm", 128, 4).unwrap().speedup - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = sample_report();
+        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let j = Json::parse(r#"{"schema": "bench_linalg/v0", "entries": []}"#).unwrap();
+        assert!(BenchReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn compare_flags_only_real_regressions() {
+        let base = sample_report();
+        let mut cur = BenchReport::new();
+        cur.push("gemm", 128, 1, 0.010, 4.1); // slightly faster
+        cur.push("gemm", 128, 4, 0.008, 5.0); // half the baseline: regression
+        // syev missing from current: skipped, not a regression.
+        let regs = compare(&base, &cur, 10.0);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].kernel, "gemm");
+        assert_eq!(regs[0].threads, 4);
+        assert!(regs[0].loss_pct > 45.0);
+    }
+
+    #[test]
+    fn speedup_table_lists_every_kernel() {
+        let t = sample_report().speedup_table();
+        assert!(t.contains("gemm"));
+        assert!(t.contains("syev"));
+        assert!(t.contains("t=4"));
+    }
+}

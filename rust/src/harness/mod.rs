@@ -10,6 +10,8 @@
 //! costs, so every mechanism (ladder, splits, ERT, ECDF) is identical
 //! and runs are exactly reproducible.
 
+pub mod linalg_bench;
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::fs;
@@ -105,6 +107,7 @@ impl Scale {
             stop_at_final_target: true,
             restart_distributed: false,
             real_eval_cap: self.run_evals,
+            linalg_threads: 1,
             seed,
         }
     }

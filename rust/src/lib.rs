@@ -56,6 +56,31 @@
 //! the state re-scatter. See the "Durability & fault injection" section
 //! of the [`api`] module docs and `examples/checkpoint_resume.rs`.
 //!
+//! ## Threading model
+//!
+//! Two pools, one mechanism. All parallelism on the native tier runs
+//! through the persistent worker pool in [`linalg::pool`] (spawn-once,
+//! condvar-parked, process-wide registry keyed by width):
+//!
+//! * **Evaluation** — `--workers N` / `Backend::Threads(N)` scatters
+//!   each generation's λ points across N workers
+//!   ([`evaluator::ThreadPoolEvaluator`]); points are claimed
+//!   dynamically so uneven objective costs balance.
+//! * **Linalg** — `--linalg-threads T` /
+//!   [`api::SolverBuilder::linalg_threads`] runs the dense kernels
+//!   (blocked GEMM, the rank-μ SYRK update, the SYEV back-transform) on
+//!   T workers (paper §3.1's multithreaded BLAS).
+//!
+//! The two knobs compose freely: evaluation and linalg phases never
+//! overlap within a descent, so `--workers 8 --linalg-threads 8` shares
+//! one 8-wide pool rather than oversubscribing the host. Every parallel
+//! kernel partitions **disjoint output rows** and performs the same
+//! per-element operations in the same order as its serial counterpart,
+//! so results are bit-identical for every thread count — `linalg_threads`
+//! is a pure performance knob, and the checkpoint/resume bit-identity
+//! guarantee survives it. Kernel wall times are recorded per descent
+//! ([`metrics::KernelTimings`], via `Descent::kernel_timings`).
+//!
 //! ## Layers
 //!
 //! * **L3 (this crate)** — the coordinator: CMA-ES / IPOP-CMA-ES

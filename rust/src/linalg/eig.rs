@@ -5,7 +5,15 @@
 //! lineage). O(n³), numerically robust for the SPD covariance matrices
 //! CMA-ES produces (it also handles indefinite symmetric input, exercised
 //! in tests).
+//!
+//! [`syev_mt`] parallelises the Householder back-transform (the dominant
+//! O(n³) accumulation loop) over disjoint *columns* of the eigenvector
+//! matrix; the QL iteration itself is an O(n²)-per-sweep recurrence and
+//! stays sequential. Each column receives exactly the serial operation
+//! sequence, so the result is **bit-identical** to [`syev`] for every
+//! thread count.
 
+use super::pool;
 use super::Matrix;
 
 /// Result of [`syev`]: `a = v · diag(d) · vᵀ`, eigenvalues ascending,
@@ -15,27 +23,63 @@ pub struct EigDecomposition {
     pub vectors: Matrix,
 }
 
+/// Eigendecomposition failure — recoverable by the caller (CMA-ES
+/// surfaces it as a restart trigger rather than aborting the run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EigError {
+    /// The implicit-shift QL iteration exceeded its sweep budget on one
+    /// eigenvalue (practically unreachable for finite symmetric input,
+    /// but possible once non-finite values leak into the covariance).
+    NoConvergence,
+}
+
+impl std::fmt::Display for EigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EigError::NoConvergence => write!(f, "QL iteration failed to converge"),
+        }
+    }
+}
+
+impl std::error::Error for EigError {}
+
 /// Eigendecomposition of a symmetric matrix.
 ///
+/// Returns [`EigError::NoConvergence`] if the QL iteration fails to
+/// converge (more than 50 sweeps on one eigenvalue).
+///
 /// # Panics
-/// Panics if `a` is not square or the QL iteration fails to converge
-/// (more than 50 sweeps on one eigenvalue — practically unreachable for
-/// symmetric input).
-pub fn syev(a: &Matrix) -> EigDecomposition {
+/// Panics if `a` is not square.
+pub fn syev(a: &Matrix) -> Result<EigDecomposition, EigError> {
+    syev_mt(1, a)
+}
+
+/// Multithreaded [`syev`]: the Householder back-transform runs on a
+/// worker pool of the given size. Bit-identical to the serial kernel
+/// for every `threads`.
+///
+/// # Panics
+/// Panics if `a` is not square.
+pub fn syev_mt(threads: usize, a: &Matrix) -> Result<EigDecomposition, EigError> {
     assert_eq!(a.rows(), a.cols(), "syev requires a square matrix");
     let n = a.rows();
     let mut v = a.clone();
     let mut d = vec![0.0; n];
     let mut e = vec![0.0; n];
-    tred2(&mut v, &mut d, &mut e);
-    tql2(&mut v, &mut d, &mut e);
-    EigDecomposition { values: d, vectors: v }
+    tred2(threads, &mut v, &mut d, &mut e);
+    tql2(&mut v, &mut d, &mut e)?;
+    Ok(EigDecomposition { values: d, vectors: v })
 }
+
+/// Column count below which the parallel back-transform is not worth a
+/// pool dispatch. Thresholding is safe: both paths perform identical
+/// per-column operations.
+const BACKTRANSFORM_PAR_MIN: usize = 96;
 
 /// Householder reduction to symmetric tridiagonal form.
 /// On exit `v` holds the accumulated orthogonal transform, `d` the
 /// diagonal, `e` the sub-diagonal.
-fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+fn tred2(threads: usize, v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let n = d.len();
     for j in 0..n {
         d[j] = v[(n - 1, j)];
@@ -106,7 +150,10 @@ fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
         d[i] = h;
     }
 
-    // Accumulate transformations.
+    // Accumulate transformations (the back-transform): for each
+    // reflector i, update columns 0..=i of v. Columns are independent —
+    // each reads only column i+1 and the shared `d` scratch — so they
+    // are spread over the pool by disjoint column ranges.
     for i in 0..(n - 1) {
         v[(n - 1, i)] = v[(i, i)];
         v[(i, i)] = 1.0;
@@ -115,15 +162,7 @@ fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
             for k in 0..=i {
                 d[k] = v[(k, i + 1)] / h;
             }
-            for j in 0..=i {
-                let mut g = 0.0;
-                for k in 0..=i {
-                    g += v[(k, i + 1)] * v[(k, j)];
-                }
-                for k in 0..=i {
-                    v[(k, j)] -= g * d[k];
-                }
-            }
+            back_transform_columns(threads, v, d, n, i);
         }
         for k in 0..=i {
             v[(k, i + 1)] = 0.0;
@@ -137,9 +176,46 @@ fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     e[0] = 0.0;
 }
 
+/// One back-transform step: `v[:, j] -= (v[:, i+1]·v[:, j]) · d` for all
+/// `j ≤ i` (rows limited to `0..=i`). Each column `j` is touched by one
+/// worker only, and every column gets the serial operation sequence —
+/// bit-identical across thread counts.
+fn back_transform_columns(threads: usize, v: &mut Matrix, d: &[f64], n: usize, i: usize) {
+    let cols = i + 1;
+    let apply = |vs: &mut [f64], j: usize| {
+        let mut g = 0.0;
+        for k in 0..=i {
+            g += vs[k * n + i + 1] * vs[k * n + j];
+        }
+        for k in 0..=i {
+            vs[k * n + j] -= g * d[k];
+        }
+    };
+    if threads <= 1 || cols < BACKTRANSFORM_PAR_MIN {
+        let vs = v.as_mut_slice();
+        for j in 0..cols {
+            apply(vs, j);
+        }
+        return;
+    }
+    let shared = pool::SharedMut::new(v.as_mut_slice());
+    pool::global(threads).run(&|worker| {
+        let (c0, c1) = pool::chunk(cols, threads, worker);
+        if c0 < c1 {
+            // SAFETY: workers own disjoint column ranges; the shared
+            // reads (column i+1, rows of `d`) are never written here.
+            let vs = unsafe { shared.slice(0, n * n) };
+            for j in c0..c1 {
+                apply(vs, j);
+            }
+        }
+    });
+}
+
 /// Implicit-shift QL iteration on the tridiagonal form, accumulating
-/// eigenvectors into `v`; sorts eigenpairs ascending on exit.
-fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+/// eigenvectors into `v`; sorts eigenpairs ascending on exit. Errs if
+/// any eigenvalue needs more than 50 sweeps.
+fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), EigError> {
     let n = d.len();
     for i in 1..n {
         e[i - 1] = e[i];
@@ -164,7 +240,9 @@ fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
             let mut iter = 0;
             loop {
                 iter += 1;
-                assert!(iter <= 50, "tql2: QL iteration failed to converge");
+                if iter > 50 {
+                    return Err(EigError::NoConvergence);
+                }
 
                 // Compute implicit shift.
                 let mut g = d[l];
@@ -242,6 +320,7 @@ fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
             }
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -258,7 +337,7 @@ mod tests {
 
     fn check_decomposition(a: &Matrix, tol: f64) {
         let n = a.rows();
-        let EigDecomposition { values, vectors } = syev(a);
+        let EigDecomposition { values, vectors } = syev(a).unwrap();
 
         // Eigenvalues ascending.
         for w in values.windows(2) {
@@ -286,7 +365,7 @@ mod tests {
     #[test]
     fn diagonal_matrix() {
         let a = Matrix::from_fn(4, 4, |r, c| if r == c { (4 - r) as f64 } else { 0.0 });
-        let eig = syev(&a);
+        let eig = syev(&a).unwrap();
         let expect = [1.0, 2.0, 3.0, 4.0];
         for (v, e) in eig.values.iter().zip(expect) {
             assert!((v - e).abs() < 1e-12);
@@ -297,7 +376,7 @@ mod tests {
     fn known_2x2() {
         // [[2,1],[1,2]] has eigenvalues 1 and 3.
         let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
-        let eig = syev(&a);
+        let eig = syev(&a).unwrap();
         assert!((eig.values[0] - 1.0).abs() < 1e-12);
         assert!((eig.values[1] - 3.0).abs() < 1e-12);
     }
@@ -320,7 +399,7 @@ mod tests {
         let at = a.transpose();
         let mut spd = Matrix::eye(n);
         gemm(GemmKind::Level3, 1.0, &a, &at, n as f64, &mut spd);
-        let eig = syev(&spd);
+        let eig = syev(&spd).unwrap();
         assert!(eig.values.iter().all(|&v| v > 0.0));
     }
 
@@ -338,9 +417,44 @@ mod tests {
     #[test]
     fn indefinite_symmetric() {
         let a = Matrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
-        let eig = syev(&a);
+        let eig = syev(&a).unwrap();
         assert!((eig.values[0] + 1.0).abs() < 1e-12);
         assert!((eig.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_input_is_an_error_not_a_panic() {
+        // NaNs make the QL sweep budget unreachable; the old code hit an
+        // assert! here and took the whole run down.
+        let mut a = Matrix::eye(6);
+        a[(2, 3)] = f64::NAN;
+        a[(3, 2)] = f64::NAN;
+        assert_eq!(syev(&a).err(), Some(EigError::NoConvergence));
+    }
+
+    /// The determinism invariant: the parallel back-transform reproduces
+    /// the serial eigendecomposition bit for bit (sizes straddle the
+    /// parallel threshold; full sweep in rust/tests/properties.rs).
+    #[test]
+    fn mt_is_bit_identical_to_serial() {
+        let mut rng = Xoshiro256pp::new(79);
+        for &n in &[1usize, 3, 60, 130] {
+            let a = random_symmetric(&mut rng, n);
+            let base = syev(&a).unwrap();
+            for threads in [1usize, 2, 4, 8] {
+                let eig = syev_mt(threads, &a).unwrap();
+                for (x, y) in eig.values.iter().zip(&base.values) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "values n={n} threads={threads}");
+                }
+                let same = eig
+                    .vectors
+                    .as_slice()
+                    .iter()
+                    .zip(base.vectors.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "vectors n={n} threads={threads}");
+            }
+        }
     }
 
     #[test]
@@ -361,7 +475,7 @@ mod tests {
         let mut a = Matrix::zeros(n, n);
         gemm(GemmKind::Level3, 1.0, &qd, &qt, 0.0, &mut a);
         a.symmetrize();
-        let eig = syev(&a);
+        let eig = syev(&a).unwrap();
         // Backward stability bounds the *absolute* error by O(eps·‖A‖),
         // so tiny eigenvalues carry error relative to the largest one.
         let norm = d[n - 1];

@@ -1,9 +1,15 @@
-//! General matrix–matrix multiply in the paper's three tiers.
+//! General matrix–matrix multiply in the paper's three tiers, plus the
+//! multithreaded Level-3 tier.
 //!
 //! All variants compute `C ← alpha · A·B + beta · C` for row-major
 //! matrices, matching the `dgemm` contract the paper's Eq. 3 rewrite
-//! targets.
+//! targets. The multithreaded tier partitions C by *rows* into disjoint
+//! panels, one per pool worker; because each output element is produced
+//! by exactly the same accumulation sequence regardless of which panel
+//! it lands in, `Level3Mt(t)` is **bit-identical** to `Level3` for every
+//! thread count — the invariant the checkpoint/resume guarantee rides on.
 
+use super::pool;
 use super::Matrix;
 
 /// Which implementation tier to use — mirrors the paper's Fig. 5 columns.
@@ -15,9 +21,14 @@ pub enum GemmKind {
     Level2,
     /// Cache-blocked, register-tiled kernel ("Level 3 BLAS" / dgemm).
     Level3,
+    /// The Level-3 kernel with row panels spread over a worker pool of
+    /// the given size ("multithreaded BLAS", paper §3.1). Bit-identical
+    /// to [`GemmKind::Level3`] for any thread count.
+    Level3Mt(usize),
 }
 
 impl GemmKind {
+    /// The serial tiers (the Fig. 5 comparison set).
     pub const ALL: [GemmKind; 3] = [GemmKind::Naive, GemmKind::Level2, GemmKind::Level3];
 
     pub fn name(self) -> &'static str {
@@ -25,6 +36,7 @@ impl GemmKind {
             GemmKind::Naive => "naive",
             GemmKind::Level2 => "level2",
             GemmKind::Level3 => "level3",
+            GemmKind::Level3Mt(_) => "level3-mt",
         }
     }
 }
@@ -38,6 +50,7 @@ pub fn gemm(kind: GemmKind, alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &m
         GemmKind::Naive => gemm_naive(alpha, a, b, beta, c),
         GemmKind::Level2 => gemm_level2(alpha, a, b, beta, c),
         GemmKind::Level3 => gemm_level3(alpha, a, b, beta, c),
+        GemmKind::Level3Mt(threads) => gemm_level3_mt(threads, alpha, a, b, beta, c),
     }
 }
 
@@ -80,19 +93,76 @@ const MC: usize = 64;
 const KC: usize = 512;
 const NC: usize = 512;
 const MR: usize = 4;
-const NR: usize = 8;
+pub(crate) const NR: usize = 8;
+
+/// Row-panel width used to align the multithreaded partition.
+pub(crate) const ROW_ALIGN: usize = MR;
 
 /// Cache-blocked GEMM with a 4×8 register micro-kernel (the `dgemm`
 /// analogue). Panels of `B` are packed column-block-major so the
 /// micro-kernel streams both operands contiguously.
 pub fn gemm_level3(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let m = c.rows();
+    let n = c.cols();
+    level3_row_panel(alpha, a, b, beta, c.as_mut_slice(), n, 0, m);
+}
+
+/// The Level-3 kernel with C's rows split into one contiguous panel per
+/// pool worker. Each element of C receives exactly the accumulation
+/// sequence the serial kernel would apply (the k- and n-blocking do not
+/// depend on the row partition), so the result is bit-identical to
+/// [`gemm_level3`] for every `threads`.
+pub fn gemm_level3_mt(
+    threads: usize,
+    alpha: f64,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f64,
+    c: &mut Matrix,
+) {
+    let m = c.rows();
+    let n = c.cols();
+    let threads = threads.max(1);
+    if threads == 1 || m < 2 * ROW_ALIGN {
+        level3_row_panel(alpha, a, b, beta, c.as_mut_slice(), n, 0, m);
+        return;
+    }
+    let shared = pool::SharedMut::new(c.as_mut_slice());
+    pool::global(threads).run(&|worker| {
+        let (r0, r1) = pool::chunk_aligned(m, threads, worker, ROW_ALIGN);
+        if r0 < r1 {
+            // SAFETY: chunks tile 0..m disjointly, so each worker owns
+            // rows r0..r1 of C exclusively.
+            let panel = unsafe { shared.slice(r0 * n, (r1 - r0) * n) };
+            level3_row_panel(alpha, a, b, beta, panel, n, r0, r1 - r0);
+        }
+    });
+}
+
+/// Blocked kernel over rows `row0 .. row0 + rows` of C, whose storage is
+/// the contiguous `cpanel` (leading dimension `ldc`). Both the serial
+/// and the multithreaded entry points funnel here, which is what makes
+/// their outputs bitwise equal.
+fn level3_row_panel(
+    alpha: f64,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f64,
+    cpanel: &mut [f64],
+    ldc: usize,
+    row0: usize,
+    rows: usize,
+) {
+    let k = a.cols();
+    let n = b.cols();
 
     // beta scaling up front so the kernel can accumulate freely.
     if beta == 0.0 {
-        c.as_mut_slice().fill(0.0);
+        cpanel.fill(0.0);
     } else if beta != 1.0 {
-        c.scale(beta);
+        for v in cpanel.iter_mut() {
+            *v *= beta;
+        }
     }
 
     let mut bpack = vec![0.0f64; KC * NC];
@@ -106,10 +176,10 @@ pub fn gemm_level3(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix
             let kb = KC.min(k - pc);
             pack_b(b, pc, jc, kb, nb, &mut bpack);
             let mut ic = 0;
-            while ic < m {
-                let mb = MC.min(m - ic);
-                pack_a(a, ic, pc, mb, kb, &mut apack);
-                macro_kernel(alpha, &apack, &bpack, mb, nb, kb, c, ic, jc);
+            while ic < rows {
+                let mb = MC.min(rows - ic);
+                pack_a(a, row0 + ic, pc, mb, kb, &mut apack);
+                macro_kernel(alpha, &apack, &bpack, mb, nb, kb, cpanel, ldc, ic, jc);
                 ic += MC;
             }
             pc += KC;
@@ -161,7 +231,8 @@ fn macro_kernel(
     mb: usize,
     nb: usize,
     kb: usize,
-    c: &mut Matrix,
+    cpanel: &mut [f64],
+    ldc: usize,
     ic: usize,
     jc: usize,
 ) {
@@ -173,7 +244,7 @@ fn macro_kernel(
         while i < mb {
             let ir = MR.min(mb - i);
             let astrip = &apack[(i / MR) * (kb * MR)..];
-            micro_kernel(alpha, astrip, bstrip, kb, c, ic + i, jc + j, ir, jr);
+            micro_kernel(alpha, astrip, bstrip, kb, cpanel, ldc, ic + i, jc + j, ir, jr);
             i += MR;
         }
         j += NR;
@@ -190,7 +261,8 @@ fn micro_kernel(
     astrip: &[f64],
     bstrip: &[f64],
     kb: usize,
-    c: &mut Matrix,
+    cpanel: &mut [f64],
+    ldc: usize,
     ci: usize,
     cj: usize,
     ir: usize,
@@ -208,7 +280,7 @@ fn micro_kernel(
         }
     }
     for ii in 0..ir {
-        let crow = c.row_mut(ci + ii);
+        let crow = &mut cpanel[(ci + ii) * ldc..(ci + ii) * ldc + ldc];
         for jj in 0..jr {
             crow[cj + jj] += alpha * acc[ii][jj];
         }
@@ -244,11 +316,36 @@ mod tests {
             let c0 = random_matrix(&mut rng, m, n);
             let mut c_ref = c0.clone();
             gemm_naive(1.3, &a, &b, 0.7, &mut c_ref);
-            for kind in [GemmKind::Level2, GemmKind::Level3] {
+            for kind in [GemmKind::Level2, GemmKind::Level3, GemmKind::Level3Mt(3)] {
                 let mut c = c0.clone();
                 gemm(kind, 1.3, &a, &b, 0.7, &mut c);
                 let d = c.max_abs_diff(&c_ref);
                 assert!(d < 1e-10, "{kind:?} ({m},{k},{n}) diff={d}");
+            }
+        }
+    }
+
+    /// The headline determinism invariant: the multithreaded panel split
+    /// reproduces the serial Level-3 result *bit for bit* for any thread
+    /// count (see also rust/tests/properties.rs for the full sweep).
+    #[test]
+    fn mt_is_bit_identical_to_serial() {
+        let mut rng = Xoshiro256pp::new(97);
+        for &(m, k, n) in &[(1, 1, 1), (3, 3, 3), (33, 17, 9), (130, 40, 64)] {
+            let a = random_matrix(&mut rng, m, k);
+            let b = random_matrix(&mut rng, k, n);
+            let c0 = random_matrix(&mut rng, m, n);
+            let mut c_ref = c0.clone();
+            gemm_level3(0.9, &a, &b, 0.4, &mut c_ref);
+            for threads in [1usize, 2, 4, 8] {
+                let mut c = c0.clone();
+                gemm_level3_mt(threads, 0.9, &a, &b, 0.4, &mut c);
+                let same = c
+                    .as_slice()
+                    .iter()
+                    .zip(c_ref.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "threads={threads} ({m},{k},{n})");
             }
         }
     }

@@ -6,8 +6,18 @@
 //! full matrix), competitive for tiny matrices — which is exactly the
 //! dimension-dependent crossover the paper reports for LAPACK `dsyev`
 //! versus the reference eigendecomposition.
+//!
+//! [`jacobi_eig_mt`] runs *parallel-ordered* sweeps: each round applies a
+//! round-robin set of index-disjoint rotations as one orthogonal
+//! transform `A ← JᵀAJ`, evaluated in two row/column-partitioned passes
+//! on the worker pool. The rotation schedule is fixed, so results are
+//! deterministic and independent of the thread count (the serial cyclic
+//! schedule visits pairs in a different order, so the two Jacobi variants
+//! agree only to rounding — the bit-identity contract covers
+//! gemm/syrk/syev, where serial and parallel share one schedule).
 
-use super::eig::EigDecomposition;
+use super::eig::{EigDecomposition, EigError};
+use super::pool;
 use super::Matrix;
 
 /// Eigendecomposition of a symmetric matrix by cyclic Jacobi rotations.
@@ -37,17 +47,7 @@ pub fn jacobi_eig(a: &Matrix) -> EigDecomposition {
                 if apq.abs() <= 1e-300 {
                     continue;
                 }
-                let app = m[(p, p)];
-                let aqq = m[(q, q)];
-                let tau = (aqq - app) / (2.0 * apq);
-                // tan of the rotation angle, the smaller root.
-                let t = if tau >= 0.0 {
-                    1.0 / (tau + (1.0 + tau * tau).sqrt())
-                } else {
-                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
-                };
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = t * c;
+                let (c, s) = rotation(m[(p, p)], m[(q, q)], apq);
 
                 // Apply the rotation to rows/cols p and q.
                 for k in 0..n {
@@ -72,7 +72,25 @@ pub fn jacobi_eig(a: &Matrix) -> EigDecomposition {
         }
     }
 
-    // Collect, sort ascending.
+    sort_pairs(&m, &v)
+}
+
+/// The Jacobi rotation annihilating `a[p][q]`: returns `(cos, sin)` of
+/// the smaller-angle root.
+fn rotation(app: f64, aqq: f64, apq: f64) -> (f64, f64) {
+    let tau = (aqq - app) / (2.0 * apq);
+    let t = if tau >= 0.0 {
+        1.0 / (tau + (1.0 + tau * tau).sqrt())
+    } else {
+        -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+    };
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    (c, t * c)
+}
+
+/// Collect the diagonal and sort eigenpairs ascending.
+fn sort_pairs(m: &Matrix, v: &Matrix) -> EigDecomposition {
+    let n = m.rows();
     let mut idx: Vec<usize> = (0..n).collect();
     let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
     idx.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
@@ -81,27 +99,172 @@ pub fn jacobi_eig(a: &Matrix) -> EigDecomposition {
     EigDecomposition { values, vectors }
 }
 
+/// Parallel-ordered Jacobi: one round-robin tournament round = `n/2`
+/// index-disjoint rotations applied as a single orthogonal transform.
+/// Results are deterministic and thread-count-independent (the schedule
+/// is fixed; work is partitioned by disjoint rows/columns).
+pub fn jacobi_eig_mt(threads: usize, a: &Matrix) -> EigDecomposition {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let threads = threads.max(1);
+    if n < 2 {
+        return jacobi_eig(a);
+    }
+    let mut m = a.clone();
+    let mut v = Matrix::eye(n);
+    let norm = m.fro_norm().max(f64::MIN_POSITIVE);
+    // Round-robin tournament over an even number of slots; slot `even`
+    // is the dummy when n is odd.
+    let even = n + (n % 2);
+    let rounds = even - 1;
+    let mut rot: Vec<(usize, usize, f64, f64)> = Vec::with_capacity(even / 2);
+
+    for _sweep in 0..30 {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[(p, q)] * m[(p, q)];
+            }
+        }
+        if (2.0 * off).sqrt() <= 1e-14 * norm {
+            break;
+        }
+        for round in 0..rounds {
+            // Tournament pairing: slot 0 fixed, others rotate by round.
+            rot.clear();
+            for pair in 0..even / 2 {
+                let (x, y) = tournament_pair(even, round, pair);
+                if x >= n || y >= n {
+                    continue; // dummy slot (odd n)
+                }
+                let (p, q) = (x.min(y), x.max(y));
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let (c, s) = rotation(m[(p, p)], m[(q, q)], apq);
+                rot.push((p, q, c, s));
+            }
+            if rot.is_empty() {
+                continue;
+            }
+            apply_round(threads, &mut m, &mut v, &rot);
+        }
+    }
+
+    sort_pairs(&m, &v)
+}
+
+/// Slot pairing of round-robin round `round`, pair index `pair`, over an
+/// even slot count: the classic circle method (slot 0 fixed).
+fn tournament_pair(even: usize, round: usize, pair: usize) -> (usize, usize) {
+    let rot = |slot: usize| -> usize {
+        if slot == 0 {
+            0
+        } else {
+            1 + (slot - 1 + round) % (even - 1)
+        }
+    };
+    (rot(pair), rot(even - 1 - pair))
+}
+
+/// Apply the disjoint rotation set as `A ← JᵀAJ`, `V ← VJ`:
+/// pass 1 mixes column pairs within each row (row-partitioned), pass 2
+/// mixes row pairs within each column (column-partitioned).
+fn apply_round(threads: usize, m: &mut Matrix, v: &mut Matrix, rot: &[(usize, usize, f64, f64)]) {
+    let n = m.rows();
+    let mix_row = |row: &mut [f64], base: usize| {
+        for &(p, q, c, s) in rot {
+            let xp = row[base + p];
+            let xq = row[base + q];
+            row[base + p] = c * xp - s * xq;
+            row[base + q] = s * xp + c * xq;
+        }
+    };
+    if threads == 1 || n < 64 {
+        let ms = m.as_mut_slice();
+        for i in 0..n {
+            mix_row(ms, i * n);
+        }
+        for j in 0..n {
+            for &(p, q, c, s) in rot {
+                let xp = ms[p * n + j];
+                let xq = ms[q * n + j];
+                ms[p * n + j] = c * xp - s * xq;
+                ms[q * n + j] = s * xp + c * xq;
+            }
+        }
+        let vs = v.as_mut_slice();
+        for i in 0..n {
+            mix_row(vs, i * n);
+        }
+        return;
+    }
+    let pool = pool::global(threads);
+    let mm = pool::SharedMut::new(m.as_mut_slice());
+    // Pass 1: A ← AJ and V ← VJ, partitioned by rows.
+    {
+        let vv = pool::SharedMut::new(v.as_mut_slice());
+        pool.run(&|worker| {
+            let (r0, r1) = pool::chunk(n, threads, worker);
+            for i in r0..r1 {
+                // SAFETY: disjoint rows per worker.
+                let mrow = unsafe { mm.slice(i * n, n) };
+                mix_row(mrow, 0);
+                let vrow = unsafe { vv.slice(i * n, n) };
+                mix_row(vrow, 0);
+            }
+        });
+    }
+    // Pass 2: A ← JᵀA, partitioned by columns (disjoint elements).
+    pool.run(&|worker| {
+        let (c0, c1) = pool::chunk(n, threads, worker);
+        if c0 < c1 {
+            // SAFETY: each worker touches only columns c0..c1 of every
+            // row it writes; ranges are disjoint across workers.
+            let ms = unsafe { mm.slice(0, n * n) };
+            for j in c0..c1 {
+                for &(p, q, c, s) in rot {
+                    let xp = ms[p * n + j];
+                    let xq = ms[q * n + j];
+                    ms[p * n + j] = c * xp - s * xq;
+                    ms[q * n + j] = s * xp + c * xq;
+                }
+            }
+        }
+    });
+}
+
 /// Which eigensolver tier to use (paper Fig. 5 upper-left columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum EigKind {
     /// Cyclic Jacobi — "reference C code" tier.
     Jacobi,
+    /// Parallel-ordered Jacobi sweeps on a pool of the given size.
+    JacobiMt(usize),
     /// Householder + implicit QL — the `dsyev` analogue.
     Syev,
+    /// [`Syev`](EigKind::Syev) with the Householder back-transform on a
+    /// pool of the given size; bit-identical to the serial kernel.
+    SyevMt(usize),
 }
 
 impl EigKind {
     pub fn name(self) -> &'static str {
         match self {
             EigKind::Jacobi => "jacobi",
+            EigKind::JacobiMt(_) => "jacobi-mt",
             EigKind::Syev => "syev",
+            EigKind::SyevMt(_) => "syev-mt",
         }
     }
 
-    pub fn decompose(self, a: &Matrix) -> EigDecomposition {
+    pub fn decompose(self, a: &Matrix) -> Result<EigDecomposition, EigError> {
         match self {
-            EigKind::Jacobi => jacobi_eig(a),
+            EigKind::Jacobi => Ok(jacobi_eig(a)),
+            EigKind::JacobiMt(threads) => Ok(jacobi_eig_mt(threads, a)),
             EigKind::Syev => super::eig::syev(a),
+            EigKind::SyevMt(threads) => super::eig::syev_mt(threads, a),
         }
     }
 }
@@ -123,7 +286,7 @@ mod tests {
             a.symmetrize();
 
             let ja = jacobi_eig(&a);
-            let sy = super::super::eig::syev(&a);
+            let sy = super::super::eig::syev(&a).unwrap();
             for (x, y) in ja.values.iter().zip(&sy.values) {
                 assert!((x - y).abs() < 1e-9 * sy.values[n - 1].abs(), "{x} vs {y}");
             }
@@ -148,5 +311,76 @@ mod tests {
         let mut rec = Matrix::zeros(n, n);
         gemm(GemmKind::Level3, 1.0, &vd, &vt, 0.0, &mut rec);
         assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn tournament_rounds_cover_all_pairs_disjointly() {
+        for n in [2usize, 4, 6, 8, 12] {
+            let mut seen = std::collections::HashSet::new();
+            for round in 0..n - 1 {
+                let mut used = vec![false; n];
+                for pair in 0..n / 2 {
+                    let (x, y) = tournament_pair(n, round, pair);
+                    assert_ne!(x, y);
+                    assert!(!used[x] && !used[y], "round {round} reuses a slot");
+                    used[x] = true;
+                    used[y] = true;
+                    seen.insert((x.min(y), x.max(y)));
+                }
+            }
+            assert_eq!(seen.len(), n * (n - 1) / 2, "n={n}: not all pairs visited");
+        }
+    }
+
+    #[test]
+    fn mt_reconstructs_and_matches_serial_to_rounding() {
+        let mut rng = Xoshiro256pp::new(33);
+        for &n in &[1usize, 2, 3, 7, 20, 70] {
+            let mut a = Matrix::from_fn(n, n, |_, _| rng.uniform(-2.0, 2.0));
+            a.symmetrize();
+            let serial = jacobi_eig(&a);
+            let e = jacobi_eig_mt(4, &a);
+            // Same spectrum as the cyclic schedule, to rounding.
+            let scale = 1.0 + serial.values.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            for (x, y) in e.values.iter().zip(&serial.values) {
+                assert!((x - y).abs() < 1e-8 * scale, "n={n}: {x} vs {y}");
+            }
+            // And a genuine decomposition: V diag(d) Vᵀ = A.
+            let mut vd = e.vectors.clone();
+            for r in 0..n {
+                for c in 0..n {
+                    vd[(r, c)] *= e.values[c];
+                }
+            }
+            let vt = e.vectors.transpose();
+            let mut rec = Matrix::zeros(n, n);
+            gemm(GemmKind::Level3, 1.0, &vd, &vt, 0.0, &mut rec);
+            assert!(rec.max_abs_diff(&a) < 1e-8 * scale, "n={n}");
+        }
+    }
+
+    /// The parallel schedule is fixed, so any thread count gives the
+    /// same bits — resume-stability for configs that select JacobiMt.
+    #[test]
+    fn mt_is_thread_count_independent() {
+        let mut rng = Xoshiro256pp::new(34);
+        for &n in &[5usize, 66] {
+            let mut a = Matrix::from_fn(n, n, |_, _| rng.uniform(-2.0, 2.0));
+            a.symmetrize();
+            let base = jacobi_eig_mt(1, &a);
+            for threads in [2usize, 4, 8] {
+                let e = jacobi_eig_mt(threads, &a);
+                for (x, y) in e.values.iter().zip(&base.values) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "n={n} threads={threads}");
+                }
+                let same = e
+                    .vectors
+                    .as_slice()
+                    .iter()
+                    .zip(base.vectors.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "n={n} threads={threads}");
+            }
+        }
     }
 }

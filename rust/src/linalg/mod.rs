@@ -4,27 +4,41 @@
 //! algebra: the reference C code (hand-written loops), Level-2 BLAS
 //! (matrix–vector formulations), and Level-3 BLAS (the paper's GEMM
 //! rewrites). The vendored crate set ships no BLAS, so this module carries
-//! the three tiers natively:
+//! the three tiers natively, plus the paper's *multithreaded* BLAS tier:
 //!
 //! * [`gemm::gemm_naive`]   — the "reference C" analogue: textbook i-j-k
 //!   triple loop, no blocking;
 //! * [`gemm::gemm_level2`]  — one `dgemv`-style matrix–vector product per
 //!   column (what "using Level 2 BLAS directly" means in Fig. 5);
 //! * [`gemm::gemm_level3`]  — cache-blocked, register-tiled GEMM (the
-//!   `dgemm` analogue the paper's Eq. 3 rewrite targets).
+//!   `dgemm` analogue the paper's Eq. 3 rewrite targets);
+//! * [`gemm::gemm_level3_mt`] — the Level-3 kernel with row panels spread
+//!   over the persistent [`pool::WorkerPool`] ("multithreaded BLAS").
 //!
 //! [`eig::syev`] is the `dsyev` analogue: Householder tridiagonalisation
-//! followed by implicit-shift QL (the EISPACK `tred2`/`tql2` lineage).
+//! followed by implicit-shift QL (the EISPACK `tred2`/`tql2` lineage);
+//! [`eig::syev_mt`] parallelises its Householder back-transform.
+//! [`syrk::syrk`] is the `dsyrk` analogue used by the rank-μ covariance
+//! update (half the FLOPs of the GEMM formulation).
+//!
+//! **Determinism contract:** every parallel kernel partitions its output
+//! into disjoint regions, one per pool worker, and performs the exact
+//! serial operation sequence per element — so `*_mt` results are
+//! bit-identical to their serial counterparts for any thread count, and
+//! checkpoint/resume bit-identity survives `linalg_threads > 1`.
 
 pub mod eig;
 pub mod gemm;
 pub mod jacobi;
 pub mod matrix;
+pub mod pool;
+pub mod syrk;
 
-pub use eig::syev;
+pub use eig::{syev, syev_mt, EigError};
 pub use gemm::{gemm, GemmKind};
-pub use jacobi::{jacobi_eig, EigKind};
+pub use jacobi::{jacobi_eig, jacobi_eig_mt, EigKind};
 pub use matrix::Matrix;
+pub use syrk::{syrk, syrk_mt};
 
 /// Euclidean norm of a vector.
 pub fn norm2(x: &[f64]) -> f64 {

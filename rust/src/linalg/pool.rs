@@ -1,0 +1,331 @@
+//! A small persistent worker pool for the multithreaded linalg tier
+//! (and reusable by the evaluator).
+//!
+//! The pool runs *scoped* jobs: [`WorkerPool::run`] hands every worker a
+//! reference to one closure and blocks until all of them return, so the
+//! closure may borrow from the caller's stack. Threads are spawned once
+//! and parked on a condvar between jobs — no per-call spawn cost, which
+//! is what makes it usable inside per-generation kernels (paper §3.1
+//! replaces reference loops with *persistently* threaded BLAS).
+//!
+//! Determinism contract: the pool itself assigns no work — callers
+//! partition by worker index (see [`chunk`] / [`chunk_aligned`]) into
+//! disjoint output regions, which is how every parallel kernel in
+//! [`crate::linalg`] stays bit-identical to its serial counterpart.
+
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A type-erased scoped job. The `'static` lifetime is a lie told only
+/// inside this module: `run` blocks until every worker has finished, so
+/// the borrow can never outlive the frame that owns it.
+type Job = &'static (dyn Fn(usize) + Sync);
+
+struct Slot {
+    /// Monotone job counter; workers run one job per epoch.
+    epoch: u64,
+    /// Epoch of the most recently *completed* job.
+    done_epoch: u64,
+    job: Option<Job>,
+    /// Participants (workers + submitting caller) still inside the job.
+    pending: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Signals workers that a new epoch (or shutdown) is available.
+    start: Condvar,
+    /// Signals the submitter that `pending` reached zero.
+    done: Condvar,
+}
+
+/// Persistent pool of `threads - 1` worker threads; the thread calling
+/// [`run`](WorkerPool::run) participates as the last worker, so a job on
+/// a pool of size `t` sees worker indices `0..t`. A pool of size 1 spawns
+/// nothing and runs jobs inline.
+pub struct WorkerPool {
+    shared: std::sync::Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Build a pool that runs jobs across `threads` participants
+    /// (`threads - 1` spawned workers plus the caller).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = std::sync::Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                done_epoch: 0,
+                job: None,
+                pending: 0,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for worker in 0..threads - 1 {
+            let sh = std::sync::Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("linalg-pool-{worker}"))
+                    .spawn(move || worker_loop(&sh, worker))
+                    .expect("spawning linalg pool worker"),
+            );
+        }
+        Self { shared, handles, threads }
+    }
+
+    /// Number of participants a job sees (worker indices `0..threads()`).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(worker)` once per participant and block until all return.
+    ///
+    /// Work must be partitioned by the worker index into disjoint output
+    /// regions; the pool imposes no ordering between participants within
+    /// one job. Concurrent `run` calls from different threads serialise
+    /// on the job slot.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 {
+            f(0);
+            return;
+        }
+        // SAFETY: the job reference is only reachable through the slot,
+        // the slot entry is cleared when the last participant finishes,
+        // and this function does not return before that — so the
+        // fabricated 'static never outlives the real borrow.
+        let job: Job = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let my_epoch;
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            // Wait for any in-flight job (another submitter) to drain.
+            while slot.job.is_some() {
+                slot = self.shared.done.wait(slot).unwrap();
+            }
+            slot.epoch += 1;
+            my_epoch = slot.epoch;
+            slot.job = Some(job);
+            slot.pending = self.threads;
+            self.shared.start.notify_all();
+        }
+        // Participate as the highest worker index.
+        f(self.threads - 1);
+        let mut slot = self.shared.slot.lock().unwrap();
+        finish_one(&self.shared, &mut slot);
+        while slot.done_epoch < my_epoch {
+            slot = self.shared.done.wait(slot).unwrap();
+        }
+    }
+}
+
+fn finish_one(shared: &Shared, slot: &mut Slot) {
+    slot.pending -= 1;
+    if slot.pending == 0 {
+        slot.job = None;
+        slot.done_epoch = slot.epoch;
+        shared.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared, worker: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch > seen {
+                    seen = slot.epoch;
+                    break slot.job.expect("job present while epoch is live");
+                }
+                slot = shared.start.wait(slot).unwrap();
+            }
+        };
+        job(worker);
+        let mut slot = shared.slot.lock().unwrap();
+        finish_one(shared, &mut slot);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Process-wide pools keyed by thread count, so a `Copy` kernel selector
+/// like `GemmKind::Level3Mt(t)` can dispatch without owning a pool. Pools
+/// are created on first use and live for the process (intentionally
+/// leaked — worker threads park when idle).
+pub fn global(threads: usize) -> &'static WorkerPool {
+    static POOLS: OnceLock<Mutex<Vec<(usize, &'static WorkerPool)>>> = OnceLock::new();
+    let threads = threads.max(1);
+    let registry = POOLS.get_or_init(|| Mutex::new(Vec::new()));
+    let mut pools = registry.lock().unwrap();
+    if let Some(&(_, pool)) = pools.iter().find(|(t, _)| *t == threads) {
+        return pool;
+    }
+    let pool: &'static WorkerPool = Box::leak(Box::new(WorkerPool::new(threads)));
+    pools.push((threads, pool));
+    pool
+}
+
+/// Contiguous balanced partition of `0..total` into `parts` chunks:
+/// returns the half-open range owned by chunk `idx`. Empty ranges are
+/// possible when `total < parts`.
+pub fn chunk(total: usize, parts: usize, idx: usize) -> (usize, usize) {
+    let parts = parts.max(1);
+    let base = total / parts;
+    let rem = total % parts;
+    let start = idx * base + idx.min(rem);
+    let len = base + usize::from(idx < rem);
+    (start.min(total), (start + len).min(total))
+}
+
+/// Like [`chunk`], but chunk boundaries land on multiples of `align`
+/// (the last chunk absorbs the remainder) — used to keep GEMM row panels
+/// on `MR` boundaries.
+pub fn chunk_aligned(total: usize, parts: usize, idx: usize, align: usize) -> (usize, usize) {
+    let align = align.max(1);
+    let blocks = total.div_ceil(align);
+    let (b0, b1) = chunk(blocks, parts, idx);
+    ((b0 * align).min(total), (b1 * align).min(total))
+}
+
+/// A raw pointer to a `f64` buffer that several pool workers write
+/// *disjoint* regions of. Plain `&mut` can't cross the closure boundary
+/// more than once; this wrapper moves the aliasing obligation to the
+/// caller, which is exactly the pool's determinism contract.
+#[derive(Clone, Copy)]
+pub struct SharedMut(*mut f64, usize);
+
+// SAFETY: callers hand disjoint index ranges to distinct workers (the
+// module-level contract), so concurrent access never aliases.
+unsafe impl Send for SharedMut {}
+unsafe impl Sync for SharedMut {}
+
+impl SharedMut {
+    pub fn new(buf: &mut [f64]) -> Self {
+        Self(buf.as_mut_ptr(), buf.len())
+    }
+
+    /// Reborrow `len` elements starting at `start`.
+    ///
+    /// # Safety
+    /// Ranges handed to concurrently running workers must be disjoint,
+    /// and must lie inside the original buffer (debug-asserted).
+    pub unsafe fn slice<'a>(self, start: usize, len: usize) -> &'a mut [f64] {
+        debug_assert!(start + len <= self.1);
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_tile_exactly() {
+        for total in [0usize, 1, 5, 7, 64, 129] {
+            for parts in 1..=9 {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for idx in 0..parts {
+                    let (s, e) = chunk(total, parts, idx);
+                    assert_eq!(s, prev_end, "total={total} parts={parts} idx={idx}");
+                    assert!(e >= s);
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, total);
+                assert_eq!(prev_end, total);
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_chunks_tile_and_align() {
+        for total in [1usize, 3, 4, 17, 64, 130] {
+            for parts in 1..=5 {
+                let mut prev_end = 0;
+                for idx in 0..parts {
+                    let (s, e) = chunk_aligned(total, parts, idx, 4);
+                    assert_eq!(s, prev_end);
+                    assert!(s % 4 == 0, "start not aligned: {s}");
+                    prev_end = e;
+                }
+                assert_eq!(prev_end, total);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_every_worker_exactly_once_per_job() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(&|_w| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn disjoint_writes_cover_the_buffer() {
+        let pool = WorkerPool::new(3);
+        let mut buf = vec![0.0f64; 1000];
+        let shared = SharedMut::new(&mut buf);
+        pool.run(&|w| {
+            let (s, e) = chunk(1000, 3, w);
+            let part = unsafe { shared.slice(s, e - s) };
+            for (off, v) in part.iter_mut().enumerate() {
+                *v = (s + off) as f64;
+            }
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let mut hits = 0;
+        // A pool of 1 runs the job on the calling thread, so non-Sync
+        // state would even be fine — but keep the closure Sync-shaped.
+        let cell = AtomicUsize::new(0);
+        pool.run(&|w| {
+            assert_eq!(w, 0);
+            cell.fetch_add(1, Ordering::Relaxed);
+        });
+        hits += cell.load(Ordering::Relaxed);
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn global_registry_reuses_pools() {
+        let a = global(2) as *const WorkerPool;
+        let b = global(2) as *const WorkerPool;
+        let c = global(3) as *const WorkerPool;
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,201 @@
+//! Weighted symmetric rank-k update — the `dsyrk` analogue.
+//!
+//! The CMA-ES rank-μ covariance update (paper Eq. 3) is
+//! `C ← keep·C + c_μ · Y·diag(w)·Yᵀ` with `Y` the n×μ matrix of selected
+//! steps. A general GEMM computes all n² entries; the product is
+//! symmetric, so only the lower triangle is needed — half the FLOPs.
+//! This kernel computes the lower triangle (diagonal included) and
+//! mirrors it, in two row-partitioned passes:
+//!
+//! 1. for rows `i`: `c[i][j] = beta·c[i][j] + alpha·Σ_k w[k]·y[i][k]·y[j][k]`
+//!    for `j ≤ i` (reads only `y` and the precomputed `w·y` rows);
+//! 2. for rows `i`: `c[i][j] = c[j][i]` for `j > i` (reads the lower
+//!    triangle finished in pass 1, writes only row `i`'s upper part).
+//!
+//! Both passes write disjoint rows per worker and perform the same
+//! per-element operations in the same order for every thread count, so
+//! [`syrk_mt`] is **bit-identical** to [`syrk`] — the invariant the
+//! checkpoint/resume guarantee requires of every parallel kernel.
+
+use super::pool;
+use super::Matrix;
+
+/// Serial weighted rank-k update: `C ← beta·C + alpha·Y·diag(w)·Yᵀ`.
+///
+/// `y` is n×k (columns are the rank-1 directions), `w` has length k.
+/// With `beta == 0.0` the existing contents of `c` are ignored (NaN-safe,
+/// matching the GEMM convention).
+pub fn syrk(alpha: f64, y: &Matrix, w: &[f64], beta: f64, c: &mut Matrix) {
+    syrk_mt(1, alpha, y, w, beta, c);
+}
+
+/// Multithreaded [`syrk`]; bit-identical to the serial kernel for every
+/// `threads` (see module docs for why).
+pub fn syrk_mt(threads: usize, alpha: f64, y: &Matrix, w: &[f64], beta: f64, c: &mut Matrix) {
+    let n = y.rows();
+    let k = y.cols();
+    assert_eq!(w.len(), k, "weight length must match y's column count");
+    assert_eq!(c.rows(), n);
+    assert_eq!(c.cols(), n);
+    let threads = threads.max(1);
+
+    // Pre-scale the rows once: yw[i][k] = w[k]·y[i][k]. Row-major, so
+    // each dot product below streams two contiguous rows.
+    let mut yw = vec![0.0f64; n * k];
+    for i in 0..n {
+        let src = y.row(i);
+        let dst = &mut yw[i * k..(i + 1) * k];
+        for (d, (s, wk)) in dst.iter_mut().zip(src.iter().zip(w)) {
+            *d = s * wk;
+        }
+    }
+
+    if threads == 1 || n < 2 {
+        let cs = c.as_mut_slice();
+        lower_pass(alpha, y, &yw, beta, cs, n, k, 0, n);
+        mirror_pass(cs, n, 0, n);
+        return;
+    }
+
+    let shared = pool::SharedMut::new(c.as_mut_slice());
+    let pool = pool::global(threads);
+    // Pass 1: lower triangle, partitioned by output rows.
+    pool.run(&|worker| {
+        let (r0, r1) = pool::chunk(n, threads, worker);
+        if r0 < r1 {
+            // SAFETY: row chunks tile 0..n disjointly.
+            let rows = unsafe { shared.slice(r0 * n, (r1 - r0) * n) };
+            lower_pass(alpha, y, &yw, beta, rows, n, k, r0, r1);
+        }
+    });
+    // Pass 2 (after the pass-1 barrier): mirror the finished lower
+    // triangle into each row's upper part. Writes stay inside the
+    // worker's rows; reads touch only the strictly-lower triangle,
+    // which pass 2 never writes.
+    pool.run(&|worker| {
+        let (r0, r1) = pool::chunk(n, threads, worker);
+        if r0 < r1 {
+            // SAFETY: writes land in rows r0..r1 only; the full-matrix
+            // view is needed for the (read-only) transposed reads.
+            let all = unsafe { shared.slice(0, n * n) };
+            mirror_pass(all, n, r0, r1);
+        }
+    });
+}
+
+/// Pass 1 over rows `r0..r1`: `rows` is the chunk's storage, whose first
+/// element is `c[r0][0]`.
+#[allow(clippy::too_many_arguments)]
+fn lower_pass(
+    alpha: f64,
+    y: &Matrix,
+    yw: &[f64],
+    beta: f64,
+    rows: &mut [f64],
+    n: usize,
+    k: usize,
+    r0: usize,
+    r1: usize,
+) {
+    for i in r0..r1 {
+        let ywi = &yw[i * k..(i + 1) * k];
+        let crow = &mut rows[(i - r0) * n..(i - r0) * n + n];
+        for (j, cij) in crow.iter_mut().enumerate().take(i + 1) {
+            let acc = super::dot(ywi, y.row(j));
+            let old = if beta == 0.0 { 0.0 } else { beta * *cij };
+            *cij = old + alpha * acc;
+        }
+    }
+}
+
+/// Pass 2 over rows `r0..r1` of the full `n×n` buffer `cs`.
+fn mirror_pass(cs: &mut [f64], n: usize, r0: usize, r1: usize) {
+    for i in r0..r1 {
+        for j in (i + 1)..n {
+            cs[i * n + j] = cs[j * n + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, GemmKind};
+    use crate::rng::Xoshiro256pp;
+
+    fn random_matrix(rng: &mut Xoshiro256pp, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.uniform(-1.0, 1.0))
+    }
+
+    /// syrk must agree (to rounding) with the GEMM formulation
+    /// `C ← beta·C + alpha · Y · (diag(w)·Yᵀ)` used before this kernel.
+    #[test]
+    fn agrees_with_gemm_formulation() {
+        let mut rng = Xoshiro256pp::new(41);
+        for &(n, k) in &[(1usize, 1usize), (2, 5), (7, 3), (20, 11), (33, 16)] {
+            let y = random_matrix(&mut rng, n, k);
+            let w: Vec<f64> = (0..k).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let mut c0 = random_matrix(&mut rng, n, n);
+            c0.symmetrize();
+
+            let wyt = Matrix::from_fn(k, n, |r, c| w[r] * y[(c, r)]);
+            let mut want = c0.clone();
+            gemm(GemmKind::Level3, 0.3, &y, &wyt, 0.7, &mut want);
+
+            let mut got = c0.clone();
+            syrk(0.3, &y, &w, 0.7, &mut got);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-12, "({n},{k}) diff={d}");
+        }
+    }
+
+    #[test]
+    fn output_is_exactly_symmetric() {
+        let mut rng = Xoshiro256pp::new(42);
+        let y = random_matrix(&mut rng, 12, 6);
+        let w: Vec<f64> = (0..6).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let mut c = random_matrix(&mut rng, 12, 12);
+        syrk(1.0, &y, &w, 0.5, &mut c);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert_eq!(c[(i, j)].to_bits(), c[(j, i)].to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn beta_zero_ignores_garbage_c() {
+        let mut rng = Xoshiro256pp::new(43);
+        let y = random_matrix(&mut rng, 5, 3);
+        let w = [0.5, 0.3, 0.2];
+        let mut dirty = Matrix::from_fn(5, 5, |_, _| f64::NAN);
+        syrk(1.0, &y, &w, 0.0, &mut dirty);
+        let mut clean = Matrix::zeros(5, 5);
+        syrk(1.0, &y, &w, 0.0, &mut clean);
+        assert!(dirty.max_abs_diff(&clean) < 1e-15);
+    }
+
+    /// The determinism invariant: every thread count produces the serial
+    /// result bit for bit (the full sweep lives in rust/tests/properties.rs).
+    #[test]
+    fn mt_is_bit_identical_to_serial() {
+        let mut rng = Xoshiro256pp::new(44);
+        for &(n, k) in &[(1usize, 1usize), (3, 2), (17, 8), (40, 20)] {
+            let y = random_matrix(&mut rng, n, k);
+            let w: Vec<f64> = (0..k).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let c0 = random_matrix(&mut rng, n, n);
+            let mut c_ref = c0.clone();
+            syrk(0.9, &y, &w, 0.6, &mut c_ref);
+            for threads in [1usize, 2, 4, 8] {
+                let mut c = c0.clone();
+                syrk_mt(threads, 0.9, &y, &w, 0.6, &mut c);
+                let same = c
+                    .as_slice()
+                    .iter()
+                    .zip(c_ref.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "threads={threads} ({n},{k})");
+            }
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //!   optimize  --fid F --dim N     sequential IPOP-CMA-ES on one function
 //!   compare   --fid F --dim N     the three strategies on the virtual cluster
 //!   suite     --dim N             quick strategy comparison over the suite
+//!   bench-diff --baseline A --current B   diff two BENCH_linalg.json files
 
 use std::sync::Arc;
 
@@ -30,15 +31,17 @@ fn main() {
         "optimize" => optimize(&args),
         "compare" => compare(&args),
         "suite" => suite(&args),
+        "bench-diff" => bench_diff(&args),
         _ => {
             print!(
                 "ipopcma — massively parallel IPOP-CMA-ES (Redon et al. 2024 reproduction)\n\n\
                  usage:\n\
                  \x20 ipopcma info\n\
-                 \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0] [--workers 1] [--json out.json]\n\
+                 \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0] [--workers 1] [--linalg-threads 1] [--json out.json]\n\
                  \x20                  [--checkpoint-dir DIR] [--checkpoint-every 25] [--resume DIR|SNAP.json]\n\
                  \x20 ipopcma compare  --fid 7  --dim 10 [--cost-ms 1] [--seed 0]\n\
-                 \x20 ipopcma suite    --dim 10 [--cost-ms 0] [--seed 0]\n"
+                 \x20 ipopcma suite    --dim 10 [--cost-ms 0] [--seed 0]\n\
+                 \x20 ipopcma bench-diff --baseline benches/baseline/BENCH_linalg.json --current BENCH_linalg.json [--warn-pct 10]\n"
             );
             Ok(())
         }
@@ -75,6 +78,7 @@ fn optimize(args: &Args) -> Result<(), String> {
     let max_evals: usize = args.typed("max-evals", 500_000)?;
     let seed: u64 = args.typed("seed", 0)?;
     let workers: usize = args.typed("workers", 1)?;
+    let linalg_threads: usize = args.typed("linalg-threads", 1)?;
     let json_path = args.get("json").map(str::to_string);
     let checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
     let checkpoint_every: usize = args.typed("checkpoint-every", 25)?;
@@ -93,6 +97,9 @@ fn optimize(args: &Args) -> Result<(), String> {
     }
     if workers < 1 {
         return Err(format!("--workers must be >= 1, got {workers}"));
+    }
+    if linalg_threads < 1 {
+        return Err(format!("--linalg-threads must be >= 1, got {linalg_threads}"));
     }
     if checkpoint_every < 1 {
         return Err(format!("--checkpoint-every must be >= 1, got {checkpoint_every}"));
@@ -113,6 +120,7 @@ fn optimize(args: &Args) -> Result<(), String> {
         .target(target)
         .descent_evals(max_evals)
         .eval_budget(max_evals)
+        .linalg_threads(linalg_threads)
         .seed(seed)
         .checkpoint_every(checkpoint_every);
     if let Some(dir) = &checkpoint_dir {
@@ -232,4 +240,64 @@ fn suite(args: &Args) -> Result<(), String> {
         )
     );
     Ok(())
+}
+
+/// The CI perf gate: diff a fresh `BENCH_linalg.json` against the
+/// committed baseline and exit non-zero when any kernel configuration
+/// lost more than `--warn-pct` percent GFLOP/s. The bench-smoke job runs
+/// this with `continue-on-error`, so regressions warn without blocking.
+fn bench_diff(args: &Args) -> Result<(), String> {
+    use ipopcma::harness::linalg_bench::{compare as bench_compare, BenchReport};
+
+    let baseline_path = args
+        .get("baseline")
+        .ok_or("bench-diff requires --baseline <BENCH_linalg.json>")?;
+    let current_path = args
+        .get("current")
+        .ok_or("bench-diff requires --current <BENCH_linalg.json>")?;
+    let warn_pct: f64 = args.typed("warn-pct", 10.0)?;
+    if !(warn_pct >= 0.0) {
+        return Err(format!("--warn-pct must be >= 0, got {warn_pct}"));
+    }
+
+    let baseline = BenchReport::read_file(baseline_path)?;
+    let current = BenchReport::read_file(current_path)?;
+    let regressions = bench_compare(&baseline, &current, warn_pct);
+    if regressions.is_empty() {
+        println!(
+            "bench-diff: no kernel more than {warn_pct}% below baseline \
+             ({} configurations compared)",
+            baseline.entries.len()
+        );
+        return Ok(());
+    }
+    let rows: Vec<Vec<String>> = regressions
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.clone(),
+                r.d.to_string(),
+                r.threads.to_string(),
+                format!("{:.2}", r.base_gflops),
+                format!("{:.2}", r.cur_gflops),
+                format!("{:.1}%", r.loss_pct),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        ascii_table(
+            &format!("bench-diff: kernels more than {warn_pct}% below baseline"),
+            &[
+                "kernel".into(),
+                "d".into(),
+                "threads".into(),
+                "base GF/s".into(),
+                "cur GF/s".into(),
+                "loss".into(),
+            ],
+            &rows,
+        )
+    );
+    Err(format!("{} kernel configuration(s) regressed past {warn_pct}%", regressions.len()))
 }

@@ -122,6 +122,40 @@ pub fn ecdf_at(curve: &[(f64, f64)], t: f64) -> f64 {
     v
 }
 
+/// Per-kernel wall time accumulated by a compute backend (paper §3.1's
+/// breakdown of where large-d iteration time goes): sampling GEMM,
+/// rank-μ update (SYRK or GEMM), and eigendecomposition. `Copy` so a
+/// `Copy` compute backend can carry one.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KernelTimings {
+    /// Seconds spent in the sampling `y = B·D·z` GEMM.
+    pub gemm_s: f64,
+    pub gemm_calls: u64,
+    /// Seconds spent in the rank-μ covariance update.
+    pub update_s: f64,
+    pub update_calls: u64,
+    /// Seconds spent in the eigendecomposition.
+    pub eig_s: f64,
+    pub eig_calls: u64,
+}
+
+impl KernelTimings {
+    /// Merge another accumulator into this one.
+    pub fn add(&mut self, other: &KernelTimings) {
+        self.gemm_s += other.gemm_s;
+        self.gemm_calls += other.gemm_calls;
+        self.update_s += other.update_s;
+        self.update_calls += other.update_calls;
+        self.eig_s += other.eig_s;
+        self.eig_calls += other.eig_calls;
+    }
+
+    /// Total kernel seconds across all categories.
+    pub fn total_s(&self) -> f64 {
+        self.gemm_s + self.update_s + self.eig_s
+    }
+}
+
 /// Table-2-style aggregate statistics over a set of speedups.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SpeedupStats {
@@ -212,6 +246,24 @@ mod tests {
         assert_eq!(ecdf_at(&c, 0.5), 0.0);
         assert_eq!(ecdf_at(&c, 1.0), 0.25);
         assert_eq!(ecdf_at(&c, 10.0), 0.75);
+    }
+
+    #[test]
+    fn kernel_timings_accumulate() {
+        let mut t = KernelTimings::default();
+        t.add(&KernelTimings {
+            gemm_s: 1.0,
+            gemm_calls: 2,
+            update_s: 0.5,
+            update_calls: 1,
+            eig_s: 0.25,
+            eig_calls: 1,
+        });
+        t.add(&KernelTimings { gemm_s: 1.0, gemm_calls: 1, ..Default::default() });
+        assert_eq!(t.gemm_calls, 3);
+        assert_eq!(t.update_calls, 1);
+        assert_eq!(t.eig_calls, 1);
+        assert!((t.total_s() - 2.75).abs() < 1e-12);
     }
 
     #[test]

@@ -393,6 +393,7 @@ fn enc_vcfg(c: &VirtualConfig) -> Json {
         ("stop_at_final_target", Json::Bool(c.stop_at_final_target)),
         ("restart_distributed", Json::Bool(c.restart_distributed)),
         ("real_eval_cap", enc_usize(c.real_eval_cap)),
+        ("linalg_threads", enc_usize(c.linalg_threads)),
         ("seed", enc_u64(c.seed)),
     ])
 }
@@ -408,6 +409,12 @@ fn dec_vcfg(j: &Json, key: &str) -> Result<VirtualConfig, PersistError> {
         stop_at_final_target: dec_bool(c, "stop_at_final_target")?,
         restart_distributed: dec_bool(c, "restart_distributed")?,
         real_eval_cap: dec_usize(c, "real_eval_cap")?,
+        // Absent in pre-threading snapshots; the knob is trajectory-neutral
+        // (parallel kernels are bit-identical to serial), so default serial.
+        linalg_threads: match c.get("linalg_threads") {
+            None => 1,
+            Some(_) => dec_usize(c, "linalg_threads")?,
+        },
         seed: dec_u64(c, "seed")?,
     })
 }

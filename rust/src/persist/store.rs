@@ -180,6 +180,7 @@ mod tests {
             stop_at_final_target: false,
             restart_distributed: false,
             real_eval_cap: 10_000,
+            linalg_threads: 1,
             seed: 7,
         };
         let mut eng = Engine::new(&inst, &cfg, Mode::Parallel, Algo::KDistributed);

@@ -19,7 +19,7 @@ mod real {
     use std::rc::Rc;
 
     use crate::cmaes::{CmaState, Compute};
-    use crate::linalg::Matrix;
+    use crate::linalg::{EigError, Matrix};
 
     use super::super::error::{rt_err, Result};
     use super::super::{
@@ -117,7 +117,7 @@ mod real {
             *c = literal_matrix(&out[0], self.n, self.n).expect("update_c output");
         }
 
-        fn refresh_eigen(&mut self, st: &mut CmaState) {
+        fn refresh_eigen(&mut self, st: &mut CmaState) -> std::result::Result<(), EigError> {
             st.c.symmetrize();
             let out = self
                 .rt
@@ -133,6 +133,7 @@ mod real {
             let values: Vec<f64> = order.iter().map(|&i| raw_values[i]).collect();
             let vectors = Matrix::from_fn(self.n, self.n, |r, c| raw_vectors[(r, order[c])]);
             st.apply_eigen(values, vectors);
+            Ok(())
         }
     }
 }
@@ -142,7 +143,7 @@ mod stub {
     use std::rc::Rc;
 
     use crate::cmaes::{CmaState, Compute};
-    use crate::linalg::Matrix;
+    use crate::linalg::{EigError, Matrix};
 
     use super::super::error::{rt_err, Result};
     use super::super::XlaRuntime;
@@ -181,7 +182,7 @@ mod stub {
             unreachable!("stub XlaCompute cannot be constructed")
         }
 
-        fn refresh_eigen(&mut self, _st: &mut CmaState) {
+        fn refresh_eigen(&mut self, _st: &mut CmaState) -> std::result::Result<(), EigError> {
             unreachable!("stub XlaCompute cannot be constructed")
         }
     }

@@ -263,7 +263,7 @@ mod tests {
         let vecs = Matrix::from_fn(n, n, |r, cc| vecs_raw[(r, order[cc])]);
         vals.sort_by(|a, b| a.total_cmp(b));
 
-        let native = crate::linalg::syev(&c);
+        let native = crate::linalg::syev(&c).unwrap();
         let scale = native.values.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
         for (a, b) in vals.iter().zip(&native.values) {
             assert!((a - b).abs() < 1e-9 * scale.max(1.0), "{a} vs {b}");

@@ -72,6 +72,10 @@ pub struct VirtualConfig {
     pub restart_distributed: bool,
     /// Real-compute guard: total evaluations across all descents.
     pub real_eval_cap: usize,
+    /// Worker threads for the linalg kernels (GEMM/SYRK/SYEV). 1 = serial.
+    /// Any value produces bit-identical trajectories (the parallel kernels
+    /// partition disjoint output rows), so this is a pure perf knob.
+    pub linalg_threads: usize,
     pub seed: u64,
 }
 
@@ -94,8 +98,15 @@ impl VirtualConfig {
             stop_at_final_target: true,
             restart_distributed: false,
             real_eval_cap: 50_000_000,
+            linalg_threads: 1,
             seed,
         }
+    }
+
+    /// The native compute tier this config asks for: Level-3 serial at
+    /// `linalg_threads <= 1`, the multithreaded tier otherwise.
+    pub fn compute(&self) -> crate::cmaes::NativeCompute {
+        crate::cmaes::NativeCompute::level3_mt(self.linalg_threads)
     }
 
     /// Final (hardest) target of the ladder.
@@ -351,7 +362,7 @@ impl<'a> Engine<'a> {
             self.cfg.dim,
             k,
             seed,
-            Box::new(crate::cmaes::NativeCompute::level3()),
+            Box::new(self.cfg.compute()),
             ipop_for_descent.max_evals,
         );
         let slot = EngineSlot {
@@ -454,8 +465,7 @@ impl<'a> Engine<'a> {
         let mut backups = Vec::with_capacity(snap.slots.len());
         let mut heap = BinaryHeap::new();
         for (id, sl) in snap.slots.iter().enumerate() {
-            let descent =
-                Descent::restore(sl.descent.clone(), Box::new(crate::cmaes::NativeCompute::level3()));
+            let descent = Descent::restore(sl.descent.clone(), Box::new(snap.cfg.compute()));
             backups.push(if faults_on && !sl.done {
                 Some(SlotBackup { state: sl.descent.clone(), iters: sl.iters })
             } else {
@@ -634,10 +644,7 @@ impl<'a> Engine<'a> {
                     {
                         let s = &mut self.slots[slot];
                         s.comm.cores = cores_left;
-                        s.descent = Descent::restore(
-                            backup.state,
-                            Box::new(crate::cmaes::NativeCompute::level3()),
-                        );
+                        s.descent = Descent::restore(backup.state, Box::new(self.cfg.compute()));
                         s.iters = backup.iters;
                         s.t = fault_t + recovery_s;
                     }
@@ -826,6 +833,7 @@ mod tests {
             stop_at_final_target: true,
             restart_distributed: false,
             real_eval_cap: 1_000_000,
+            linalg_threads: 1,
             seed,
         }
     }

@@ -128,6 +128,7 @@ mod tests {
             stop_at_final_target: false,
             restart_distributed: restart,
             real_eval_cap: 2_000_000,
+            linalg_threads: 1,
             seed: 5,
         }
     }

@@ -184,6 +184,7 @@ mod tests {
             stop_at_final_target: false, // let the whole tree run
             restart_distributed: false,
             real_eval_cap: 3_000_000,
+            linalg_threads: 1,
             seed: 21,
         }
     }

@@ -117,6 +117,7 @@ mod tests {
             stop_at_final_target: true,
             restart_distributed: false,
             real_eval_cap: 2_000_000,
+            linalg_threads: 1,
             seed,
         }
     }

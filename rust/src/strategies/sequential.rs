@@ -103,6 +103,7 @@ mod tests {
             stop_at_final_target: true,
             restart_distributed: false,
             real_eval_cap: 500_000,
+            linalg_threads: 1,
             seed: 13,
         };
         let tr = run_sequential(&inst, &cfg);
@@ -131,6 +132,7 @@ mod tests {
             stop_at_final_target: true,
             restart_distributed: false,
             real_eval_cap: 2_000_000,
+            linalg_threads: 1,
             seed: 2,
         };
         let tr = run_sequential(&inst, &cfg);

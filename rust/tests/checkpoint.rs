@@ -39,6 +39,7 @@ fn det_cfg(seed: u64) -> VirtualConfig {
         stop_at_final_target: true,
         restart_distributed: false,
         real_eval_cap: 500_000,
+        linalg_threads: 1,
         seed,
     }
 }
@@ -232,6 +233,32 @@ fn killed_and_resumed_runs_match_uninterrupted_bit_for_bit() {
                 &format!("{} resumed from snapshot {idx}", algo.name()),
             );
         }
+    }
+}
+
+/// `linalg_threads` is a pure perf knob: a run at 4 linalg threads
+/// reproduces the serial trajectory bit-for-bit (every parallel kernel
+/// partitions disjoint output rows), and killing/resuming that run
+/// keeps the checkpoint bit-identity guarantee intact.
+#[test]
+fn linalg_threads_preserve_trajectory_and_resume_bit_identity() {
+    let inst = Instance::new(8, 4, 2);
+    let serial_cfg = det_cfg(29);
+    let mut mt_cfg = det_cfg(29);
+    mt_cfg.linalg_threads = 4;
+
+    let serial = Algo::KDistributed.run(&inst, &serial_cfg);
+    let (mt_base, snaps) = run_with_snapshots(Algo::KDistributed, &inst, &mt_cfg);
+    assert_trace_bits_eq(&serial, &mt_base, "4 linalg threads vs serial");
+
+    // Resumes inherit the snapshot's linalg_threads = 4 compute tier.
+    for idx in [0, snaps.len() / 2, snaps.len() - 1] {
+        let resumed = Algo::KDistributed.resume_exec(&inst, &snaps[idx], Exec::default());
+        assert_trace_bits_eq(
+            &mt_base,
+            &resumed,
+            &format!("linalg_threads=4 resumed from snapshot {idx}"),
+        );
     }
 }
 

@@ -145,6 +145,7 @@ fn virtual_run_is_reproducible() {
         stop_at_final_target: true,
         restart_distributed: false,
         real_eval_cap: 200_000,
+        linalg_threads: 1,
         seed: 17,
     };
     let a = Algo::KReplicated.run(&inst, &cfg);

@@ -6,7 +6,9 @@
 use ipopcma::bbob::{transforms, Instance};
 use ipopcma::cluster::Communicator;
 use ipopcma::cmaes::{CmaParams, Compute, Descent, FnEvaluator, NativeCompute, StopConfig};
-use ipopcma::linalg::{gemm, jacobi_eig, syev, EigKind, GemmKind, Matrix};
+use ipopcma::linalg::{
+    gemm, jacobi_eig, jacobi_eig_mt, syev, syev_mt, syrk, syrk_mt, EigKind, GemmKind, Matrix,
+};
 use ipopcma::metrics::{ecdf, ert, HitRecorder};
 use ipopcma::rng::{derive_stream, NormalSource, Xoshiro256pp};
 
@@ -68,7 +70,7 @@ fn eig_preserves_trace_and_norm() {
         a.symmetrize();
         let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
         let norm2: f64 = a.as_slice().iter().map(|v| v * v).sum();
-        for vals in [syev(&a).values, jacobi_eig(&a).values] {
+        for vals in [syev(&a).unwrap().values, jacobi_eig(&a).values] {
             let t: f64 = vals.iter().sum();
             let nn: f64 = vals.iter().map(|v| v * v).sum();
             assert!((t - trace).abs() < 1e-9 * (1.0 + trace.abs()));
@@ -287,6 +289,88 @@ fn derived_streams_distinct() {
     }
 }
 
+/// Helper for the bitwise sweeps below: true iff two matrices are equal
+/// bit for bit (stricter than `==`, which NaN would break).
+fn bits_eq(a: &Matrix, b: &Matrix) -> bool {
+    a.as_slice().len() == b.as_slice().len()
+        && a.as_slice().iter().zip(b.as_slice()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// The `linalg_threads` contract, part 1: the multithreaded GEMM tier is
+/// bit-identical to serial Level-3 for every pool width, including odd
+/// shapes (d=1, d=3, non-square panels around blocking boundaries).
+#[test]
+fn parallel_gemm_bitwise_equals_serial() {
+    let mut rng = Xoshiro256pp::new(21);
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (3, 3, 3),
+        (1, 7, 5),
+        (5, 1, 9),
+        (9, 5, 1),
+        (17, 33, 9),
+        (64, 64, 64),
+        (129, 65, 33),
+    ];
+    for &(m, k, n) in &shapes {
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        let c0 = rand_matrix(&mut rng, m, n);
+        let mut serial = c0.clone();
+        gemm(GemmKind::Level3, 0.7, &a, &b, 0.3, &mut serial);
+        for threads in [1usize, 2, 4, 8] {
+            let mut c = c0.clone();
+            gemm(GemmKind::Level3Mt(threads), 0.7, &a, &b, 0.3, &mut c);
+            assert!(bits_eq(&c, &serial), "{m}x{k}x{n} t={threads}");
+        }
+    }
+}
+
+/// Part 2: the rank-μ SYRK kernel, same sweep (d=1 and μ=1 included).
+#[test]
+fn parallel_syrk_bitwise_equals_serial() {
+    let mut rng = Xoshiro256pp::new(22);
+    for &(d, mu) in &[(1usize, 1usize), (3, 2), (5, 1), (17, 9), (64, 31), (65, 40)] {
+        let y = rand_matrix(&mut rng, d, mu);
+        let w: Vec<f64> = (0..mu).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let c0 = rand_matrix(&mut rng, d, d);
+        let mut serial = c0.clone();
+        syrk(0.4, &y, &w, 0.6, &mut serial);
+        for threads in [1usize, 2, 4, 8] {
+            let mut c = c0.clone();
+            syrk_mt(threads, 0.4, &y, &w, 0.6, &mut c);
+            assert!(bits_eq(&c, &serial), "d={d} mu={mu} t={threads}");
+        }
+    }
+}
+
+/// Part 3: both eigensolvers — values and vectors bit-identical to their
+/// serial counterparts for every pool width.
+#[test]
+fn parallel_eig_bitwise_equals_serial() {
+    let mut rng = Xoshiro256pp::new(23);
+    for &d in &[1usize, 3, 17, 40] {
+        let mut a = rand_matrix(&mut rng, d, d);
+        a.symmetrize();
+        let s_syev = syev(&a).unwrap();
+        let s_jac = jacobi_eig(&a);
+        for threads in [1usize, 2, 4, 8] {
+            let m_syev = syev_mt(threads, &a).unwrap();
+            assert!(
+                m_syev.values.iter().zip(&s_syev.values).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "syev values d={d} t={threads}"
+            );
+            assert!(bits_eq(&m_syev.vectors, &s_syev.vectors), "syev vectors d={d} t={threads}");
+            let m_jac = jacobi_eig_mt(threads, &a);
+            assert!(
+                m_jac.values.iter().zip(&s_jac.values).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "jacobi values d={d} t={threads}"
+            );
+            assert!(bits_eq(&m_jac.vectors, &s_jac.vectors), "jacobi vectors d={d} t={threads}");
+        }
+    }
+}
+
 /// Sampling through any tier preserves N(0, C) marginals: the empirical
 /// variance along each principal axis matches its eigenvalue.
 #[test]
@@ -298,7 +382,7 @@ fn sampling_matches_spectrum() {
     for i in 0..n {
         st.c[(i, i)] = (i + 1) as f64;
     }
-    st.refresh_eigen(EigKind::Syev);
+    st.refresh_eigen(EigKind::Syev).unwrap();
     let samples = 30_000;
     let z = Matrix::from_fn(n, samples, |_, _| g.sample());
     let mut y = Matrix::zeros(n, samples);
