@@ -12,7 +12,7 @@
 
 use ipopcma::cli::Args;
 use ipopcma::cmaes::{CmaState, Compute, NativeCompute};
-use ipopcma::harness::linalg_bench::BenchReport;
+use ipopcma::harness::linalg_bench::{BenchMeta, BenchReport};
 use ipopcma::harness::time_median;
 use ipopcma::linalg::{gemm, syev_mt, syrk_mt, EigKind, GemmKind, Matrix};
 use ipopcma::report::{ascii_table, fmt_val, Csv};
@@ -76,6 +76,20 @@ fn sweep(args: &Args) -> Result<(), String> {
     }
 
     let mut report = BenchReport::new();
+    // Stamp provenance so bench-diff can tell baselines from different
+    // machine classes apart.
+    report.meta = Some(BenchMeta {
+        host: std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown".to_string()),
+        os: std::env::consts::OS.to_string(),
+        arch: std::env::consts::ARCH.to_string(),
+        cpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0),
+        threads: threads.clone(),
+        reps,
+        source: format!(
+            "cargo bench --bench bench_linalg -- --max-dim {max_dim} --threads {} --reps {reps}",
+            threads.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+        ),
+    });
     for &d in &dims {
         let mut g = NormalSource::new(42);
 

@@ -34,6 +34,7 @@
 //! | [`SolverBuilder::target`] / [`SolverBuilder::targets`] | the precision ladder ε ∈ {10², …, 10⁻⁸} of §4.3.1 |
 //! | [`SolverBuilder::restart_distributed`] | §5's recommendation to restart stopped K-Distributed descents |
 //! | [`SolverBuilder::run_observed`] / [`Observer`] | per-iteration telemetry (the serving-layer hook; no direct paper analogue) |
+//! | [`SolverBuilder::trace_path`] | the `run_trace/v1` JSONL sink: per-generation rows feeding the Fig. 5 kernel breakdown and Table 2 aggregates (see [`crate::trace`]) |
 //! | [`SolverBuilder::checkpoint_every`] / [`SolverBuilder::checkpoint_dir`] | durable snapshots of the full IPOP restart state (see below) |
 //! | [`SolverBuilder::resume_from`] | continue a killed run bit-identically from its last snapshot |
 //! | [`SolverBuilder::fault_plan`] | virtual rank failures / stragglers answered with the paper's recovery cost (§4.1) |
@@ -85,7 +86,7 @@ pub mod solver;
 
 pub use crate::core::{
     ClosureProblem, Event, FnObserver, LeastSquares, NoisyRastrigin, Observer, Problem,
-    Recorder,
+    Recorder, Tee,
 };
 pub use backend::Backend;
-pub use solver::{RunReport, Solver, SolverBuilder};
+pub use solver::{RunMetrics, RunReport, Solver, SolverBuilder};

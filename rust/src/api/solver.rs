@@ -21,14 +21,15 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cluster::{CostModel, FaultPlan};
-use crate::cmaes::{BatchEvaluator, StopConfig};
-use crate::core::{Observer, Problem};
+use crate::cmaes::{BatchEvaluator, StopConfig, Timings};
+use crate::core::{Observer, Problem, Tee};
 use crate::evaluator::ThreadPoolEvaluator;
 use crate::ipop::IpopConfig;
-use crate::metrics::paper_targets;
+use crate::metrics::{paper_targets, KernelTimings};
 use crate::persist::SnapshotStore;
 use crate::runtime::json::Json;
 use crate::strategies::{Algo, Checkpoint, Exec, RunTrace, SnapshotSink, VirtualConfig};
+use crate::trace::TraceWriter;
 
 use super::backend::Backend;
 
@@ -65,6 +66,7 @@ impl Solver {
             checkpoint_every: 25,
             resume_from: None,
             faults: None,
+            trace_path: None,
         }
     }
 }
@@ -92,6 +94,7 @@ pub struct SolverBuilder<P> {
     checkpoint_every: usize,
     resume_from: Option<PathBuf>,
     faults: Option<FaultPlan>,
+    trace_path: Option<PathBuf>,
 }
 
 impl<P: Problem + 'static> SolverBuilder<P> {
@@ -232,6 +235,16 @@ impl<P: Problem + 'static> SolverBuilder<P> {
         self
     }
 
+    /// Stream the run's full telemetry into a `run_trace/v1` JSONL file
+    /// at `path` (one row per generation plus restart/checkpoint/fault
+    /// annotations — see the [`crate::trace`] module docs). Composes
+    /// with [`SolverBuilder::run_observed`]: both sinks receive every
+    /// event. CLI: `optimize --trace <path>`.
+    pub fn trace_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace_path = Some(path.into());
+        self
+    }
+
     /// Expert escape hatch: run with this exact [`VirtualConfig`],
     /// bypassing every other knob — used by the benchmark harness to
     /// keep its scaled paper configurations byte-identical.
@@ -353,6 +366,26 @@ impl<P: Problem + 'static> SolverBuilder<P> {
             _ => None,
         };
 
+        // The trace sink is just another observer; tee it with the
+        // user's when both are present.
+        let mut tracer = match &self.trace_path {
+            Some(path) => Some(
+                TraceWriter::create(path)
+                    .map_err(|e| format!("trace file {}: {e}", path.display()))?,
+            ),
+            None => None,
+        };
+        let mut tee;
+        let observer: Option<&mut dyn Observer> = match (observer, tracer.as_mut()) {
+            (Some(user), Some(tw)) => {
+                tee = Tee(user, tw);
+                Some(&mut tee)
+            }
+            (Some(user), None) => Some(user),
+            (None, Some(tw)) => Some(tw as &mut dyn Observer),
+            (None, None) => None,
+        };
+
         let exec = Exec {
             eval: pool.as_mut().map(|p| p as &mut dyn BatchEvaluator),
             observer,
@@ -374,6 +407,9 @@ impl<P: Problem + 'static> SolverBuilder<P> {
             }
             (None, None) => unreachable!(),
         };
+        if let Some(tw) = tracer {
+            tw.finish().map_err(|e| format!("trace write: {e}"))?;
+        }
         Ok(RunReport {
             problem: self.problem.name().to_string(),
             dim: cfg.dim,
@@ -381,9 +417,41 @@ impl<P: Problem + 'static> SolverBuilder<P> {
             backend: backend_label,
             lambda_start: cfg.ipop.lambda_start,
             targets: cfg.targets.clone(),
+            metrics: Some(RunMetrics::from_trace(&trace)),
             trace,
             wall_s: t0.elapsed().as_secs_f64(),
         })
+    }
+}
+
+/// Aggregated timing metrics of one run, derived from the engine's
+/// per-descent traces — the report-level counterpart of the
+/// `run_trace/v1` per-generation rows.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Phase wall seconds summed over every descent.
+    pub phase: Timings,
+    /// Cumulative kernel accounting summed over every descent that
+    /// recorded it (`None` when no compute tier did).
+    pub kernel: Option<KernelTimings>,
+    /// Generations executed by each descent, in slot order.
+    pub gens_per_restart: Vec<usize>,
+}
+
+impl RunMetrics {
+    /// Fold a strategy run's per-descent traces into report metrics.
+    pub fn from_trace(trace: &RunTrace) -> RunMetrics {
+        let mut phase = Timings::default();
+        let mut kernel: Option<KernelTimings> = None;
+        let mut gens = Vec::with_capacity(trace.descents.len());
+        for d in &trace.descents {
+            phase.add(&d.timings);
+            if let Some(kt) = d.kernel {
+                kernel.get_or_insert_with(KernelTimings::default).add(&kt);
+            }
+            gens.push(d.iters);
+        }
+        RunMetrics { phase, kernel, gens_per_restart: gens }
     }
 }
 
@@ -402,6 +470,9 @@ pub struct RunReport {
     pub lambda_start: usize,
     /// The target precision ladder the hits refer to.
     pub targets: Vec<f64>,
+    /// Aggregated timing metrics (phase totals, kernel totals,
+    /// generations per restart); `None` only on hand-built reports.
+    pub metrics: Option<RunMetrics>,
     /// Full per-descent trace from the strategy engine.
     pub trace: RunTrace,
     /// Real wall-clock seconds of the whole run.
@@ -487,6 +558,30 @@ impl RunReport {
             })
             .collect();
         obj.insert("descents".to_string(), Json::Arr(descents));
+        if let Some(m) = &self.metrics {
+            let mut mo = BTreeMap::new();
+            mo.insert("sample_s".to_string(), num(m.phase.sample_s));
+            mo.insert("eval_s".to_string(), num(m.phase.eval_s));
+            mo.insert("update_s".to_string(), num(m.phase.update_s));
+            mo.insert("eig_s".to_string(), num(m.phase.eig_s));
+            mo.insert("total_s".to_string(), num(m.phase.total_s()));
+            if let Some(kt) = m.kernel {
+                let mut ko = BTreeMap::new();
+                ko.insert("gemm_s".to_string(), num(kt.gemm_s));
+                ko.insert("gemm_calls".to_string(), num(kt.gemm_calls as f64));
+                ko.insert("update_s".to_string(), num(kt.update_s));
+                ko.insert("update_calls".to_string(), num(kt.update_calls as f64));
+                ko.insert("eig_s".to_string(), num(kt.eig_s));
+                ko.insert("eig_calls".to_string(), num(kt.eig_calls as f64));
+                ko.insert("total_s".to_string(), num(kt.total_s()));
+                mo.insert("kernel".to_string(), Json::Obj(ko));
+            }
+            mo.insert(
+                "generations_per_restart".to_string(),
+                Json::Arr(m.gens_per_restart.iter().map(|&g| num(g as f64)).collect()),
+            );
+            obj.insert("metrics".to_string(), Json::Obj(mo));
+        }
         Json::Obj(obj)
     }
 

@@ -67,6 +67,17 @@ impl<F: FnMut(&[f64]) -> f64> BatchEvaluator for FnEvaluator<F> {
     }
 }
 
+/// Fitness ranking order: ascending by value with every non-finite value
+/// (NaN/±∞) after every finite one. A NaN objective therefore can never
+/// outrank a real fitness and be recombined into the mean.
+fn rank_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    match (a.is_finite(), b.is_finite()) {
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        _ => a.total_cmp(&b),
+    }
+}
+
 /// Accumulated wall time per phase (seconds).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Timings {
@@ -289,15 +300,30 @@ impl Descent {
         t.eval_s += t0.elapsed().as_secs_f64();
         self.evals += lambda;
 
-        // Rank by fitness (ascending = better).
+        // Rank by fitness (ascending = better, non-finite last).
         let t0 = Instant::now();
-        self.order.sort_by(|&a, &b| {
-            self.fitness[a]
-                .partial_cmp(&self.fitness[b])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        self.order
+            .sort_by(|&a, &b| rank_cmp(self.fitness[a], self.fitness[b]));
         let gen_best_idx = self.order[0];
         let gen_best = self.fitness[gen_best_idx];
+        if !gen_best.is_finite() {
+            // Non-finite values rank last, so a non-finite gen_best means
+            // the whole generation carried no ranking information.
+            // Recombining it would poison mean/paths; stop restartably
+            // instead (IPOP answers with a fresh descent at doubled λ)
+            // and leave best_f/best_x untouched.
+            t.update_s += t0.elapsed().as_secs_f64();
+            self.stopped = Some(StopReason::NonFiniteFitness);
+            self.timings.add(&t);
+            return IterationReport {
+                gen: self.state.gen,
+                evals: self.evals,
+                gen_best,
+                best_so_far: self.best_f,
+                timings: t,
+                stop: self.stopped,
+            };
+        }
         if gen_best < self.best_f {
             self.best_f = gen_best;
             for i in 0..n {
@@ -368,9 +394,15 @@ impl Descent {
 
         // Histories + stop check.
         let mut sorted_fit = self.fitness.clone();
-        sorted_fit.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        sorted_fit.sort_by(|a, b| rank_cmp(*a, *b));
+        // A partially non-finite generation (gen_best is finite, median is
+        // not) must not leak NaN into the stagnation history windows.
         let gen_median = sorted_fit[lambda / 2];
+        let gen_median = if gen_median.is_finite() { gen_median } else { f64::INFINITY };
         self.stop_state.push_generation(gen_best, gen_median);
+        // Only the finite prefix feeds the stop criteria (non-finite values
+        // sort last; at least gen_best is finite here).
+        let finite_fit = sorted_fit.iter().take_while(|v| v.is_finite()).count();
 
         let diag_c: Vec<f64> = (0..n).map(|i| self.state.c[(i, i)]).collect();
         let axis_index = self.state.gen % n;
@@ -382,7 +414,7 @@ impl Descent {
                 gen: self.state.gen,
                 evals: self.evals,
                 best_f: self.best_f,
-                gen_values_sorted: &sorted_fit,
+                gen_values_sorted: &sorted_fit[..finite_fit],
                 mean: &self.state.mean,
                 sigma: self.state.sigma,
                 sigma0: self.state.sigma0,
@@ -395,8 +427,10 @@ impl Descent {
             },
         );
         // Guard against numerically exploded state: treat as divergence.
+        // (gen_best is always finite here — a fully non-finite generation
+        // returned early with StopReason::NonFiniteFitness above.)
         let stop = stop.or_else(|| {
-            if !self.state.sigma.is_finite() || !gen_best.is_finite() {
+            if !self.state.sigma.is_finite() {
                 Some(StopReason::TolUpSigma)
             } else {
                 None
@@ -606,6 +640,44 @@ mod tests {
         assert!(rep.stop.unwrap().is_restartable());
         assert_eq!(d.stop_reason(), Some(StopReason::EigenFailure));
         assert_eq!(d.evals, 0, "no evaluations after a failed eigensolve");
+    }
+
+    #[test]
+    fn nan_fitness_stops_restartably_without_polluting_best() {
+        let mut d = make_descent(4, 8, 17);
+        let rep = d.run_iteration(&mut FnEvaluator(|_: &[f64]| f64::NAN));
+        assert_eq!(rep.stop, Some(StopReason::NonFiniteFitness));
+        assert!(rep.stop.unwrap().is_restartable());
+        assert_eq!(d.stop_reason(), Some(StopReason::NonFiniteFitness));
+        assert!(!rep.gen_best.is_finite());
+        // best_f/best_x stay pristine: no NaN point was promoted.
+        assert_eq!(d.best_f, f64::INFINITY);
+        assert!(d.best_x.iter().all(|&v| v == 0.0));
+        // The generation was evaluated before ranking found it worthless.
+        assert_eq!(d.evals, 8);
+        // Distribution state was not advanced with garbage.
+        assert_eq!(d.state.gen, 0);
+        assert!(d.state.mean.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn non_finite_fitness_ranks_last() {
+        // One NaN among finite values: ranking ignores it, descent goes on.
+        let mut d = make_descent(4, 8, 23);
+        let mut first = true;
+        let mut e = FnEvaluator(|x: &[f64]| {
+            if first {
+                first = false;
+                f64::NAN
+            } else {
+                x.iter().map(|v| v * v).sum()
+            }
+        });
+        let rep = d.run_iteration(&mut e);
+        assert_eq!(rep.stop, None);
+        assert!(rep.gen_best.is_finite());
+        assert!(d.best_f.is_finite());
+        assert!(d.best_x.iter().all(|v| v.is_finite()));
     }
 
     #[test]

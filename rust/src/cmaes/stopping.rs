@@ -28,6 +28,10 @@ pub enum StopReason {
     /// The eigensolver failed to converge (e.g. non-finite values leaked
     /// into `C`) — recoverable by restarting the descent.
     EigenFailure,
+    /// Every fitness value of a generation was non-finite (NaN/∞
+    /// objective), so ranking carries no information — recoverable by
+    /// restarting the descent.
+    NonFiniteFitness,
     /// Iteration budget of the descent exhausted.
     MaxIter,
     /// Evaluation budget exhausted.
@@ -53,6 +57,7 @@ impl StopReason {
             StopReason::NoEffectCoord => "noeffectcoord",
             StopReason::Stagnation => "stagnation",
             StopReason::EigenFailure => "eigenfailure",
+            StopReason::NonFiniteFitness => "nonfinitefitness",
             StopReason::MaxIter => "maxiter",
             StopReason::MaxEvals => "maxevals",
         }
@@ -71,6 +76,7 @@ impl StopReason {
             StopReason::NoEffectCoord,
             StopReason::Stagnation,
             StopReason::EigenFailure,
+            StopReason::NonFiniteFitness,
             StopReason::MaxIter,
             StopReason::MaxEvals,
         ];
@@ -435,6 +441,7 @@ mod tests {
             StopReason::NoEffectCoord,
             StopReason::Stagnation,
             StopReason::EigenFailure,
+            StopReason::NonFiniteFitness,
             StopReason::MaxIter,
             StopReason::MaxEvals,
         ] {
@@ -447,6 +454,7 @@ mod tests {
     fn restartable_classification() {
         assert!(StopReason::TolFun.is_restartable());
         assert!(StopReason::EigenFailure.is_restartable());
+        assert!(StopReason::NonFiniteFitness.is_restartable());
         assert!(!StopReason::MaxEvals.is_restartable());
         assert!(!StopReason::TargetReached.is_restartable());
     }

@@ -10,5 +10,5 @@
 pub mod observer;
 pub mod problem;
 
-pub use observer::{Event, FnObserver, Observer, Recorder};
+pub use observer::{Event, FnObserver, Observer, Recorder, Tee};
 pub use problem::{ClosureProblem, LeastSquares, NoisyRastrigin, Problem};

@@ -9,12 +9,16 @@
 //!   and `DescentEnd` follows all of them;
 //! * `TargetHit` indices are emitted in ascending ladder order per slot;
 //! * per slot, `Iteration` virtual times are non-decreasing;
+//! * every `Iteration` is immediately followed by its `Generation` row
+//!   (same slot, same virtual time) carrying the full per-generation
+//!   telemetry for the `run_trace/v1` sink;
 //! * on a resumed run, `Restored` follows `RunStart` and precedes every
 //!   other event; `Checkpoint` events carry strictly increasing `seq`;
 //! * every `Fault` is immediately followed by its `Recovered` (or by the
 //!   `DescentEnd` of the slot when no cores survive).
 
-use crate::cmaes::StopReason;
+use crate::cmaes::{StopReason, Timings};
+use crate::metrics::KernelTimings;
 
 /// One telemetry event. Times are virtual-cluster seconds (equal to an
 /// estimate of real seconds for the wall-clock backends).
@@ -26,6 +30,26 @@ pub enum Event {
     DescentStart { slot: usize, k: usize, replica: usize, lambda: usize, start_s: f64 },
     /// One CMA-ES iteration of a descent completed.
     Iteration { slot: usize, k: usize, iter: usize, evals: usize, best_delta: f64, t_s: f64 },
+    /// Full per-generation telemetry, emitted right after the matching
+    /// `Iteration` event — one row of the `run_trace/v1` schema.
+    /// `gen_best`/`best_so_far` are **raw objective values** (not deltas
+    /// to the optimum, unlike `Iteration::best_delta`); `timings` is this
+    /// generation's phase breakdown and `kernel` the descent's cumulative
+    /// per-kernel accounting when the compute tier records it.
+    Generation {
+        slot: usize,
+        k: usize,
+        replica: usize,
+        gen: usize,
+        lambda: usize,
+        sigma: f64,
+        gen_best: f64,
+        best_so_far: f64,
+        evals: usize,
+        t_s: f64,
+        timings: Timings,
+        kernel: Option<KernelTimings>,
+    },
     /// A descent hit target `targets[index]` for the first time.
     TargetHit { slot: usize, index: usize, target: f64, t_s: f64 },
     /// A descent finished (`stop: None` = cut by the budget/cutoff).
@@ -61,6 +85,18 @@ pub struct FnObserver<F: FnMut(&Event)>(pub F);
 impl<F: FnMut(&Event)> Observer for FnObserver<F> {
     fn on_event(&mut self, event: &Event) {
         (self.0)(event)
+    }
+}
+
+/// Fan one event stream out to two observers, first `0` then `1` — lets
+/// the facade attach a trace sink alongside a user observer without
+/// either knowing about the other.
+pub struct Tee<'a>(pub &'a mut dyn Observer, pub &'a mut dyn Observer);
+
+impl Observer for Tee<'_> {
+    fn on_event(&mut self, event: &Event) {
+        self.0.on_event(event);
+        self.1.on_event(event);
     }
 }
 

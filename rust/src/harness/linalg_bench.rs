@@ -32,15 +32,56 @@ pub struct BenchEntry {
     pub speedup: f64,
 }
 
+/// Provenance of a bench artifact: which host produced it and how. Makes
+/// baseline refreshes auditable — `bench-diff` prints both sides' meta so
+/// a regression against a different machine class is recognizable.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BenchMeta {
+    /// Host name (best effort: `HOSTNAME` env var or `"unknown"`).
+    pub host: String,
+    /// `std::env::consts::OS` of the producer.
+    pub os: String,
+    /// `std::env::consts::ARCH` of the producer.
+    pub arch: String,
+    /// `std::thread::available_parallelism()` of the producer (0 = unknown).
+    pub cpus: usize,
+    /// Thread counts the sweep ran with.
+    pub threads: Vec<usize>,
+    /// Repetitions per (kernel, d, threads) configuration.
+    pub reps: usize,
+    /// Free-form provenance: the producing command, or a note such as
+    /// `"hand-set floors"` for a synthetic baseline.
+    pub source: String,
+}
+
+impl BenchMeta {
+    /// One-line rendering for `bench-diff` output.
+    pub fn describe(&self) -> String {
+        let threads: Vec<String> = self.threads.iter().map(|t| t.to_string()).collect();
+        format!(
+            "host={} os={} arch={} cpus={} threads=[{}] reps={} source={:?}",
+            if self.host.is_empty() { "?" } else { &self.host },
+            if self.os.is_empty() { "?" } else { &self.os },
+            if self.arch.is_empty() { "?" } else { &self.arch },
+            self.cpus,
+            threads.join(","),
+            self.reps,
+            self.source,
+        )
+    }
+}
+
 /// A full bench report: the in-memory form of `BENCH_linalg.json`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct BenchReport {
     pub entries: Vec<BenchEntry>,
+    /// Producer metadata; `None` on artifacts predating the field.
+    pub meta: Option<BenchMeta>,
 }
 
 impl BenchReport {
     pub fn new() -> BenchReport {
-        BenchReport { entries: Vec::new() }
+        BenchReport { entries: Vec::new(), meta: None }
     }
 
     /// Append a measurement. The speedup is computed against the already
@@ -90,6 +131,20 @@ impl BenchReport {
         let mut top = BTreeMap::new();
         top.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
         top.insert("entries".to_string(), Json::Arr(entries));
+        if let Some(m) = &self.meta {
+            let mut mo = BTreeMap::new();
+            mo.insert("host".to_string(), Json::Str(m.host.clone()));
+            mo.insert("os".to_string(), Json::Str(m.os.clone()));
+            mo.insert("arch".to_string(), Json::Str(m.arch.clone()));
+            mo.insert("cpus".to_string(), Json::Num(m.cpus as f64));
+            mo.insert(
+                "threads".to_string(),
+                Json::Arr(m.threads.iter().map(|&t| Json::Num(t as f64)).collect()),
+            );
+            mo.insert("reps".to_string(), Json::Num(m.reps as f64));
+            mo.insert("source".to_string(), Json::Str(m.source.clone()));
+            top.insert("meta".to_string(), Json::Obj(mo));
+        }
         Json::Obj(top)
     }
 
@@ -125,7 +180,30 @@ impl BenchReport {
                 speedup: num(e, "speedup")?,
             });
         }
-        Ok(BenchReport { entries })
+        // `meta` is optional for backward compatibility with artifacts
+        // written before the field existed.
+        let meta = match j.get("meta") {
+            None => None,
+            Some(m) => {
+                let s = |key: &str| {
+                    m.get(key).and_then(Json::as_str).unwrap_or_default().to_string()
+                };
+                Some(BenchMeta {
+                    host: s("host"),
+                    os: s("os"),
+                    arch: s("arch"),
+                    cpus: m.get("cpus").and_then(Json::as_usize).unwrap_or(0),
+                    threads: m
+                        .get("threads")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                    reps: m.get("reps").and_then(Json::as_usize).unwrap_or(0),
+                    source: s("source"),
+                })
+            }
+        };
+        Ok(BenchReport { entries, meta })
     }
 
     pub fn write_file(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
@@ -237,6 +315,27 @@ mod tests {
         let r = sample_report();
         let back = BenchReport::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn meta_round_trips_and_stays_optional() {
+        let mut r = sample_report();
+        r.meta = Some(BenchMeta {
+            host: "ci-runner".into(),
+            os: "linux".into(),
+            arch: "x86_64".into(),
+            cpus: 4,
+            threads: vec![1, 2, 4],
+            reps: 3,
+            source: "cargo bench --bench bench_linalg".into(),
+        });
+        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert!(back.meta.as_ref().unwrap().describe().contains("ci-runner"));
+
+        // Pre-meta artifacts still parse.
+        let legacy = Json::parse(r#"{"schema": "bench_linalg/v1", "entries": []}"#).unwrap();
+        assert_eq!(BenchReport::from_json(&legacy).unwrap().meta, None);
     }
 
     #[test]

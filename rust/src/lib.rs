@@ -81,6 +81,25 @@
 //! guarantee survives it. Kernel wall times are recorded per descent
 //! ([`metrics::KernelTimings`], via `Descent::kernel_timings`).
 //!
+//! ## Run tracing (`run_trace/v1`)
+//!
+//! `.trace_path(path)` on the builder (CLI: `optimize --trace path`)
+//! streams the full telemetry of a run into a schema-versioned JSONL
+//! file: one `gen` row per CMA-ES generation (restart index, λ, σ,
+//! gen_best, best_so_far, evals, the four phase seconds, cumulative
+//! kernel counters) plus `descent_start`/`descent_end` restart
+//! annotations, `target_hit`, `checkpoint`/`restored`, and
+//! `fault`/`recovered` rows. The first row is `run_start` and carries
+//! the schema stamp `"run_trace/v1"`. Summing a restart's per-gen phase
+//! seconds reproduces `Descent::timings`; the last `kernel_*` values
+//! equal `Descent::kernel_timings`. All non-timing fields are
+//! deterministic in (problem, config, seed) — bit-identical across
+//! `linalg_threads`. `ipopcma trace-summary path` aggregates a file
+//! into per-restart Fig.-5-style kernel tables and Table-2 statistics;
+//! the full field list is in the [`trace`] module docs. [`RunReport`]
+//! additionally carries a `metrics` block (phase totals, kernel totals,
+//! generations per restart) in its JSON form.
+//!
 //! ## Layers
 //!
 //! * **L3 (this crate)** — the coordinator: CMA-ES / IPOP-CMA-ES
@@ -116,5 +135,6 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod strategies;
+pub mod trace;
 
 pub use api::{Backend, ClosureProblem, Observer, Problem, RunReport, Solver};

@@ -7,6 +7,7 @@
 //!   compare   --fid F --dim N     the three strategies on the virtual cluster
 //!   suite     --dim N             quick strategy comparison over the suite
 //!   bench-diff --baseline A --current B   diff two BENCH_linalg.json files
+//!   trace-summary PATH            aggregate a run_trace/v1 JSONL file
 
 use std::sync::Arc;
 
@@ -32,16 +33,18 @@ fn main() {
         "compare" => compare(&args),
         "suite" => suite(&args),
         "bench-diff" => bench_diff(&args),
+        "trace-summary" => trace_summary(&args),
         _ => {
             print!(
                 "ipopcma — massively parallel IPOP-CMA-ES (Redon et al. 2024 reproduction)\n\n\
                  usage:\n\
                  \x20 ipopcma info\n\
                  \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0] [--workers 1] [--linalg-threads 1] [--json out.json]\n\
-                 \x20                  [--checkpoint-dir DIR] [--checkpoint-every 25] [--resume DIR|SNAP.json]\n\
+                 \x20                  [--checkpoint-dir DIR] [--checkpoint-every 25] [--resume DIR|SNAP.json] [--trace out.jsonl]\n\
                  \x20 ipopcma compare  --fid 7  --dim 10 [--cost-ms 1] [--seed 0]\n\
                  \x20 ipopcma suite    --dim 10 [--cost-ms 0] [--seed 0]\n\
-                 \x20 ipopcma bench-diff --baseline benches/baseline/BENCH_linalg.json --current BENCH_linalg.json [--warn-pct 10]\n"
+                 \x20 ipopcma bench-diff --baseline benches/baseline/BENCH_linalg.json --current BENCH_linalg.json [--warn-pct 10]\n\
+                 \x20 ipopcma trace-summary run_trace.jsonl\n"
             );
             Ok(())
         }
@@ -83,6 +86,7 @@ fn optimize(args: &Args) -> Result<(), String> {
     let checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
     let checkpoint_every: usize = args.typed("checkpoint-every", 25)?;
     let resume = args.get("resume").map(str::to_string);
+    let trace_path = args.get("trace").map(str::to_string);
 
     // Validate before the builder: its knobs assert on these, and bad
     // flags should get the CLI's formatted error, not a panic.
@@ -131,6 +135,9 @@ fn optimize(args: &Args) -> Result<(), String> {
         // position, seed); the search knobs above are ignored.
         builder = builder.resume_from(path);
     }
+    if let Some(path) = &trace_path {
+        builder = builder.trace_path(path);
+    }
     let report = builder.try_run()?;
     println!(
         "f{fid} ({}) dim {dim}: Δf = {:.3e} after {} evals in {:.2}s",
@@ -156,6 +163,21 @@ fn optimize(args: &Args) -> Result<(), String> {
         report.write_json(&path).map_err(|e| format!("writing {path}: {e}"))?;
         println!("report written to {path}");
     }
+    if let Some(path) = &trace_path {
+        println!("trace written to {path} (summarize with: ipopcma trace-summary {path})");
+    }
+    Ok(())
+}
+
+/// Aggregate a `run_trace/v1` JSONL file into the per-restart phase and
+/// kernel tables plus Table-2-style statistics.
+fn trace_summary(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or("trace-summary requires a path: ipopcma trace-summary run_trace.jsonl")?;
+    let tf = ipopcma::trace::read_file(path)?;
+    print!("{}", ipopcma::trace::summary(&tf));
     Ok(())
 }
 
@@ -262,6 +284,14 @@ fn bench_diff(args: &Args) -> Result<(), String> {
 
     let baseline = BenchReport::read_file(baseline_path)?;
     let current = BenchReport::read_file(current_path)?;
+    // Provenance of both artifacts, so a diff against a different machine
+    // class (or hand-set floors) is recognizable at a glance.
+    for (label, report) in [("baseline", &baseline), ("current", &current)] {
+        match &report.meta {
+            Some(m) => println!("{label}: {}", m.describe()),
+            None => println!("{label}: no host metadata (pre-meta artifact)"),
+        }
+    }
     let regressions = bench_compare(&baseline, &current, warn_pct);
     if regressions.is_empty() {
         println!(

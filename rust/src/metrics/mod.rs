@@ -41,12 +41,43 @@ impl HitRecorder {
     /// Rebuild a recorder from previously recorded hits (checkpoint
     /// restore). `next` is recomputed as the leading run of hit targets,
     /// matching the invariant [`HitRecorder::observe`] maintains.
+    ///
+    /// Panics on a gapped hit vector — see [`HitRecorder::try_with_hits`]
+    /// for the fallible form used on untrusted (deserialized) input.
     pub fn with_hits(targets: Vec<f64>, hits: Vec<Option<f64>>) -> HitRecorder {
-        assert_eq!(targets.len(), hits.len());
+        match HitRecorder::try_with_hits(targets, hits) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`HitRecorder::with_hits`]: rejects a hit vector whose
+    /// `Some` entries are not a leading prefix. Targets are strictly
+    /// descending and `observe` records first-hit times front-to-back, so
+    /// a gap (`None` before a `Some`) can only come from a hand-edited or
+    /// corrupt snapshot — and restoring it would let later `observe` calls
+    /// overwrite the already-recorded first-hit times after the gap.
+    pub fn try_with_hits(
+        targets: Vec<f64>,
+        hits: Vec<Option<f64>>,
+    ) -> Result<HitRecorder, String> {
+        if targets.len() != hits.len() {
+            return Err(format!(
+                "hit vector length {} does not match {} targets",
+                hits.len(),
+                targets.len()
+            ));
+        }
+        let next = hits.iter().take_while(|h| h.is_some()).count();
+        if hits[next..].iter().any(|h| h.is_some()) {
+            return Err(
+                "gapped hit vector violates the first-hit prefix invariant".to_string()
+            );
+        }
         let mut r = HitRecorder::new(targets);
-        r.next = hits.iter().take_while(|h| h.is_some()).count();
+        r.next = next;
         r.hits = hits;
-        r
+        Ok(r)
     }
 
     /// Observe the best-so-far quality `delta = f_best − f_opt` at `time`.
@@ -208,6 +239,24 @@ mod tests {
         r.observe(1e-9, 3.0);
         assert_eq!(restored.hits, r.hits);
         assert!(restored.all_hit());
+    }
+
+    #[test]
+    fn gapped_hits_are_rejected() {
+        let targets = vec![1.0, 0.1, 0.01];
+        let gapped = vec![Some(1.0), None, Some(3.0)];
+        assert!(HitRecorder::try_with_hits(targets, gapped).is_err());
+    }
+
+    #[test]
+    fn length_mismatch_is_rejected() {
+        assert!(HitRecorder::try_with_hits(vec![1.0, 0.1], vec![None]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "prefix invariant")]
+    fn with_hits_panics_on_gapped_vector() {
+        HitRecorder::with_hits(vec![1.0, 0.1, 0.01], vec![Some(1.0), None, Some(3.0)]);
     }
 
     #[test]

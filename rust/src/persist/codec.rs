@@ -466,6 +466,14 @@ fn dec_slot(j: &Json) -> Result<SlotSnapshot, PersistError> {
             other => dec_f64_raw(other).map(Some),
         })
         .collect::<Result<Vec<_>, _>>()?;
+    // First-hit times are recorded front-to-back over descending targets,
+    // so Some entries must form a leading prefix. A gap means a hand-edited
+    // or corrupt snapshot; restoring it would let later observations
+    // overwrite recorded first-hit times.
+    let prefix = hits.iter().take_while(|h| h.is_some()).count();
+    if hits[prefix..].iter().any(|h| h.is_some()) {
+        return Err(corrupt("hits: gapped first-hit vector"));
+    }
     Ok(SlotSnapshot {
         descent: decode_descent(get(j, "descent")?)?,
         k: dec_usize(j, "k")?,

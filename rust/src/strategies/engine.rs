@@ -37,10 +37,10 @@ use std::time::Instant;
 
 use super::Algo;
 use crate::cluster::{CommStats, Communicator, CostModel, FaultKind, FaultPlan, OccupancySpan};
-use crate::cmaes::{BatchEvaluator, Descent, DescentState, FnEvaluator, StopReason};
+use crate::cmaes::{BatchEvaluator, Descent, DescentState, FnEvaluator, StopReason, Timings};
 use crate::core::{Event, Observer, Problem};
 use crate::ipop::{self, IpopConfig};
-use crate::metrics::HitRecorder;
+use crate::metrics::{HitRecorder, KernelTimings};
 use crate::rng::derive_stream;
 
 /// How iteration costs are charged (paper §3.2.1 vs. the 1-core baseline).
@@ -131,6 +131,10 @@ pub struct DescentTrace {
     pub hits: HitRecorder,
     /// Best quality (f − f_opt) this descent reached.
     pub best_delta: f64,
+    /// Accumulated phase timings (sample/eval/update/eig wall seconds).
+    pub timings: Timings,
+    /// Cumulative per-kernel accounting, when the compute tier records it.
+    pub kernel: Option<KernelTimings>,
 }
 
 /// Outcome of one strategy run on one instance.
@@ -664,13 +668,22 @@ impl<'a> Engine<'a> {
             }
 
             let best_delta = report.best_so_far - fopt;
-            let (k, t_now, iters_now, hit_lo, hit_hi) = {
+            let (k, replica, t_now, iters_now, hit_lo, hit_hi, sigma, kernel) = {
                 let s = &mut self.slots[slot];
                 s.t += cost.total_s;
                 s.iters += 1;
                 let before = s.hits.hit_count();
                 s.hits.observe(best_delta, s.t);
-                (s.k, s.t, s.iters, before, s.hits.hit_count())
+                (
+                    s.k,
+                    s.replica,
+                    s.t,
+                    s.iters,
+                    before,
+                    s.hits.hit_count(),
+                    s.descent.state.sigma,
+                    s.descent.kernel_timings(),
+                )
             };
             for index in hit_lo..hit_hi {
                 let target = self.cfg.targets[index];
@@ -683,6 +696,20 @@ impl<'a> Engine<'a> {
                 evals: report.evals,
                 best_delta,
                 t_s: t_now,
+            });
+            self.exec.emit(&Event::Generation {
+                slot,
+                k,
+                replica,
+                gen: report.gen,
+                lambda,
+                sigma,
+                gen_best: report.gen_best,
+                best_so_far: report.best_so_far,
+                evals: report.evals,
+                t_s: t_now,
+                timings: report.timings,
+                kernel,
             });
 
             // Refresh this slot's recovery image at the configured
@@ -788,6 +815,8 @@ impl<'a> Engine<'a> {
                 iters: s.iters,
                 evals: s.descent.evals,
                 stop: s.stop,
+                timings: s.descent.timings,
+                kernel: s.descent.kernel_timings(),
                 hits: s.hits,
                 best_delta: s.descent.best_f - fopt,
             })

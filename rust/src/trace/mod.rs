@@ -1,0 +1,612 @@
+//! Run tracing: the `run_trace/v1` JSONL sink and its reader/aggregator.
+//!
+//! The paper's analysis (Fig. 5 kernel breakdown, Table 2 aggregates)
+//! needs *per-generation* data that previously died inside
+//! [`crate::cmaes::Descent`]. This module turns the
+//! [`Event`] stream into a schema-versioned JSONL file — one
+//! self-describing object per line — that survives the run and feeds
+//! `ipopcma trace-summary`.
+//!
+//! # Schema (`run_trace/v1`)
+//!
+//! Every line is a JSON object with a `row` discriminator:
+//!
+//! * `run_start` — `schema`, `algo`, `dim`, `targets`; always the first
+//!   row, carries the schema stamp.
+//! * `descent_start` — `slot`, `k`, `replica`, `lambda`, `start_s`;
+//!   every IPOP restart announces itself here.
+//! * `gen` — the workhorse row, one per CMA-ES generation: `slot`, `k`,
+//!   `replica`, `gen`, `lambda`, `sigma`, `gen_best`, `best_so_far`
+//!   (raw objective values; JSON `null` when non-finite), `evals`
+//!   (cumulative within the descent), `t_s` (virtual seconds), the
+//!   phase seconds `sample_s`/`eval_s`/`update_s`/`eig_s` for *this*
+//!   generation, and — when the compute tier records kernels — the
+//!   **cumulative** counters `kernel_gemm_s`, `kernel_gemm_calls`,
+//!   `kernel_update_s`, `kernel_update_calls`, `kernel_eig_s`,
+//!   `kernel_eig_calls`. Summing the phase fields over a slot's rows
+//!   reproduces `Descent::timings` exactly (same accumulation order);
+//!   a slot's last `kernel_*` values equal `Descent::kernel_timings`.
+//! * `target_hit` — `slot`, `index`, `target`, `t_s`.
+//! * `descent_end` — `slot`, `k`, `replica`, `stop` (stop-reason name
+//!   or `null` for a budget cut), `end_s`.
+//! * `checkpoint` / `restored` / `fault` / `recovered` — durability and
+//!   fault-injection annotations, fields as on [`Event`].
+//! * `run_end` — `best_delta`, `end_s`, `total_evals`, `descents`.
+//!
+//! Determinism: every field except the wall-clock-derived ones — the
+//! phase seconds (`sample_s`/`eval_s`/`update_s`/`eig_s`), the
+//! `kernel_*_s` counters, and `t_s`/`start_s`/`end_s` (virtual time is
+//! charged from measured cost under the serial/threaded backends) — is
+//! a pure function of (problem, config, seed). In particular `sigma`,
+//! `gen_best`, `best_so_far`, `evals`, and `kernel_*_calls` are
+//! bit-identical across `linalg_threads` settings, since the parallel
+//! kernels are bit-identical to serial (asserted by
+//! `rust/tests/trace.rs`).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, BufWriter, Write as _};
+use std::path::Path;
+
+use crate::cmaes::Timings;
+use crate::core::{Event, Observer};
+use crate::metrics::{KernelTimings, SpeedupStats};
+use crate::report::{ascii_table, fmt_val};
+use crate::runtime::json::Json;
+
+/// Schema stamp carried by every `run_start` row.
+pub const SCHEMA: &str = "run_trace/v1";
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn unum(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Streams [`Event`]s into a `run_trace/v1` JSONL file. Attach through
+/// [`crate::api::SolverBuilder::trace_path`] (which tees it alongside
+/// any user observer) or use it directly as an [`Observer`].
+///
+/// Write errors are deferred: rows are written best-effort and the first
+/// I/O error is reported by [`TraceWriter::finish`], so tracing can never
+/// abort a long optimization run mid-flight.
+pub struct TraceWriter {
+    out: BufWriter<fs::File>,
+    err: Option<io::Error>,
+    rows: u64,
+}
+
+impl TraceWriter {
+    /// Create (or truncate) the trace file, creating parent directories.
+    pub fn create(path: impl AsRef<Path>) -> io::Result<TraceWriter> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        let file = fs::File::create(path)?;
+        Ok(TraceWriter { out: BufWriter::new(file), err: None, rows: 0 })
+    }
+
+    /// Rows written so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Flush the sink and surface the first deferred write error, if any.
+    pub fn finish(mut self) -> io::Result<u64> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        self.out.flush()?;
+        Ok(self.rows)
+    }
+
+    fn row(&mut self, kind: &str, fields: Vec<(&str, Json)>) {
+        let mut m = BTreeMap::new();
+        m.insert("row".to_string(), Json::Str(kind.to_string()));
+        for (k, v) in fields {
+            m.insert(k.to_string(), v);
+        }
+        let mut line = Json::Obj(m).to_string();
+        line.push('\n');
+        if self.err.is_none() {
+            if let Err(e) = self.out.write_all(line.as_bytes()) {
+                self.err = Some(e);
+                return;
+            }
+            self.rows += 1;
+        }
+    }
+}
+
+impl Observer for TraceWriter {
+    fn on_event(&mut self, event: &Event) {
+        match *event {
+            Event::RunStart { algo, dim, targets } => self.row(
+                "run_start",
+                vec![
+                    ("schema", Json::Str(SCHEMA.to_string())),
+                    ("algo", Json::Str(algo.to_string())),
+                    ("dim", unum(dim)),
+                    ("targets", unum(targets)),
+                ],
+            ),
+            Event::DescentStart { slot, k, replica, lambda, start_s } => self.row(
+                "descent_start",
+                vec![
+                    ("slot", unum(slot)),
+                    ("k", unum(k)),
+                    ("replica", unum(replica)),
+                    ("lambda", unum(lambda)),
+                    ("start_s", num(start_s)),
+                ],
+            ),
+            // The `gen` row that follows carries a superset of the
+            // Iteration payload; skip the duplicate.
+            Event::Iteration { .. } => {}
+            Event::Generation {
+                slot,
+                k,
+                replica,
+                gen,
+                lambda,
+                sigma,
+                gen_best,
+                best_so_far,
+                evals,
+                t_s,
+                timings,
+                kernel,
+            } => {
+                let mut fields = vec![
+                    ("slot", unum(slot)),
+                    ("k", unum(k)),
+                    ("replica", unum(replica)),
+                    ("gen", unum(gen)),
+                    ("lambda", unum(lambda)),
+                    ("sigma", num(sigma)),
+                    ("gen_best", num(gen_best)),
+                    ("best_so_far", num(best_so_far)),
+                    ("evals", unum(evals)),
+                    ("t_s", num(t_s)),
+                    ("sample_s", num(timings.sample_s)),
+                    ("eval_s", num(timings.eval_s)),
+                    ("update_s", num(timings.update_s)),
+                    ("eig_s", num(timings.eig_s)),
+                ];
+                if let Some(kt) = kernel {
+                    fields.push(("kernel_gemm_s", num(kt.gemm_s)));
+                    fields.push(("kernel_gemm_calls", unum(kt.gemm_calls as usize)));
+                    fields.push(("kernel_update_s", num(kt.update_s)));
+                    fields.push(("kernel_update_calls", unum(kt.update_calls as usize)));
+                    fields.push(("kernel_eig_s", num(kt.eig_s)));
+                    fields.push(("kernel_eig_calls", unum(kt.eig_calls as usize)));
+                }
+                self.row("gen", fields);
+            }
+            Event::TargetHit { slot, index, target, t_s } => self.row(
+                "target_hit",
+                vec![
+                    ("slot", unum(slot)),
+                    ("index", unum(index)),
+                    ("target", num(target)),
+                    ("t_s", num(t_s)),
+                ],
+            ),
+            Event::DescentEnd { slot, k, replica, stop, end_s } => self.row(
+                "descent_end",
+                vec![
+                    ("slot", unum(slot)),
+                    ("k", unum(k)),
+                    ("replica", unum(replica)),
+                    (
+                        "stop",
+                        match stop {
+                            Some(r) => Json::Str(r.name().to_string()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("end_s", num(end_s)),
+                ],
+            ),
+            Event::Checkpoint { seq, t_s } => self.row(
+                "checkpoint",
+                vec![("seq", unum(seq as usize)), ("t_s", num(t_s))],
+            ),
+            Event::Restored { slots, t_s } => self.row(
+                "restored",
+                vec![("slots", unum(slots)), ("t_s", num(t_s))],
+            ),
+            Event::Fault { slot, core, t_s } => self.row(
+                "fault",
+                vec![("slot", unum(slot)), ("core", unum(core)), ("t_s", num(t_s))],
+            ),
+            Event::Recovered { slot, cores_left, recovery_s, t_s } => self.row(
+                "recovered",
+                vec![
+                    ("slot", unum(slot)),
+                    ("cores_left", unum(cores_left)),
+                    ("recovery_s", num(recovery_s)),
+                    ("t_s", num(t_s)),
+                ],
+            ),
+            Event::RunEnd { best_delta, end_s, total_evals, descents } => self.row(
+                "run_end",
+                vec![
+                    ("best_delta", num(best_delta)),
+                    ("end_s", num(end_s)),
+                    ("total_evals", unum(total_evals)),
+                    ("descents", unum(descents)),
+                ],
+            ),
+        }
+    }
+}
+
+/// One parsed `gen` row.
+#[derive(Clone, Debug)]
+pub struct GenRow {
+    pub slot: usize,
+    pub k: usize,
+    pub replica: usize,
+    pub gen: usize,
+    pub lambda: usize,
+    pub sigma: f64,
+    /// `None` when the generation's best was non-finite (JSON `null`).
+    pub gen_best: Option<f64>,
+    pub best_so_far: Option<f64>,
+    pub evals: usize,
+    pub t_s: f64,
+    /// This generation's phase seconds.
+    pub timings: Timings,
+    /// Cumulative kernel counters as of this generation.
+    pub kernel: Option<KernelTimings>,
+}
+
+/// A parsed `run_trace/v1` file.
+#[derive(Clone, Debug, Default)]
+pub struct TraceFile {
+    pub algo: String,
+    pub dim: usize,
+    pub gens: Vec<GenRow>,
+    /// Per-slot stop reason name from `descent_end` (`None` = budget cut).
+    pub stops: BTreeMap<usize, Option<String>>,
+    pub checkpoints: usize,
+    pub faults: usize,
+    pub restored: usize,
+    pub target_hits: usize,
+}
+
+fn req(j: &Json, key: &str, ln: usize) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("line {ln}: missing numeric field {key:?}"))
+}
+
+fn req_usize(j: &Json, key: &str, ln: usize) -> Result<usize, String> {
+    req(j, key, ln).map(|v| v as usize)
+}
+
+fn opt(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(Json::as_f64)
+}
+
+fn parse_gen(j: &Json, ln: usize) -> Result<GenRow, String> {
+    let kernel = if j.get("kernel_gemm_s").is_some() {
+        Some(KernelTimings {
+            gemm_s: req(j, "kernel_gemm_s", ln)?,
+            gemm_calls: req_usize(j, "kernel_gemm_calls", ln)? as u64,
+            update_s: req(j, "kernel_update_s", ln)?,
+            update_calls: req_usize(j, "kernel_update_calls", ln)? as u64,
+            eig_s: req(j, "kernel_eig_s", ln)?,
+            eig_calls: req_usize(j, "kernel_eig_calls", ln)? as u64,
+        })
+    } else {
+        None
+    };
+    Ok(GenRow {
+        slot: req_usize(j, "slot", ln)?,
+        k: req_usize(j, "k", ln)?,
+        replica: req_usize(j, "replica", ln)?,
+        gen: req_usize(j, "gen", ln)?,
+        lambda: req_usize(j, "lambda", ln)?,
+        sigma: req(j, "sigma", ln)?,
+        gen_best: opt(j, "gen_best"),
+        best_so_far: opt(j, "best_so_far"),
+        evals: req_usize(j, "evals", ln)?,
+        t_s: req(j, "t_s", ln)?,
+        timings: Timings {
+            sample_s: req(j, "sample_s", ln)?,
+            eval_s: req(j, "eval_s", ln)?,
+            update_s: req(j, "update_s", ln)?,
+            eig_s: req(j, "eig_s", ln)?,
+        },
+        kernel,
+    })
+}
+
+/// Parse a `run_trace/v1` JSONL file, rejecting unknown schemas.
+/// Unknown row kinds are skipped (forward compatibility within v1).
+pub fn read_file(path: impl AsRef<Path>) -> Result<TraceFile, String> {
+    let path = path.as_ref();
+    let text =
+        fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut tf = TraceFile::default();
+    let mut saw_start = false;
+    for (i, line) in text.lines().enumerate() {
+        let ln = i + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {ln}: {e}"))?;
+        let kind = j
+            .get("row")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("line {ln}: missing \"row\" discriminator"))?;
+        match kind {
+            "run_start" => {
+                let schema = j.get("schema").and_then(Json::as_str).unwrap_or("<absent>");
+                if schema != SCHEMA {
+                    return Err(format!(
+                        "line {ln}: unsupported trace schema {schema:?} (want {SCHEMA:?})"
+                    ));
+                }
+                saw_start = true;
+                tf.algo = j
+                    .get("algo")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string();
+                tf.dim = req_usize(&j, "dim", ln)?;
+            }
+            "gen" => tf.gens.push(parse_gen(&j, ln)?),
+            "descent_end" => {
+                let slot = req_usize(&j, "slot", ln)?;
+                let stop = j.get("stop").and_then(Json::as_str).map(str::to_string);
+                tf.stops.insert(slot, stop);
+            }
+            "target_hit" => tf.target_hits += 1,
+            "checkpoint" => tf.checkpoints += 1,
+            "restored" => tf.restored += 1,
+            "fault" => tf.faults += 1,
+            _ => {}
+        }
+    }
+    if !saw_start {
+        return Err(format!("{}: no run_start row — not a {SCHEMA} file", path.display()));
+    }
+    Ok(tf)
+}
+
+/// Aggregate a parsed trace into the paper-shaped diagnostics:
+/// a per-restart phase table, a Fig.-5-style per-restart kernel
+/// breakdown, and Table-2 statistics over per-generation wall seconds
+/// and generations per restart ([`SpeedupStats`]).
+pub fn summary(tf: &TraceFile) -> String {
+    // Group gen rows by slot, preserving row order within a slot.
+    let mut slots: BTreeMap<usize, Vec<&GenRow>> = BTreeMap::new();
+    for g in &tf.gens {
+        slots.entry(g.slot).or_default().push(g);
+    }
+
+    let mut out = String::new();
+    let head = |names: &[&str]| names.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+
+    let mut phase_rows = Vec::new();
+    let mut kernel_rows = Vec::new();
+    for (&slot, rows) in &slots {
+        let last = rows.last().expect("non-empty by construction");
+        let mut phase = Timings::default();
+        for g in rows {
+            phase.add(&g.timings);
+        }
+        let stop = tf
+            .stops
+            .get(&slot)
+            .map(|s| s.clone().unwrap_or_else(|| "budget".to_string()))
+            .unwrap_or_else(|| "-".to_string());
+        phase_rows.push(vec![
+            slot.to_string(),
+            last.k.to_string(),
+            last.replica.to_string(),
+            last.lambda.to_string(),
+            rows.len().to_string(),
+            last.evals.to_string(),
+            fmt_val(Some(phase.sample_s)),
+            fmt_val(Some(phase.eval_s)),
+            fmt_val(Some(phase.update_s)),
+            fmt_val(Some(phase.eig_s)),
+            fmt_val(Some(phase.total_s())),
+            stop,
+        ]);
+        if let Some(kt) = last.kernel {
+            kernel_rows.push(vec![
+                slot.to_string(),
+                last.k.to_string(),
+                last.lambda.to_string(),
+                fmt_val(Some(kt.gemm_s)),
+                kt.gemm_calls.to_string(),
+                fmt_val(Some(kt.update_s)),
+                kt.update_calls.to_string(),
+                fmt_val(Some(kt.eig_s)),
+                kt.eig_calls.to_string(),
+                fmt_val(Some(kt.total_s())),
+            ]);
+        }
+    }
+
+    out.push_str(&format!(
+        "trace: algo={} dim={} generations={} restarts={} hits={} checkpoints={} faults={}\n\n",
+        tf.algo,
+        tf.dim,
+        tf.gens.len(),
+        slots.len(),
+        tf.target_hits,
+        tf.checkpoints,
+        tf.faults,
+    ));
+    out.push_str(&ascii_table(
+        "Per-restart phase seconds",
+        &head(&[
+            "slot", "k", "rep", "lambda", "gens", "evals", "sample", "eval", "update",
+            "eig", "total", "stop",
+        ]),
+        &phase_rows,
+    ));
+    if !kernel_rows.is_empty() {
+        out.push('\n');
+        out.push_str(&ascii_table(
+            "Per-restart kernel breakdown (Fig. 5)",
+            &head(&[
+                "slot", "k", "lambda", "gemm_s", "calls", "update_s", "calls", "eig_s",
+                "calls", "total_s",
+            ]),
+            &kernel_rows,
+        ));
+    }
+
+    // Table-2-style aggregates.
+    let gen_wall: Vec<f64> = tf.gens.iter().map(|g| g.timings.total_s()).collect();
+    let gens_per: Vec<f64> = slots.values().map(|r| r.len() as f64).collect();
+    let stat_row = |name: &str, s: &SpeedupStats| {
+        vec![
+            name.to_string(),
+            s.count.to_string(),
+            fmt_val(Some(s.avg)),
+            fmt_val(Some(s.std)),
+            fmt_val(Some(s.min)),
+            fmt_val(Some(s.max)),
+        ]
+    };
+    out.push('\n');
+    out.push_str(&ascii_table(
+        "Aggregates (Table 2 style)",
+        &head(&["metric", "count", "avg", "std", "min", "max"]),
+        &[
+            stat_row("gen wall s", &SpeedupStats::from(&gen_wall)),
+            stat_row("gens/restart", &SpeedupStats::from(&gens_per)),
+        ],
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ipopcma_trace_{}_{name}", std::process::id()))
+    }
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::RunStart { algo: "sequential", dim: 3, targets: 2 },
+            Event::DescentStart { slot: 0, k: 1, replica: 0, lambda: 8, start_s: 0.0 },
+            Event::Iteration { slot: 0, k: 1, iter: 1, evals: 8, best_delta: 1.0, t_s: 0.5 },
+            Event::Generation {
+                slot: 0,
+                k: 1,
+                replica: 0,
+                gen: 1,
+                lambda: 8,
+                sigma: 1.5,
+                gen_best: 2.25,
+                best_so_far: 2.25,
+                evals: 8,
+                t_s: 0.5,
+                timings: Timings { sample_s: 0.1, eval_s: 0.2, update_s: 0.3, eig_s: 0.4 },
+                kernel: Some(KernelTimings {
+                    gemm_s: 0.05,
+                    gemm_calls: 1,
+                    update_s: 0.06,
+                    update_calls: 1,
+                    eig_s: 0.07,
+                    eig_calls: 1,
+                }),
+            },
+            Event::TargetHit { slot: 0, index: 0, target: 100.0, t_s: 0.5 },
+            Event::DescentEnd { slot: 0, k: 1, replica: 0, stop: None, end_s: 0.5 },
+            Event::RunEnd { best_delta: 2.25, end_s: 0.5, total_evals: 8, descents: 1 },
+        ]
+    }
+
+    #[test]
+    fn writer_reader_round_trip() {
+        let path = tmp("roundtrip.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        for e in sample_events() {
+            w.on_event(&e);
+        }
+        // Iteration rows are folded into their gen row: 7 events, 6 rows.
+        assert_eq!(w.finish().unwrap(), 6);
+
+        let tf = read_file(&path).unwrap();
+        assert_eq!(tf.algo, "sequential");
+        assert_eq!(tf.dim, 3);
+        assert_eq!(tf.gens.len(), 1);
+        assert_eq!(tf.target_hits, 1);
+        let g = &tf.gens[0];
+        assert_eq!((g.slot, g.k, g.gen, g.lambda, g.evals), (0, 1, 1, 8, 8));
+        assert_eq!(g.gen_best, Some(2.25));
+        assert_eq!(g.timings.sample_s, 0.1);
+        assert_eq!(g.kernel.unwrap().gemm_calls, 1);
+        assert_eq!(tf.stops.get(&0), Some(&None)); // budget cut
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_finite_gen_best_round_trips_as_null() {
+        let path = tmp("nan.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        w.on_event(&Event::RunStart { algo: "x", dim: 2, targets: 1 });
+        w.on_event(&Event::Generation {
+            slot: 0,
+            k: 1,
+            replica: 0,
+            gen: 0,
+            lambda: 4,
+            sigma: 2.0,
+            gen_best: f64::NAN,
+            best_so_far: f64::INFINITY,
+            evals: 4,
+            t_s: 0.1,
+            timings: Timings::default(),
+            kernel: None,
+        });
+        w.finish().unwrap();
+        let tf = read_file(&path).unwrap();
+        assert_eq!(tf.gens[0].gen_best, None);
+        assert_eq!(tf.gens[0].best_so_far, None);
+        assert!(tf.gens[0].kernel.is_none());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let path = tmp("schema.jsonl");
+        fs::write(&path, "{\"row\":\"run_start\",\"schema\":\"run_trace/v9\"}\n").unwrap();
+        let err = read_file(&path).unwrap_err();
+        assert!(err.contains("unsupported trace schema"), "{err}");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn summary_renders_tables() {
+        let path = tmp("summary.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        for e in sample_events() {
+            w.on_event(&e);
+        }
+        w.finish().unwrap();
+        let s = summary(&read_file(&path).unwrap());
+        assert!(s.contains("Per-restart phase seconds"), "{s}");
+        assert!(s.contains("Fig. 5"), "{s}");
+        assert!(s.contains("Table 2"), "{s}");
+        assert!(s.contains("gens/restart"), "{s}");
+        let _ = fs::remove_file(&path);
+    }
+}

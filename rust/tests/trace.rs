@@ -1,0 +1,219 @@
+//! Acceptance tests for the `run_trace/v1` pipeline: the JSONL sink
+//! attached through `SolverBuilder::trace_path` must agree with the
+//! in-memory `RunReport` bit-for-bit, its deterministic fields must be
+//! bit-identical across `linalg_threads` settings, and a NaN objective
+//! must terminate the descent restartably (leaving a `descent_end`
+//! annotation) while the IPOP run continues to the solution.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use ipopcma::api::{Backend, ClosureProblem, Solver};
+use ipopcma::cmaes::{StopReason, Timings};
+use ipopcma::strategies::Algo;
+use ipopcma::trace::{read_file, summary, GenRow, TraceFile};
+
+fn sphere(dim: usize) -> ClosureProblem<impl Fn(&[f64]) -> f64 + Send + Sync> {
+    ClosureProblem::new(dim, |x: &[f64]| x.iter().map(|v| v * v).sum()).named("sphere")
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ipopcma_trace_it_{}_{name}.jsonl", std::process::id()))
+}
+
+fn by_slot(tf: &TraceFile) -> BTreeMap<usize, Vec<&GenRow>> {
+    let mut slots: BTreeMap<usize, Vec<&GenRow>> = BTreeMap::new();
+    for g in &tf.gens {
+        slots.entry(g.slot).or_default().push(g);
+    }
+    slots
+}
+
+/// The trace file is a faithful transcript of the run: per-slot row
+/// counts match descent iteration counts, summing each slot's per-gen
+/// phase seconds reproduces the descent's accumulated `Timings`
+/// bit-exactly (same accumulation order), and the last row's cumulative
+/// kernel counters equal `DescentTrace::kernel`.
+#[test]
+fn trace_rows_match_report() {
+    let path = tmp("rows");
+    let report = Solver::on(sphere(4))
+        .strategy(Algo::Sequential)
+        .k_max(4)
+        .target(1e-8)
+        .seed(3)
+        .trace_path(&path)
+        .run();
+    assert!(report.solved(), "Δf={}", report.best_delta());
+
+    // The first line is a schema-stamped run_start row.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let first = text.lines().next().unwrap();
+    assert!(first.contains("run_start") && first.contains("run_trace/v1"), "{first}");
+
+    let tf = read_file(&path).unwrap();
+    assert_eq!(tf.algo, "sequential-ipop");
+    assert_eq!(tf.dim, 4);
+
+    let slots = by_slot(&tf);
+    assert_eq!(slots.len(), report.trace.descents.len());
+    for (&slot, rows) in &slots {
+        let d = &report.trace.descents[slot];
+        assert_eq!(rows.len(), d.iters, "slot {slot}: one gen row per iteration");
+        let last = rows.last().unwrap();
+        assert_eq!(last.evals, d.evals, "slot {slot}: cumulative evals");
+
+        // Phase seconds: same values, same accumulation order => the sum
+        // is bit-identical to what Descent accumulated internally.
+        let mut phase = Timings::default();
+        for g in rows {
+            phase.add(&g.timings);
+        }
+        assert_eq!(phase.sample_s.to_bits(), d.timings.sample_s.to_bits());
+        assert_eq!(phase.eval_s.to_bits(), d.timings.eval_s.to_bits());
+        assert_eq!(phase.update_s.to_bits(), d.timings.update_s.to_bits());
+        assert_eq!(phase.eig_s.to_bits(), d.timings.eig_s.to_bits());
+
+        // Kernel counters are cumulative: the slot's last row equals the
+        // descent's final accounting.
+        let (kt, dk) = (last.kernel.expect("native tier records kernels"),
+            d.kernel.expect("native tier records kernels"));
+        assert_eq!(kt.gemm_s.to_bits(), dk.gemm_s.to_bits());
+        assert_eq!(kt.gemm_calls, dk.gemm_calls);
+        assert_eq!(kt.update_s.to_bits(), dk.update_s.to_bits());
+        assert_eq!(kt.update_calls, dk.update_calls);
+        assert_eq!(kt.eig_s.to_bits(), dk.eig_s.to_bits());
+        assert_eq!(kt.eig_calls, dk.eig_calls);
+    }
+
+    // The report's metrics block folds the same per-descent data.
+    let m = report.metrics.as_ref().expect("run reports carry metrics");
+    assert_eq!(
+        m.gens_per_restart,
+        report.trace.descents.iter().map(|d| d.iters).collect::<Vec<_>>()
+    );
+    let mut phase = Timings::default();
+    for d in &report.trace.descents {
+        phase.add(&d.timings);
+    }
+    assert_eq!(phase.total_s().to_bits(), m.phase.total_s().to_bits());
+
+    // And trace-summary renders all three tables from this file.
+    let s = summary(&tf);
+    assert!(s.contains("Per-restart phase seconds"), "{s}");
+    assert!(s.contains("Fig. 5"), "{s}");
+    assert!(s.contains("Table 2"), "{s}");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `linalg_threads` is a pure performance knob: the parallel kernels are
+/// bit-identical to serial, so every deterministic trace field (ranking,
+/// σ, objective values, eval counts, kernel call counts, stop reasons)
+/// must be bit-identical across thread settings. Only wall-clock-derived
+/// fields (phase seconds, kernel seconds, `t_s`) may differ.
+#[test]
+fn trace_is_deterministic_across_linalg_threads() {
+    let run = |threads: usize, path: &std::path::Path| {
+        let report = Solver::on(sphere(5))
+            .strategy(Algo::Sequential)
+            .backend(Backend::Serial)
+            .k_max(4)
+            .target(1e-8)
+            .seed(7)
+            .linalg_threads(threads)
+            .trace_path(path)
+            .run();
+        assert!(report.solved(), "threads={threads}: Δf={}", report.best_delta());
+        read_file(path).unwrap()
+    };
+    let (p1, p4) = (tmp("det_t1"), tmp("det_t4"));
+    let a = run(1, &p1);
+    let b = run(4, &p4);
+
+    assert_eq!(a.gens.len(), b.gens.len());
+    for (x, y) in a.gens.iter().zip(&b.gens) {
+        assert_eq!(
+            (x.slot, x.k, x.replica, x.gen, x.lambda, x.evals),
+            (y.slot, y.k, y.replica, y.gen, y.lambda, y.evals)
+        );
+        assert_eq!(x.sigma.to_bits(), y.sigma.to_bits(), "gen {}: sigma", x.gen);
+        assert_eq!(
+            x.gen_best.map(f64::to_bits),
+            y.gen_best.map(f64::to_bits),
+            "gen {}: gen_best",
+            x.gen
+        );
+        assert_eq!(
+            x.best_so_far.map(f64::to_bits),
+            y.best_so_far.map(f64::to_bits),
+            "gen {}: best_so_far",
+            x.gen
+        );
+        // Kernel *call counts* are deterministic; kernel seconds are not.
+        let (kx, ky) = (x.kernel.unwrap(), y.kernel.unwrap());
+        assert_eq!(
+            (kx.gemm_calls, kx.update_calls, kx.eig_calls),
+            (ky.gemm_calls, ky.update_calls, ky.eig_calls)
+        );
+    }
+    assert_eq!(a.stops, b.stops);
+    assert_eq!(a.target_hits, b.target_hits);
+
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p4);
+}
+
+/// A transiently-NaN objective (first generation all-NaN) must stop the
+/// first descent with the restartable `NonFiniteFitness` reason — never
+/// poisoning best-so-far — and the IPOP ladder must carry on to solve
+/// the problem, with the stop annotated in the trace file.
+#[test]
+fn nan_objective_restarts_and_run_continues() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c = Arc::clone(&calls);
+    // λ_start = 8: the entire first generation evaluates to NaN, every
+    // later evaluation is the plain sphere.
+    let p = ClosureProblem::new(4, move |x: &[f64]| {
+        if c.fetch_add(1, Ordering::SeqCst) < 8 {
+            f64::NAN
+        } else {
+            x.iter().map(|v| v * v).sum()
+        }
+    })
+    .named("nan-then-sphere");
+
+    let path = tmp("nan_restart");
+    let report = Solver::on(p)
+        .strategy(Algo::Sequential)
+        .lambda_start(8)
+        .k_max(4)
+        .target(1e-8)
+        .seed(11)
+        .trace_path(&path)
+        .run();
+
+    // Descent 0 died restartably after exactly one generation; the run
+    // restarted and solved anyway.
+    assert!(report.trace.descents.len() >= 2, "no restart happened");
+    let d0 = &report.trace.descents[0];
+    assert_eq!(d0.stop, Some(StopReason::NonFiniteFitness));
+    assert_eq!(d0.iters, 1);
+    assert!(report.solved(), "Δf={}", report.best_delta());
+    assert!(report.best_delta().is_finite());
+
+    // The trace carries the same story: slot 0 annotated with the stop
+    // name, its gen row with a null (None) gen_best.
+    let tf = read_file(&path).unwrap();
+    assert_eq!(
+        tf.stops.get(&0),
+        Some(&Some(StopReason::NonFiniteFitness.name().to_string()))
+    );
+    let slots = by_slot(&tf);
+    let slot0 = &slots[&0];
+    assert_eq!(slot0.len(), 1);
+    assert_eq!(slot0[0].gen_best, None);
+
+    let _ = std::fs::remove_file(&path);
+}
