@@ -67,6 +67,7 @@ impl Solver {
             resume_from: None,
             faults: None,
             trace_path: None,
+            profile: None,
         }
     }
 }
@@ -95,6 +96,7 @@ pub struct SolverBuilder<P> {
     resume_from: Option<PathBuf>,
     faults: Option<FaultPlan>,
     trace_path: Option<PathBuf>,
+    profile: Option<PathBuf>,
 }
 
 impl<P: Problem + 'static> SolverBuilder<P> {
@@ -235,13 +237,26 @@ impl<P: Problem + 'static> SolverBuilder<P> {
         self
     }
 
-    /// Stream the run's full telemetry into a `run_trace/v1` JSONL file
+    /// Stream the run's full telemetry into a `run_trace/v2` JSONL file
     /// at `path` (one row per generation plus restart/checkpoint/fault
     /// annotations — see the [`crate::trace`] module docs). Composes
     /// with [`SolverBuilder::run_observed`]: both sinks receive every
     /// event. CLI: `optimize --trace <path>`.
     pub fn trace_path(mut self, path: impl Into<PathBuf>) -> Self {
         self.trace_path = Some(path.into());
+        self
+    }
+
+    /// Arm the worker profiler for this run and export its per-thread
+    /// span timeline as a Chrome trace-event JSON file at `path` (open
+    /// it in `chrome://tracing` or Perfetto). Also populates the
+    /// `worker` blocks of the `run_trace/v2` rows and the report's
+    /// worker metrics — see [`crate::prof`].
+    ///
+    /// The profiler is process-global: run one profiled solve at a
+    /// time per process. CLI: `optimize --profile <path>`.
+    pub fn profile(mut self, path: impl Into<PathBuf>) -> Self {
+        self.profile = Some(path.into());
         self
     }
 
@@ -396,6 +411,12 @@ impl<P: Problem + 'static> SolverBuilder<P> {
             faults: self.faults.as_ref(),
         };
 
+        // Arm the (process-global) worker profiler for the duration of
+        // the run; disarmed again below even though export may fail.
+        if self.profile.is_some() {
+            crate::prof::enable();
+        }
+
         let (trace, algo, cfg) = match (&resume_snap, &fresh_cfg) {
             (Some(snap), _) => (
                 snap.algo.resume_exec(&*self.problem, snap, exec),
@@ -407,6 +428,11 @@ impl<P: Problem + 'static> SolverBuilder<P> {
             }
             (None, None) => unreachable!(),
         };
+        if let Some(path) = &self.profile {
+            let data = crate::prof::disable();
+            crate::prof::chrome::write_chrome_trace(path, &data)
+                .map_err(|e| format!("profile file {}: {e}", path.display()))?;
+        }
         if let Some(tw) = tracer {
             tw.finish().map_err(|e| format!("trace write: {e}"))?;
         }
@@ -426,7 +452,7 @@ impl<P: Problem + 'static> SolverBuilder<P> {
 
 /// Aggregated timing metrics of one run, derived from the engine's
 /// per-descent traces — the report-level counterpart of the
-/// `run_trace/v1` per-generation rows.
+/// `run_trace/v2` per-generation rows.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
     /// Phase wall seconds summed over every descent.
@@ -436,6 +462,10 @@ pub struct RunMetrics {
     pub kernel: Option<KernelTimings>,
     /// Generations executed by each descent, in slot order.
     pub gens_per_restart: Vec<usize>,
+    /// Worker-level profiling totals folded over every descent that
+    /// recorded them (`None` when no descent did — profiling off on a
+    /// non-virtual-parallel run). See [`crate::prof::WorkerStats`].
+    pub worker: Option<crate::prof::WorkerStats>,
 }
 
 impl RunMetrics {
@@ -443,15 +473,22 @@ impl RunMetrics {
     pub fn from_trace(trace: &RunTrace) -> RunMetrics {
         let mut phase = Timings::default();
         let mut kernel: Option<KernelTimings> = None;
+        let mut worker: Option<crate::prof::WorkerStats> = None;
         let mut gens = Vec::with_capacity(trace.descents.len());
         for d in &trace.descents {
             phase.add(&d.timings);
             if let Some(kt) = d.kernel {
                 kernel.get_or_insert_with(KernelTimings::default).add(&kt);
             }
+            if let Some(ws) = &d.worker {
+                match &mut worker {
+                    Some(acc) => acc.absorb(ws),
+                    None => worker = Some(*ws),
+                }
+            }
             gens.push(d.iters);
         }
-        RunMetrics { phase, kernel, gens_per_restart: gens }
+        RunMetrics { phase, kernel, gens_per_restart: gens, worker }
     }
 }
 
@@ -575,6 +612,16 @@ impl RunReport {
                 ko.insert("eig_calls".to_string(), num(kt.eig_calls as f64));
                 ko.insert("total_s".to_string(), num(kt.total_s()));
                 mo.insert("kernel".to_string(), Json::Obj(ko));
+            }
+            if let Some(ws) = &m.worker {
+                let mut wo = BTreeMap::new();
+                wo.insert("workers".to_string(), num(ws.workers as f64));
+                wo.insert("busy_s".to_string(), num(ws.busy_s));
+                wo.insert("idle_s".to_string(), num(ws.idle_s));
+                wo.insert("utilization".to_string(), num(ws.utilization()));
+                wo.insert("claims".to_string(), num(ws.claims as f64));
+                wo.insert("imbalance".to_string(), num(ws.imbalance));
+                mo.insert("worker".to_string(), Json::Obj(wo));
             }
             mo.insert(
                 "generations_per_restart".to_string(),

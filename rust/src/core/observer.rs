@@ -11,7 +11,7 @@
 //! * per slot, `Iteration` virtual times are non-decreasing;
 //! * every `Iteration` is immediately followed by its `Generation` row
 //!   (same slot, same virtual time) carrying the full per-generation
-//!   telemetry for the `run_trace/v1` sink;
+//!   telemetry for the `run_trace/v2` sink;
 //! * on a resumed run, `Restored` follows `RunStart` and precedes every
 //!   other event; `Checkpoint` events carry strictly increasing `seq`;
 //! * every `Fault` is immediately followed by its `Recovered` (or by the
@@ -19,6 +19,7 @@
 
 use crate::cmaes::{StopReason, Timings};
 use crate::metrics::KernelTimings;
+use crate::prof::WorkerStats;
 
 /// One telemetry event. Times are virtual-cluster seconds (equal to an
 /// estimate of real seconds for the wall-clock backends).
@@ -31,7 +32,7 @@ pub enum Event {
     /// One CMA-ES iteration of a descent completed.
     Iteration { slot: usize, k: usize, iter: usize, evals: usize, best_delta: f64, t_s: f64 },
     /// Full per-generation telemetry, emitted right after the matching
-    /// `Iteration` event — one row of the `run_trace/v1` schema.
+    /// `Iteration` event — one row of the `run_trace/v2` schema.
     /// `gen_best`/`best_so_far` are **raw objective values** (not deltas
     /// to the optimum, unlike `Iteration::best_delta`); `timings` is this
     /// generation's phase breakdown and `kernel` the descent's cumulative
@@ -49,6 +50,11 @@ pub enum Event {
         t_s: f64,
         timings: Timings,
         kernel: Option<KernelTimings>,
+        /// Per-worker profiling stats for this generation: real pool
+        /// measurements when profiling is armed, cost-model synthesis on
+        /// virtual parallel backends, `None` otherwise (`run_trace/v2`
+        /// `worker` block).
+        worker: Option<WorkerStats>,
     },
     /// A descent hit target `targets[index]` for the first time.
     TargetHit { slot: usize, index: usize, target: f64, t_s: f64 },
@@ -146,5 +152,57 @@ mod tests {
             dyn_obs.on_event(&Event::RunStart { algo: "x", dim: 1, targets: 1 });
         }
         assert_eq!(n, 1);
+    }
+
+    /// Tag an event with a stable discriminant for ordering assertions.
+    fn tag(e: &Event) -> &'static str {
+        match e {
+            Event::RunStart { .. } => "run_start",
+            Event::DescentStart { .. } => "descent_start",
+            Event::Iteration { .. } => "iteration",
+            Event::Generation { .. } => "generation",
+            Event::TargetHit { .. } => "target_hit",
+            Event::DescentEnd { .. } => "descent_end",
+            Event::Checkpoint { .. } => "checkpoint",
+            Event::Restored { .. } => "restored",
+            Event::Fault { .. } => "fault",
+            Event::Recovered { .. } => "recovered",
+            Event::RunEnd { .. } => "run_end",
+        }
+    }
+
+    /// A teed stream preserves event order in both arms, and for each
+    /// event arm 0 fires strictly before arm 1.
+    #[test]
+    fn tee_preserves_order_across_both_arms() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        let stream = [
+            Event::RunStart { algo: "x", dim: 3, targets: 2 },
+            Event::DescentStart { slot: 0, k: 0, replica: 0, lambda: 8, start_s: 0.0 },
+            Event::Iteration { slot: 0, k: 0, iter: 0, evals: 8, best_delta: 1.0, t_s: 0.1 },
+            Event::TargetHit { slot: 0, index: 0, target: 1e-1, t_s: 0.1 },
+            Event::DescentEnd { slot: 0, k: 0, replica: 0, stop: None, end_s: 0.2 },
+            Event::RunEnd { best_delta: 0.5, end_s: 0.2, total_evals: 8, descents: 1 },
+        ];
+
+        let log: Rc<RefCell<Vec<(&'static str, &'static str)>>> =
+            Rc::new(RefCell::new(Vec::new()));
+        let (la, lb) = (Rc::clone(&log), Rc::clone(&log));
+        let mut a = FnObserver(move |e: &Event| la.borrow_mut().push(("a", tag(e))));
+        let mut b = FnObserver(move |e: &Event| lb.borrow_mut().push(("b", tag(e))));
+        let mut tee = Tee(&mut a, &mut b);
+        for e in &stream {
+            tee.on_event(e);
+        }
+
+        let got = log.borrow();
+        assert_eq!(got.len(), 2 * stream.len());
+        for (i, e) in stream.iter().enumerate() {
+            // Arm 0 sees event i before arm 1 does, both in stream order.
+            assert_eq!(got[2 * i], ("a", tag(e)));
+            assert_eq!(got[2 * i + 1], ("b", tag(e)));
+        }
     }
 }

@@ -62,12 +62,22 @@ impl ThreadPoolEvaluator {
     /// across calls.
     fn eval_serial(&mut self, xs: &Matrix, out: &mut [f64]) {
         let n = xs.rows();
+        let workers = self.workers;
         self.scratch.resize(n, 0.0);
         for (k, o) in out.iter_mut().enumerate() {
             for i in 0..n {
                 self.scratch[i] = xs[(i, k)];
             }
-            *o = (self.objective)(&self.scratch);
+            // Serial-path evaluations land on worker 0's track so the
+            // profiler sees every objective call either way; the guard
+            // is one relaxed load when profiling is off.
+            if crate::prof::active() {
+                let t0 = crate::prof::now_s();
+                *o = (self.objective)(&self.scratch);
+                crate::prof::eval_span(workers, 0, t0, crate::prof::now_s());
+            } else {
+                *o = (self.objective)(&self.scratch);
+            }
         }
         self.evals.fetch_add(out.len(), Ordering::Relaxed);
     }
@@ -89,7 +99,10 @@ impl BatchEvaluator for ThreadPoolEvaluator {
         let next = AtomicUsize::new(0);
         let results = SharedMut::new(out);
         let obj = &self.objective;
-        self.pool.run(&|_w| {
+        // Note: `run`, not `run_labeled` — the per-point eval spans below
+        // already account every busy second, so a job-level span would
+        // double-count the pool workers' time.
+        self.pool.run(&|w| {
             let mut point = vec![0.0; n];
             loop {
                 let k = next.fetch_add(1, Ordering::Relaxed);
@@ -100,8 +113,17 @@ impl BatchEvaluator for ThreadPoolEvaluator {
                     *p = xs[(i, k)];
                 }
                 // SAFETY: index k was claimed by exactly one worker.
-                unsafe {
-                    results.slice(k, 1)[0] = obj(&point);
+                if crate::prof::active() {
+                    let t0 = crate::prof::now_s();
+                    let f = obj(&point);
+                    unsafe {
+                        results.slice(k, 1)[0] = f;
+                    }
+                    crate::prof::eval_span(workers, w, t0, crate::prof::now_s());
+                } else {
+                    unsafe {
+                        results.slice(k, 1)[0] = obj(&point);
+                    }
                 }
             }
         });

@@ -81,16 +81,18 @@
 //! guarantee survives it. Kernel wall times are recorded per descent
 //! ([`metrics::KernelTimings`], via `Descent::kernel_timings`).
 //!
-//! ## Run tracing (`run_trace/v1`)
+//! ## Run tracing (`run_trace/v2`)
 //!
 //! `.trace_path(path)` on the builder (CLI: `optimize --trace path`)
 //! streams the full telemetry of a run into a schema-versioned JSONL
 //! file: one `gen` row per CMA-ES generation (restart index, λ, σ,
 //! gen_best, best_so_far, evals, the four phase seconds, cumulative
-//! kernel counters) plus `descent_start`/`descent_end` restart
-//! annotations, `target_hit`, `checkpoint`/`restored`, and
-//! `fault`/`recovered` rows. The first row is `run_start` and carries
-//! the schema stamp `"run_trace/v1"`. Summing a restart's per-gen phase
+//! kernel counters, and — when available — a per-worker `worker`
+//! block) plus `descent_start`/`descent_end` restart annotations,
+//! `target_hit`, `checkpoint`/`restored`, and `fault`/`recovered`
+//! rows. The first row is `run_start` and carries the schema stamp
+//! `"run_trace/v2"` (the reader still accepts `v1` files, whose rows
+//! simply have no `worker` block). Summing a restart's per-gen phase
 //! seconds reproduces `Descent::timings`; the last `kernel_*` values
 //! equal `Descent::kernel_timings`. All non-timing fields are
 //! deterministic in (problem, config, seed) — bit-identical across
@@ -98,7 +100,25 @@
 //! into per-restart Fig.-5-style kernel tables and Table-2 statistics;
 //! the full field list is in the [`trace`] module docs. [`RunReport`]
 //! additionally carries a `metrics` block (phase totals, kernel totals,
-//! generations per restart) in its JSON form.
+//! generations per restart, worker totals) in its JSON form.
+//!
+//! ## Worker profiling
+//!
+//! `.profile(path)` on the builder (CLI: `optimize --profile path`)
+//! arms the [`prof`] subsystem for the run: both thread pools record
+//! per-worker span timelines (linalg job spans, idle gaps, per-point
+//! evaluation spans with dynamic-claim counts), each generation's
+//! `run_trace/v2` row gains a `worker` block (busy/idle seconds,
+//! utilization, claims, eval-span quantiles, load imbalance =
+//! max/mean busy), and the full timeline is exported as a Chrome
+//! trace-event JSON file — open it in `chrome://tracing` or Perfetto,
+//! one track per pool worker. Virtual parallel backends synthesize the
+//! same `worker` blocks from the §4.1 cost model without profiling, so
+//! straggler injection is visible there too. `ipopcma profile
+//! <run_trace.jsonl>` renders a per-restart utilization/imbalance
+//! table and flags straggling restarts. When profiling is off every
+//! instrumentation point costs one relaxed atomic load — no locks, no
+//! allocation.
 //!
 //! ## Layers
 //!
@@ -131,6 +151,7 @@ pub mod ipop;
 pub mod linalg;
 pub mod metrics;
 pub mod persist;
+pub mod prof;
 pub mod report;
 pub mod rng;
 pub mod runtime;

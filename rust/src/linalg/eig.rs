@@ -199,7 +199,7 @@ fn back_transform_columns(threads: usize, v: &mut Matrix, d: &[f64], n: usize, i
         return;
     }
     let shared = pool::SharedMut::new(v.as_mut_slice());
-    pool::global(threads).run(&|worker| {
+    pool::global(threads).run_labeled("syev", &|worker| {
         let (c0, c1) = pool::chunk(cols, threads, worker);
         if c0 < c1 {
             // SAFETY: workers own disjoint column ranges; the shared

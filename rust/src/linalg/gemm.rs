@@ -128,7 +128,7 @@ pub fn gemm_level3_mt(
         return;
     }
     let shared = pool::SharedMut::new(c.as_mut_slice());
-    pool::global(threads).run(&|worker| {
+    pool::global(threads).run_labeled("gemm", &|worker| {
         let (r0, r1) = pool::chunk_aligned(m, threads, worker, ROW_ALIGN);
         if r0 < r1 {
             // SAFETY: chunks tile 0..m disjointly, so each worker owns

@@ -205,7 +205,7 @@ fn apply_round(threads: usize, m: &mut Matrix, v: &mut Matrix, rot: &[(usize, us
     // Pass 1: A ← AJ and V ← VJ, partitioned by rows.
     {
         let vv = pool::SharedMut::new(v.as_mut_slice());
-        pool.run(&|worker| {
+        pool.run_labeled("syev", &|worker| {
             let (r0, r1) = pool::chunk(n, threads, worker);
             for i in r0..r1 {
                 // SAFETY: disjoint rows per worker.
@@ -217,7 +217,7 @@ fn apply_round(threads: usize, m: &mut Matrix, v: &mut Matrix, rot: &[(usize, us
         });
     }
     // Pass 2: A ← JᵀA, partitioned by columns (disjoint elements).
-    pool.run(&|worker| {
+    pool.run_labeled("syev", &|worker| {
         let (c0, c1) = pool::chunk(n, threads, worker);
         if c0 < c1 {
             // SAFETY: each worker touches only columns c0..c1 of every

@@ -60,7 +60,7 @@ pub fn syrk_mt(threads: usize, alpha: f64, y: &Matrix, w: &[f64], beta: f64, c: 
     let shared = pool::SharedMut::new(c.as_mut_slice());
     let pool = pool::global(threads);
     // Pass 1: lower triangle, partitioned by output rows.
-    pool.run(&|worker| {
+    pool.run_labeled("syrk", &|worker| {
         let (r0, r1) = pool::chunk(n, threads, worker);
         if r0 < r1 {
             // SAFETY: row chunks tile 0..n disjointly.
@@ -72,7 +72,7 @@ pub fn syrk_mt(threads: usize, alpha: f64, y: &Matrix, w: &[f64], beta: f64, c: 
     // triangle into each row's upper part. Writes stay inside the
     // worker's rows; reads touch only the strictly-lower triangle,
     // which pass 2 never writes.
-    pool.run(&|worker| {
+    pool.run_labeled("syrk", &|worker| {
         let (r0, r1) = pool::chunk(n, threads, worker);
         if r0 < r1 {
             // SAFETY: writes land in rows r0..r1 only; the full-matrix

@@ -7,7 +7,8 @@
 //!   compare   --fid F --dim N     the three strategies on the virtual cluster
 //!   suite     --dim N             quick strategy comparison over the suite
 //!   bench-diff --baseline A --current B   diff two BENCH_linalg.json files
-//!   trace-summary PATH            aggregate a run_trace/v1 JSONL file
+//!   trace-summary PATH            aggregate a run_trace/v2 JSONL file
+//!   profile PATH                  per-restart worker utilization of a trace
 
 use std::sync::Arc;
 
@@ -34,17 +35,19 @@ fn main() {
         "suite" => suite(&args),
         "bench-diff" => bench_diff(&args),
         "trace-summary" => trace_summary(&args),
+        "profile" => profile(&args),
         _ => {
             print!(
                 "ipopcma — massively parallel IPOP-CMA-ES (Redon et al. 2024 reproduction)\n\n\
                  usage:\n\
                  \x20 ipopcma info\n\
                  \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0] [--workers 1] [--linalg-threads 1] [--json out.json]\n\
-                 \x20                  [--checkpoint-dir DIR] [--checkpoint-every 25] [--resume DIR|SNAP.json] [--trace out.jsonl]\n\
+                 \x20                  [--checkpoint-dir DIR] [--checkpoint-every 25] [--resume DIR|SNAP.json] [--trace out.jsonl] [--profile out.trace.json]\n\
                  \x20 ipopcma compare  --fid 7  --dim 10 [--cost-ms 1] [--seed 0]\n\
                  \x20 ipopcma suite    --dim 10 [--cost-ms 0] [--seed 0]\n\
                  \x20 ipopcma bench-diff --baseline benches/baseline/BENCH_linalg.json --current BENCH_linalg.json [--warn-pct 10]\n\
-                 \x20 ipopcma trace-summary run_trace.jsonl\n"
+                 \x20 ipopcma trace-summary run_trace.jsonl\n\
+                 \x20 ipopcma profile run_trace.jsonl [--threshold 1.5]\n"
             );
             Ok(())
         }
@@ -87,6 +90,7 @@ fn optimize(args: &Args) -> Result<(), String> {
     let checkpoint_every: usize = args.typed("checkpoint-every", 25)?;
     let resume = args.get("resume").map(str::to_string);
     let trace_path = args.get("trace").map(str::to_string);
+    let profile_path = args.get("profile").map(str::to_string);
 
     // Validate before the builder: its knobs assert on these, and bad
     // flags should get the CLI's formatted error, not a panic.
@@ -138,6 +142,9 @@ fn optimize(args: &Args) -> Result<(), String> {
     if let Some(path) = &trace_path {
         builder = builder.trace_path(path);
     }
+    if let Some(path) = &profile_path {
+        builder = builder.profile(path);
+    }
     let report = builder.try_run()?;
     println!(
         "f{fid} ({}) dim {dim}: Δf = {:.3e} after {} evals in {:.2}s",
@@ -165,11 +172,15 @@ fn optimize(args: &Args) -> Result<(), String> {
     }
     if let Some(path) = &trace_path {
         println!("trace written to {path} (summarize with: ipopcma trace-summary {path})");
+        println!("worker profile: ipopcma profile {path}");
+    }
+    if let Some(path) = &profile_path {
+        println!("Chrome trace written to {path} (open in chrome://tracing or Perfetto)");
     }
     Ok(())
 }
 
-/// Aggregate a `run_trace/v1` JSONL file into the per-restart phase and
+/// Aggregate a `run_trace/v2` JSONL file into the per-restart phase and
 /// kernel tables plus Table-2-style statistics.
 fn trace_summary(args: &Args) -> Result<(), String> {
     let path = args
@@ -178,6 +189,23 @@ fn trace_summary(args: &Args) -> Result<(), String> {
         .ok_or("trace-summary requires a path: ipopcma trace-summary run_trace.jsonl")?;
     let tf = ipopcma::trace::read_file(path)?;
     print!("{}", ipopcma::trace::summary(&tf));
+    Ok(())
+}
+
+/// Per-restart worker utilization / load-imbalance view of a trace's
+/// `worker` blocks; restarts whose peak imbalance exceeds `--threshold`
+/// are flagged as stragglers.
+fn profile(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or("profile requires a path: ipopcma profile run_trace.jsonl")?;
+    let threshold: f64 = args.typed("threshold", 1.5)?;
+    if !(threshold >= 1.0) {
+        return Err(format!("--threshold must be >= 1.0, got {threshold}"));
+    }
+    let tf = ipopcma::trace::read_file(path)?;
+    print!("{}", ipopcma::trace::profile_summary(&tf, threshold));
     Ok(())
 }
 

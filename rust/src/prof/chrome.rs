@@ -1,0 +1,131 @@
+//! Chrome trace-event JSON export of a recorded [`ProfData`] timeline.
+//!
+//! The output is the classic `{"traceEvents": [...]}` object format,
+//! loadable in `chrome://tracing` and Perfetto. Each (pool width,
+//! worker) pair becomes one named track: the pool width is the `pid`
+//! (so the evaluator and linalg pools group separately even when one
+//! `WorkerPool` backs both), the worker index the `tid`. Spans become
+//! `ph:"X"` complete events with microsecond `ts`/`dur`; restart /
+//! fault / restore marks become global `ph:"i"` instant events.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io;
+use std::path::Path;
+
+use super::ProfData;
+use crate::runtime::json::Json;
+
+/// Render the timeline as a Chrome trace-event JSON document.
+pub fn chrome_trace(data: &ProfData) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    // One thread_name metadata event names each worker track.
+    let tracks: BTreeSet<(usize, usize)> =
+        data.spans.iter().map(|s| (s.pool, s.worker)).collect();
+    for &(pool, worker) in &tracks {
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(format!("pool{pool}-w{worker}")));
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("M".to_string()));
+        m.insert("name".to_string(), Json::Str("thread_name".to_string()));
+        m.insert("pid".to_string(), Json::Num(pool as f64));
+        m.insert("tid".to_string(), Json::Num(worker as f64));
+        m.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(m));
+    }
+
+    for s in &data.spans {
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("X".to_string()));
+        m.insert("name".to_string(), Json::Str(s.kind.to_string()));
+        m.insert("cat".to_string(), Json::Str("prof".to_string()));
+        m.insert("pid".to_string(), Json::Num(s.pool as f64));
+        m.insert("tid".to_string(), Json::Num(s.worker as f64));
+        m.insert("ts".to_string(), Json::Num(s.t0 * 1e6));
+        m.insert("dur".to_string(), Json::Num((s.t1 - s.t0) * 1e6));
+        events.push(Json::Obj(m));
+    }
+
+    for mk in &data.marks {
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("i".to_string()));
+        m.insert("s".to_string(), Json::Str("g".to_string()));
+        m.insert("name".to_string(), Json::Str(mk.name.clone()));
+        m.insert("cat".to_string(), Json::Str("prof".to_string()));
+        m.insert("pid".to_string(), Json::Num(0.0));
+        m.insert("tid".to_string(), Json::Num(0.0));
+        m.insert("ts".to_string(), Json::Num(mk.t_s * 1e6));
+        events.push(Json::Obj(m));
+    }
+
+    let mut other = BTreeMap::new();
+    other.insert("droppedSpans".to_string(), Json::Num(data.dropped as f64));
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    top.insert("otherData".to_string(), Json::Obj(other));
+    Json::Obj(top)
+}
+
+/// Write the Chrome trace-event JSON for `data` to `path`, creating
+/// parent directories as needed.
+pub fn write_chrome_trace(path: impl AsRef<Path>, data: &ProfData) -> io::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, chrome_trace(data).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prof::{Mark, Span};
+
+    #[test]
+    fn export_round_trips_through_the_parser() {
+        let data = ProfData {
+            spans: vec![
+                Span { pool: 2, worker: 0, kind: "eval", t0: 0.001, t1: 0.002 },
+                Span { pool: 2, worker: 1, kind: "eval", t0: 0.001, t1: 0.003 },
+                Span { pool: 4, worker: 3, kind: "gemm", t0: 0.004, t1: 0.005 },
+            ],
+            marks: vec![Mark { name: "descent slot=1".to_string(), t_s: 0.006 }],
+            dropped: 0,
+        };
+        let doc = Json::parse(&chrome_trace(&data).to_string()).expect("well-formed JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        // 3 distinct tracks => 3 metadata events, plus 3 spans and 1 instant.
+        assert_eq!(events.len(), 7);
+        let tracks: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(tracks.len(), 3);
+        assert_eq!(
+            tracks[0].get("args").and_then(|a| a.get("name")).and_then(Json::as_str),
+            Some("pool2-w0")
+        );
+        let spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 3);
+        // Microsecond conversion: the 1ms eval span is dur=1000.
+        let dur = spans[0].get("dur").and_then(Json::as_f64).unwrap();
+        assert!((dur - 1000.0).abs() < 1e-6);
+        let instants: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .collect();
+        assert_eq!(instants.len(), 1);
+    }
+
+    #[test]
+    fn empty_timeline_still_well_formed() {
+        let doc = Json::parse(&chrome_trace(&ProfData::default()).to_string()).unwrap();
+        assert_eq!(doc.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len), Some(0));
+    }
+}

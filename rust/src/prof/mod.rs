@@ -1,0 +1,420 @@
+//! Worker-level profiling: per-thread span timelines for both pools.
+//!
+//! The paper's §4–5 analysis explains parallel efficiency from *per-core*
+//! behavior — evaluation-time imbalance and synchronization idle gaps —
+//! which the per-generation phase seconds of the run trace cannot see.
+//! This module records what each worker of the two thread pools (the
+//! evaluator pool and the linalg pool, see ROADMAP "Threading model")
+//! was doing, span by span, and folds the timeline into the analysis
+//! metrics the paper reports: per-worker busy/idle seconds, utilization,
+//! claim counts and the load-imbalance ratio (max per-worker busy over
+//! mean per-worker busy).
+//!
+//! Design:
+//!
+//! - **Zero cost when off.** Every instrumented hot path (pool job
+//!   dispatch, per-point objective evaluation, worker park/unpark) is
+//!   guarded by [`active`] — a single relaxed load of a process-wide
+//!   `AtomicBool`. With profiling disabled no lock is taken and nothing
+//!   allocates; the recording mutex and span vector exist only behind
+//!   the enabled branch.
+//! - **One collector per process.** [`enable`] clears and arms the
+//!   collector, [`disable`] disarms it and returns the full
+//!   [`ProfData`] timeline (for the Chrome-trace export). Spans carry
+//!   their pool width so the evaluator pool (`--workers`) and the
+//!   linalg pool (`--linalg-threads`) land on distinct tracks even when
+//!   they share a [`crate::linalg::pool::WorkerPool`]. Only one
+//!   profiled run should be active at a time per process.
+//! - **Generation windows.** [`take_generation`] drains the per-worker
+//!   busy/idle/claim accumulators gathered since the previous call into
+//!   one [`WorkerStats`] — the strategy engine calls it once per
+//!   iteration so each `gen` trace row carries the stats of exactly its
+//!   own generation. The scalar accumulators are exact even when the
+//!   span timeline hits its soft cap ([`ProfData::dropped`] counts the
+//!   spans the timeline had to shed).
+//! - **Virtual runs stay visible.** Simulated backends evaluate through
+//!   a plain closure, so nothing real is instrumented; the engine
+//!   instead synthesizes deterministic per-core stats from the §4.1
+//!   cost model via [`virtual_stats`] — which is how fault-plan
+//!   stragglers become visible to `ipopcma profile`.
+
+pub mod chrome;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Soft cap on the retained span timeline: beyond this the Chrome trace
+/// stops growing (spans are counted in [`ProfData::dropped`] instead)
+/// while the scalar per-generation accumulators stay exact.
+const MAX_SPANS: usize = 1 << 20;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// One recorded interval on a worker's track, in seconds since the
+/// process profiling epoch.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Width of the pool the worker belongs to (doubles as the Chrome
+    /// trace `pid` so differently-sized pools get separate track groups).
+    pub pool: usize,
+    /// Worker index within the pool (`pool - 1` is the caller).
+    pub worker: usize,
+    /// What the worker was doing: a kernel label (`"gemm"`, `"syrk"`,
+    /// `"syev"`), `"eval"` for an objective evaluation, `"idle"` for a
+    /// park gap.
+    pub kind: &'static str,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+/// A point event on the timeline (restart spawned, fault injected,
+/// checkpoint restored) — exported as a Chrome instant event.
+#[derive(Clone, Debug)]
+pub struct Mark {
+    pub name: String,
+    pub t_s: f64,
+}
+
+/// The full recorded timeline, returned by [`disable`].
+#[derive(Clone, Debug, Default)]
+pub struct ProfData {
+    pub spans: Vec<Span>,
+    pub marks: Vec<Mark>,
+    /// Spans shed after the timeline hit its soft cap. The per-generation
+    /// scalar stats remain exact regardless.
+    pub dropped: u64,
+}
+
+#[derive(Default)]
+struct Collector {
+    data: ProfData,
+    /// Per-(pool, worker) busy seconds since the last generation drain.
+    busy: BTreeMap<(usize, usize), f64>,
+    /// Per-(pool, worker) idle seconds since the last generation drain.
+    idle: BTreeMap<(usize, usize), f64>,
+    /// Per-(pool, worker) evaluation claims since the last drain.
+    claims: BTreeMap<(usize, usize), u64>,
+    /// Durations of the individual evaluations since the last drain.
+    evals: Vec<f64>,
+}
+
+fn collector() -> &'static Mutex<Collector> {
+    static C: OnceLock<Mutex<Collector>> = OnceLock::new();
+    C.get_or_init(|| Mutex::new(Collector::default()))
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Is profiling armed? One relaxed atomic load — this is the entire
+/// cost instrumented hot paths pay when profiling is off.
+#[inline]
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Seconds since the process profiling epoch (first use of the module).
+pub fn now_s() -> f64 {
+    epoch().elapsed().as_secs_f64()
+}
+
+/// Clear the collector and arm recording.
+pub fn enable() {
+    let mut c = collector().lock().unwrap_or_else(|e| e.into_inner());
+    *c = Collector::default();
+    drop(c);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm recording and hand back everything recorded since [`enable`].
+pub fn disable() -> ProfData {
+    ENABLED.store(false, Ordering::SeqCst);
+    let mut c = collector().lock().unwrap_or_else(|e| e.into_inner());
+    std::mem::take(&mut *c).data
+}
+
+fn push_span(c: &mut Collector, span: Span) {
+    if c.data.spans.len() < MAX_SPANS {
+        c.data.spans.push(span);
+    } else {
+        c.data.dropped += 1;
+    }
+}
+
+/// Record a pool job execution (one worker's slice of a labeled
+/// `run_labeled` dispatch) as busy time.
+pub fn job_span(pool: usize, worker: usize, kind: &'static str, t0: f64, t1: f64) {
+    if !active() {
+        return;
+    }
+    let mut c = collector().lock().unwrap_or_else(|e| e.into_inner());
+    *c.busy.entry((pool, worker)).or_insert(0.0) += t1 - t0;
+    push_span(&mut c, Span { pool, worker, kind, t0, t1 });
+}
+
+/// Record one objective evaluation: busy time plus a dynamic-claiming
+/// claim on this worker.
+pub fn eval_span(pool: usize, worker: usize, t0: f64, t1: f64) {
+    if !active() {
+        return;
+    }
+    let mut c = collector().lock().unwrap_or_else(|e| e.into_inner());
+    *c.busy.entry((pool, worker)).or_insert(0.0) += t1 - t0;
+    *c.claims.entry((pool, worker)).or_insert(0) += 1;
+    c.evals.push(t1 - t0);
+    push_span(&mut c, Span { pool, worker, kind: "eval", t0, t1 });
+}
+
+/// Record a park gap — the interval a pool worker spent waiting for its
+/// next job.
+pub fn idle_span(pool: usize, worker: usize, t0: f64, t1: f64) {
+    if !active() {
+        return;
+    }
+    let mut c = collector().lock().unwrap_or_else(|e| e.into_inner());
+    *c.idle.entry((pool, worker)).or_insert(0.0) += t1 - t0;
+    push_span(&mut c, Span { pool, worker, kind: "idle", t0, t1 });
+}
+
+/// Record a point event (restart / fault / restore annotation).
+pub fn mark(name: String, t_s: f64) {
+    if !active() {
+        return;
+    }
+    let mut c = collector().lock().unwrap_or_else(|e| e.into_inner());
+    c.data.marks.push(Mark { name, t_s });
+}
+
+/// Per-generation worker statistics — the `worker` block of a
+/// `run_trace/v2` `gen` row.
+///
+/// `imbalance` is the paper's load-imbalance ratio: the busiest worker's
+/// busy seconds over the mean per-worker busy seconds (1.0 = perfectly
+/// balanced; a straggler stretched by factor *f* on *c* cores
+/// approaches `f·c / (c - 1 + f)`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkerStats {
+    /// Distinct workers observed this generation.
+    pub workers: usize,
+    /// Total busy seconds summed over workers.
+    pub busy_s: f64,
+    /// Total recorded idle (park gap) seconds summed over workers.
+    pub idle_s: f64,
+    /// Objective evaluations claimed via dynamic point-claiming.
+    pub claims: u64,
+    /// Shortest single evaluation this generation.
+    pub eval_min_s: f64,
+    /// Median single evaluation this generation.
+    pub eval_med_s: f64,
+    /// Longest single evaluation this generation.
+    pub eval_max_s: f64,
+    /// Max per-worker busy over mean per-worker busy.
+    pub imbalance: f64,
+}
+
+impl WorkerStats {
+    /// Fraction of observed worker wall time spent busy (0 when nothing
+    /// was recorded — never NaN).
+    pub fn utilization(&self) -> f64 {
+        let total = self.busy_s + self.idle_s;
+        if total > 0.0 {
+            self.busy_s / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Fold another generation's stats into this aggregate. Busy/idle
+    /// seconds and claims add exactly; the median is approximated by a
+    /// claims-weighted mean of medians and the imbalance by a
+    /// busy-weighted mean, which is what the per-restart tables report.
+    pub fn absorb(&mut self, other: &WorkerStats) {
+        let (sb, ob) = (self.busy_s, other.busy_s);
+        if sb + ob > 0.0 {
+            self.imbalance = (self.imbalance * sb + other.imbalance * ob) / (sb + ob);
+        } else {
+            self.imbalance = self.imbalance.max(other.imbalance);
+        }
+        let (sc, oc) = (self.claims as f64, other.claims as f64);
+        if sc + oc > 0.0 {
+            self.eval_med_s = (self.eval_med_s * sc + other.eval_med_s * oc) / (sc + oc);
+        }
+        self.eval_min_s = if self.claims == 0 {
+            other.eval_min_s
+        } else if other.claims == 0 {
+            self.eval_min_s
+        } else {
+            self.eval_min_s.min(other.eval_min_s)
+        };
+        self.eval_max_s = self.eval_max_s.max(other.eval_max_s);
+        self.workers = self.workers.max(other.workers);
+        self.busy_s += other.busy_s;
+        self.idle_s += other.idle_s;
+        self.claims += other.claims;
+    }
+}
+
+/// Drain the busy/idle/claim accumulators gathered since the previous
+/// call into one [`WorkerStats`]. Returns `None` when profiling is off
+/// or the window recorded nothing (e.g. a serial-closure generation).
+pub fn take_generation() -> Option<WorkerStats> {
+    if !active() {
+        return None;
+    }
+    let mut c = collector().lock().unwrap_or_else(|e| e.into_inner());
+    let busy = std::mem::take(&mut c.busy);
+    let idle = std::mem::take(&mut c.idle);
+    let claims = std::mem::take(&mut c.claims);
+    let mut evals = std::mem::take(&mut c.evals);
+    drop(c);
+    if busy.is_empty() && idle.is_empty() && claims.is_empty() {
+        return None;
+    }
+
+    let mut keys: BTreeSet<(usize, usize)> = busy.keys().copied().collect();
+    keys.extend(idle.keys().copied());
+    keys.extend(claims.keys().copied());
+    let workers = keys.len();
+
+    let busy_total: f64 = busy.values().sum();
+    let idle_total: f64 = idle.values().sum();
+    let claims_total: u64 = claims.values().sum();
+    let max_busy = busy.values().copied().fold(0.0_f64, f64::max);
+    let mean_busy = if workers > 0 { busy_total / workers as f64 } else { 0.0 };
+    let imbalance = if mean_busy > 0.0 { max_busy / mean_busy } else { 1.0 };
+
+    evals.sort_by(|a, b| a.total_cmp(b));
+    let (eval_min_s, eval_med_s, eval_max_s) = if evals.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (evals[0], evals[evals.len() / 2], evals[evals.len() - 1])
+    };
+
+    Some(WorkerStats {
+        workers,
+        busy_s: busy_total,
+        idle_s: idle_total,
+        claims: claims_total,
+        eval_min_s,
+        eval_med_s,
+        eval_max_s,
+        imbalance,
+    })
+}
+
+/// Deterministic per-core stats synthesized from the §4.1 cost model for
+/// virtual (`Mode::Parallel`) runs: `base` is the unstretched per-core
+/// evaluation wall of the generation, `wall` the possibly
+/// straggler-stretched one. One core carries `wall`, the remaining
+/// `cores - 1` carry `base` and wait out the difference — exactly the
+/// shape a fault-plan straggler produces, so `ipopcma profile` can flag
+/// it without any real threads running.
+pub fn virtual_stats(cores: usize, lambda: usize, base: f64, wall: f64) -> WorkerStats {
+    let cores = cores.max(1);
+    let base = base.max(0.0);
+    let stretched = wall.max(base);
+    let busy_s = base * (cores as f64 - 1.0) + stretched;
+    let idle_s = (stretched - base) * (cores as f64 - 1.0);
+    let mean = busy_s / cores as f64;
+    let imbalance = if mean > 0.0 { stretched / mean } else { 1.0 };
+    WorkerStats {
+        workers: cores,
+        busy_s,
+        idle_s,
+        claims: lambda as u64,
+        eval_min_s: base,
+        eval_med_s: base,
+        eval_max_s: stretched,
+        imbalance,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_never_nan() {
+        let z = WorkerStats::default();
+        assert_eq!(z.utilization(), 0.0);
+        let w = WorkerStats { busy_s: 3.0, idle_s: 1.0, ..Default::default() };
+        assert!((w.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_adds_exact_fields_and_weights_the_rest() {
+        let mut a = WorkerStats {
+            workers: 2,
+            busy_s: 1.0,
+            idle_s: 0.5,
+            claims: 10,
+            eval_min_s: 0.01,
+            eval_med_s: 0.02,
+            eval_max_s: 0.05,
+            imbalance: 1.0,
+        };
+        let b = WorkerStats {
+            workers: 4,
+            busy_s: 3.0,
+            idle_s: 0.5,
+            claims: 30,
+            eval_min_s: 0.005,
+            eval_med_s: 0.04,
+            eval_max_s: 0.20,
+            imbalance: 2.0,
+        };
+        a.absorb(&b);
+        assert_eq!(a.workers, 4);
+        assert!((a.busy_s - 4.0).abs() < 1e-12);
+        assert!((a.idle_s - 1.0).abs() < 1e-12);
+        assert_eq!(a.claims, 40);
+        assert!((a.eval_min_s - 0.005).abs() < 1e-12);
+        assert!((a.eval_max_s - 0.20).abs() < 1e-12);
+        // busy-weighted imbalance: (1·1 + 2·3)/4 = 1.75
+        assert!((a.imbalance - 1.75).abs() < 1e-12);
+        // claims-weighted median: (0.02·10 + 0.04·30)/40 = 0.035
+        assert!((a.eval_med_s - 0.035).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_into_default_copies_other() {
+        let mut acc = WorkerStats::default();
+        let w = virtual_stats(6, 12, 1.0, 1.0);
+        acc.absorb(&w);
+        assert_eq!(acc, w);
+    }
+
+    #[test]
+    fn virtual_stats_balanced_run_has_unit_imbalance() {
+        let w = virtual_stats(6, 12, 2.0, 2.0);
+        assert_eq!(w.workers, 6);
+        assert!((w.busy_s - 12.0).abs() < 1e-12);
+        assert_eq!(w.idle_s, 0.0);
+        assert_eq!(w.claims, 12);
+        assert!((w.imbalance - 1.0).abs() < 1e-12);
+        assert!((w.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtual_stats_straggler_shape() {
+        // Factor-8 straggler on 6 cores: imbalance = 8·6/(5 + 8) ≈ 3.69.
+        let w = virtual_stats(6, 12, 1.0, 8.0);
+        assert!((w.busy_s - 13.0).abs() < 1e-12);
+        assert!((w.idle_s - 35.0).abs() < 1e-12);
+        assert!((w.imbalance - 8.0 * 6.0 / 13.0).abs() < 1e-12);
+        assert!(w.imbalance > 1.5, "straggler must cross the flag threshold");
+        assert_eq!(w.eval_max_s, 8.0);
+    }
+
+    #[test]
+    fn virtual_stats_zero_cost_is_safe() {
+        let w = virtual_stats(0, 0, 0.0, 0.0);
+        assert_eq!(w.workers, 1);
+        assert_eq!(w.imbalance, 1.0);
+        assert_eq!(w.utilization(), 0.0);
+    }
+}

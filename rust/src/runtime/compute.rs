@@ -19,7 +19,7 @@ mod real {
     use std::rc::Rc;
 
     use crate::cmaes::{CmaState, Compute};
-    use crate::linalg::{EigError, Matrix};
+    use crate::linalg::{pool, EigError, Matrix};
 
     use super::super::error::{rt_err, Result};
     use super::super::{
@@ -32,6 +32,9 @@ mod real {
         n: usize,
         lambda: usize,
         mu: usize,
+        /// Width of the shared linalg pool used by the host-side
+        /// fallbacks (the eigenpair sort/gather); 1 = inline.
+        threads: usize,
         sample_name: String,
         update_name: String,
         eigh_name: String,
@@ -42,6 +45,22 @@ mod real {
         /// Fails (cleanly) when the manifest lacks that shape — rebuild with
         /// `python -m compile.aot --full` for the extended ladder.
         pub fn for_shape(rt: Rc<XlaRuntime>, n: usize, lambda: usize) -> Result<XlaCompute> {
+            Self::for_shape_mt(rt, n, lambda, 1)
+        }
+
+        /// [`XlaCompute::for_shape`] with the host-side fallback work
+        /// (the eigenpair gather in [`Compute::refresh_eigen`]) run on
+        /// `threads` workers of the shared [`pool`] — the same pool the
+        /// native kernels use, so `--linalg-threads` covers this tier
+        /// too and profiling spans appear on the same worker tracks.
+        /// The gather is a pure permutation, so the result is
+        /// bit-identical for every `threads`.
+        pub fn for_shape_mt(
+            rt: Rc<XlaRuntime>,
+            n: usize,
+            lambda: usize,
+            threads: usize,
+        ) -> Result<XlaCompute> {
             let sample = rt
                 .manifest
                 .find(Kind::SampleY, n, Some(lambda))
@@ -59,6 +78,7 @@ mod real {
                 n,
                 lambda,
                 mu,
+                threads: threads.max(1),
                 sample_name: sample.name.clone(),
                 update_name: update.name.clone(),
                 eigh_name: eigh.name.clone(),
@@ -131,7 +151,34 @@ mod real {
             let mut order: Vec<usize> = (0..self.n).collect();
             order.sort_by(|&a, &b| raw_values[a].total_cmp(&raw_values[b]));
             let values: Vec<f64> = order.iter().map(|&i| raw_values[i]).collect();
-            let vectors = Matrix::from_fn(self.n, self.n, |r, c| raw_vectors[(r, order[c])]);
+            // Column gather on the shared linalg pool (row-partitioned, a
+            // pure permutation — bit-identical for every thread count).
+            let n = self.n;
+            let threads = self.threads;
+            let vectors = if threads == 1 || n < 2 {
+                Matrix::from_fn(n, n, |r, c| raw_vectors[(r, order[c])])
+            } else {
+                let mut m = Matrix::zeros(n, n);
+                {
+                    let shared = pool::SharedMut::new(m.as_mut_slice());
+                    let order = &order;
+                    let raw = &raw_vectors;
+                    pool::global(threads).run_labeled("syev", &|worker| {
+                        let (r0, r1) = pool::chunk(n, threads, worker);
+                        if r0 < r1 {
+                            // SAFETY: row chunks tile 0..n disjointly.
+                            let rows = unsafe { shared.slice(r0 * n, (r1 - r0) * n) };
+                            for i in r0..r1 {
+                                let dst = &mut rows[(i - r0) * n..(i - r0) * n + n];
+                                for (j, d) in dst.iter_mut().enumerate() {
+                                    *d = raw[(i, order[j])];
+                                }
+                            }
+                        }
+                    });
+                }
+                m
+            };
             st.apply_eigen(values, vectors);
             Ok(())
         }
@@ -157,7 +204,16 @@ mod stub {
 
     impl XlaCompute {
         pub fn for_shape(rt: Rc<XlaRuntime>, n: usize, lambda: usize) -> Result<XlaCompute> {
-            let _ = (rt, n, lambda);
+            Self::for_shape_mt(rt, n, lambda, 1)
+        }
+
+        pub fn for_shape_mt(
+            rt: Rc<XlaRuntime>,
+            n: usize,
+            lambda: usize,
+            threads: usize,
+        ) -> Result<XlaCompute> {
+            let _ = (rt, n, lambda, threads);
             Err(rt_err!("XlaCompute unavailable: built without the `xla` cargo feature"))
         }
     }

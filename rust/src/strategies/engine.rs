@@ -135,6 +135,12 @@ pub struct DescentTrace {
     pub timings: Timings,
     /// Cumulative per-kernel accounting, when the compute tier records it.
     pub kernel: Option<KernelTimings>,
+    /// Aggregated per-worker profiling stats over the descent's
+    /// generations (real measurements when profiling is armed, §4.1
+    /// cost-model synthesis on parallel virtual backends, else `None`).
+    /// Observability only: not part of the durable snapshot, so a
+    /// restored run accumulates from the resume point.
+    pub worker: Option<crate::prof::WorkerStats>,
 }
 
 /// Outcome of one strategy run on one instance.
@@ -258,6 +264,9 @@ pub(crate) struct EngineSlot {
     pub iters: usize,
     pub done: bool,
     pub stop: Option<StopReason>,
+    /// Running aggregate of per-generation worker stats (observability
+    /// only — deliberately absent from [`SlotSnapshot`]).
+    pub worker: Option<crate::prof::WorkerStats>,
 }
 
 /// In-memory recovery image a rank failure rolls back to.
@@ -380,6 +389,7 @@ impl<'a> Engine<'a> {
             iters: 0,
             done: false,
             stop: None,
+            worker: None,
         };
         let id = self.slots.len();
         self.backups.push(self.exec.faults.map(|_| SlotBackup {
@@ -395,6 +405,9 @@ impl<'a> Engine<'a> {
             lambda: k * self.cfg.ipop.lambda_start,
             start_s: start_t,
         });
+        if crate::prof::active() {
+            crate::prof::mark(format!("descent slot={id} k={k}"), crate::prof::now_s());
+        }
         id
     }
 
@@ -489,6 +502,7 @@ impl<'a> Engine<'a> {
                 iters: sl.iters,
                 done: sl.done,
                 stop: sl.stop,
+                worker: None,
             });
         }
         let faults_used = match exec.faults {
@@ -519,6 +533,9 @@ impl<'a> Engine<'a> {
             .fold(0.0f64, f64::max);
         let n_slots = eng.slots.len();
         eng.exec.emit(&Event::Restored { slots: n_slots, t_s: resume_t });
+        if crate::prof::active() {
+            crate::prof::mark(format!("restored slots={n_slots}"), crate::prof::now_s());
+        }
         eng
     }
 
@@ -594,6 +611,11 @@ impl<'a> Engine<'a> {
                     &report.timings,
                 ),
             };
+            // Unstretched evaluation wall, kept for the synthesized
+            // worker stats: a straggler below inflates `cost.eval_wall_s`
+            // and the gap between the two is exactly the imbalance the
+            // profile view must show.
+            let base_eval_wall = cost.eval_wall_s;
 
             // Fault injection (no effect without a plan).
             let plan = self.exec.faults;
@@ -629,6 +651,12 @@ impl<'a> Engine<'a> {
                 if let Some((fi, fault_t, core)) = struck {
                     self.faults_used[fi] = true;
                     self.exec.emit(&Event::Fault { slot, core, t_s: fault_t });
+                    if crate::prof::active() {
+                        crate::prof::mark(
+                            format!("fault slot={slot} core={core}"),
+                            crate::prof::now_s(),
+                        );
+                    }
                     let cores_left = self.slots[slot].comm.cores - 1;
                     if cores_left == 0 {
                         // No survivors: the descent dies where the
@@ -659,6 +687,12 @@ impl<'a> Engine<'a> {
                         recovery_s,
                         t_s: t_next,
                     });
+                    if crate::prof::active() {
+                        crate::prof::mark(
+                            format!("recovered slot={slot} cores_left={cores_left}"),
+                            crate::prof::now_s(),
+                        );
+                    }
                     self.heap.push(HeapItem { t: t_next, slot });
                     continue;
                 }
@@ -697,6 +731,22 @@ impl<'a> Engine<'a> {
                 best_delta,
                 t_s: t_now,
             });
+            // Worker-level stats for this generation: real pool/evaluator
+            // measurements when the profiler is armed (drained at every
+            // iteration boundary so each gen row owns its own window),
+            // else deterministic §4.1 cost-model synthesis on parallel
+            // virtual backends — which is what makes fault-plan
+            // stragglers visible to `ipopcma profile`.
+            let worker = match crate::prof::take_generation() {
+                Some(ws) => Some(ws),
+                None if self.mode == Mode::Parallel => Some(crate::prof::virtual_stats(
+                    self.slots[slot].comm.cores,
+                    lambda,
+                    base_eval_wall,
+                    cost.eval_wall_s,
+                )),
+                None => None,
+            };
             self.exec.emit(&Event::Generation {
                 slot,
                 k,
@@ -710,7 +760,15 @@ impl<'a> Engine<'a> {
                 t_s: t_now,
                 timings: report.timings,
                 kernel,
+                worker,
             });
+            if let Some(ws) = worker {
+                if let Some(acc) = &mut self.slots[slot].worker {
+                    acc.absorb(&ws);
+                } else {
+                    self.slots[slot].worker = Some(ws);
+                }
+            }
 
             // Refresh this slot's recovery image at the configured
             // cadence (committed boundaries only).
@@ -817,6 +875,7 @@ impl<'a> Engine<'a> {
                 stop: s.stop,
                 timings: s.descent.timings,
                 kernel: s.descent.kernel_timings(),
+                worker: s.worker,
                 hits: s.hits,
                 best_delta: s.descent.best_f - fopt,
             })

@@ -1,13 +1,13 @@
-//! Run tracing: the `run_trace/v1` JSONL sink and its reader/aggregator.
+//! Run tracing: the `run_trace/v2` JSONL sink and its reader/aggregator.
 //!
 //! The paper's analysis (Fig. 5 kernel breakdown, Table 2 aggregates)
 //! needs *per-generation* data that previously died inside
 //! [`crate::cmaes::Descent`]. This module turns the
 //! [`Event`] stream into a schema-versioned JSONL file — one
 //! self-describing object per line — that survives the run and feeds
-//! `ipopcma trace-summary`.
+//! `ipopcma trace-summary` and `ipopcma profile`.
 //!
-//! # Schema (`run_trace/v1`)
+//! # Schema (`run_trace/v2`)
 //!
 //! Every line is a JSON object with a `row` discriminator:
 //!
@@ -26,6 +26,16 @@
 //!   `kernel_eig_calls`. Summing the phase fields over a slot's rows
 //!   reproduces `Descent::timings` exactly (same accumulation order);
 //!   a slot's last `kernel_*` values equal `Descent::kernel_timings`.
+//!   **New in v2:** an optional nested `worker` object with this
+//!   generation's per-worker profiling stats
+//!   ([`crate::prof::WorkerStats`]): `workers`, `busy_s`, `idle_s`,
+//!   `utilization`, `claims`, `eval_min_s`, `eval_med_s`, `eval_max_s`,
+//!   `imbalance` (max per-worker busy over mean per-worker busy). The
+//!   block is present when profiling was armed
+//!   ([`crate::api::SolverBuilder::profile`]) or the run used a virtual
+//!   parallel backend (where the §4.1 cost model synthesizes
+//!   deterministic per-core stats — which is how fault-plan stragglers
+//!   show up in `ipopcma profile`); absent otherwise.
 //! * `target_hit` — `slot`, `index`, `target`, `t_s`.
 //! * `descent_end` — `slot`, `k`, `replica`, `stop` (stop-reason name
 //!   or `null` for a budget cut), `end_s`.
@@ -35,13 +45,22 @@
 //!
 //! Determinism: every field except the wall-clock-derived ones — the
 //! phase seconds (`sample_s`/`eval_s`/`update_s`/`eig_s`), the
-//! `kernel_*_s` counters, and `t_s`/`start_s`/`end_s` (virtual time is
-//! charged from measured cost under the serial/threaded backends) — is
-//! a pure function of (problem, config, seed). In particular `sigma`,
-//! `gen_best`, `best_so_far`, `evals`, and `kernel_*_calls` are
-//! bit-identical across `linalg_threads` settings, since the parallel
-//! kernels are bit-identical to serial (asserted by
-//! `rust/tests/trace.rs`).
+//! `kernel_*_s` counters, the `worker` block (timing-valued throughout
+//! when measured; deterministic when cost-model-synthesized), and
+//! `t_s`/`start_s`/`end_s` (virtual time is charged from measured cost
+//! under the serial/threaded backends) — is a pure function of
+//! (problem, config, seed). In particular `sigma`, `gen_best`,
+//! `best_so_far`, `evals`, and `kernel_*_calls` are bit-identical
+//! across `linalg_threads` settings, since the parallel kernels are
+//! bit-identical to serial (asserted by `rust/tests/trace.rs`).
+//!
+//! # v1 compatibility
+//!
+//! v2 is a strict superset of v1: the only change is the optional
+//! `worker` block on `gen` rows. [`read_file`] therefore accepts both
+//! `run_trace/v1` and `run_trace/v2` stamps (v1 rows simply parse with
+//! `worker: None`); the writer always stamps v2. Genuinely unknown
+//! schemas are still rejected.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -51,11 +70,16 @@ use std::path::Path;
 use crate::cmaes::Timings;
 use crate::core::{Event, Observer};
 use crate::metrics::{KernelTimings, SpeedupStats};
+use crate::prof::WorkerStats;
 use crate::report::{ascii_table, fmt_val};
 use crate::runtime::json::Json;
 
-/// Schema stamp carried by every `run_start` row.
-pub const SCHEMA: &str = "run_trace/v1";
+/// Schema stamp carried by every `run_start` row the writer emits.
+pub const SCHEMA: &str = "run_trace/v2";
+
+/// The previous schema, still accepted by [`read_file`] (v2 only adds
+/// the optional `worker` block to `gen` rows).
+pub const SCHEMA_V1: &str = "run_trace/v1";
 
 fn num(v: f64) -> Json {
     Json::Num(v)
@@ -65,7 +89,7 @@ fn unum(v: usize) -> Json {
     Json::Num(v as f64)
 }
 
-/// Streams [`Event`]s into a `run_trace/v1` JSONL file. Attach through
+/// Streams [`Event`]s into a `run_trace/v2` JSONL file. Attach through
 /// [`crate::api::SolverBuilder::trace_path`] (which tees it alongside
 /// any user observer) or use it directly as an [`Observer`].
 ///
@@ -161,6 +185,7 @@ impl Observer for TraceWriter {
                 t_s,
                 timings,
                 kernel,
+                worker,
             } => {
                 let mut fields = vec![
                     ("slot", unum(slot)),
@@ -185,6 +210,19 @@ impl Observer for TraceWriter {
                     fields.push(("kernel_update_calls", unum(kt.update_calls as usize)));
                     fields.push(("kernel_eig_s", num(kt.eig_s)));
                     fields.push(("kernel_eig_calls", unum(kt.eig_calls as usize)));
+                }
+                if let Some(ws) = worker {
+                    let mut w = BTreeMap::new();
+                    w.insert("workers".to_string(), unum(ws.workers));
+                    w.insert("busy_s".to_string(), num(ws.busy_s));
+                    w.insert("idle_s".to_string(), num(ws.idle_s));
+                    w.insert("utilization".to_string(), num(ws.utilization()));
+                    w.insert("claims".to_string(), unum(ws.claims as usize));
+                    w.insert("eval_min_s".to_string(), num(ws.eval_min_s));
+                    w.insert("eval_med_s".to_string(), num(ws.eval_med_s));
+                    w.insert("eval_max_s".to_string(), num(ws.eval_max_s));
+                    w.insert("imbalance".to_string(), num(ws.imbalance));
+                    fields.push(("worker", Json::Obj(w)));
                 }
                 self.row("gen", fields);
             }
@@ -265,9 +303,12 @@ pub struct GenRow {
     pub timings: Timings,
     /// Cumulative kernel counters as of this generation.
     pub kernel: Option<KernelTimings>,
+    /// Per-worker profiling stats (v2 `worker` block; `None` on v1 rows
+    /// and unprofiled serial runs).
+    pub worker: Option<WorkerStats>,
 }
 
-/// A parsed `run_trace/v1` file.
+/// A parsed `run_trace/v1` or `run_trace/v2` file.
 #[derive(Clone, Debug, Default)]
 pub struct TraceFile {
     pub algo: String,
@@ -308,6 +349,18 @@ fn parse_gen(j: &Json, ln: usize) -> Result<GenRow, String> {
     } else {
         None
     };
+    // The worker block is optional and every field inside it defaults to
+    // zero — a truncated or hand-edited block degrades gracefully.
+    let worker = j.get("worker").map(|w| WorkerStats {
+        workers: w.get("workers").and_then(Json::as_usize).unwrap_or(0),
+        busy_s: w.get("busy_s").and_then(Json::as_f64).unwrap_or(0.0),
+        idle_s: w.get("idle_s").and_then(Json::as_f64).unwrap_or(0.0),
+        claims: w.get("claims").and_then(Json::as_usize).unwrap_or(0) as u64,
+        eval_min_s: w.get("eval_min_s").and_then(Json::as_f64).unwrap_or(0.0),
+        eval_med_s: w.get("eval_med_s").and_then(Json::as_f64).unwrap_or(0.0),
+        eval_max_s: w.get("eval_max_s").and_then(Json::as_f64).unwrap_or(0.0),
+        imbalance: w.get("imbalance").and_then(Json::as_f64).unwrap_or(0.0),
+    });
     Ok(GenRow {
         slot: req_usize(j, "slot", ln)?,
         k: req_usize(j, "k", ln)?,
@@ -326,11 +379,13 @@ fn parse_gen(j: &Json, ln: usize) -> Result<GenRow, String> {
             eig_s: req(j, "eig_s", ln)?,
         },
         kernel,
+        worker,
     })
 }
 
-/// Parse a `run_trace/v1` JSONL file, rejecting unknown schemas.
-/// Unknown row kinds are skipped (forward compatibility within v1).
+/// Parse a `run_trace/v1` or `run_trace/v2` JSONL file, rejecting
+/// unknown schemas. Unknown row kinds are skipped (forward
+/// compatibility within a schema).
 pub fn read_file(path: impl AsRef<Path>) -> Result<TraceFile, String> {
     let path = path.as_ref();
     let text =
@@ -350,9 +405,9 @@ pub fn read_file(path: impl AsRef<Path>) -> Result<TraceFile, String> {
         match kind {
             "run_start" => {
                 let schema = j.get("schema").and_then(Json::as_str).unwrap_or("<absent>");
-                if schema != SCHEMA {
+                if schema != SCHEMA && schema != SCHEMA_V1 {
                     return Err(format!(
-                        "line {ln}: unsupported trace schema {schema:?} (want {SCHEMA:?})"
+                        "line {ln}: unsupported trace schema {schema:?} (want {SCHEMA:?} or {SCHEMA_V1:?})"
                     ));
                 }
                 saw_start = true;
@@ -449,6 +504,13 @@ pub fn summary(tf: &TraceFile) -> String {
         tf.checkpoints,
         tf.faults,
     ));
+    // Zero `gen` rows (target hit before the first generation, or a
+    // truncated file) must not panic or render NaN averages — there is
+    // nothing to tabulate, so say so and stop.
+    if tf.gens.is_empty() {
+        out.push_str("(no generations recorded — nothing to summarize)\n");
+        return out;
+    }
     out.push_str(&ascii_table(
         "Per-restart phase seconds",
         &head(&[
@@ -494,6 +556,108 @@ pub fn summary(tf: &TraceFile) -> String {
     out
 }
 
+/// Render the worker-level profile of a parsed trace: one row per
+/// restart aggregating the `worker` blocks of its `gen` rows, with a
+/// STRAGGLER flag on any restart whose peak per-generation imbalance
+/// (max per-worker busy over mean per-worker busy) reaches
+/// `straggler_threshold`. Safe on traces with zero `gen` rows and on
+/// v1 traces without worker blocks.
+pub fn profile_summary(tf: &TraceFile, straggler_threshold: f64) -> String {
+    let mut slots: BTreeMap<usize, Vec<&GenRow>> = BTreeMap::new();
+    for g in &tf.gens {
+        slots.entry(g.slot).or_default().push(g);
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "profile: algo={} dim={} generations={} restarts={} faults={}\n\n",
+        tf.algo,
+        tf.dim,
+        tf.gens.len(),
+        slots.len(),
+        tf.faults,
+    ));
+    if tf.gens.is_empty() {
+        out.push_str("(no generations recorded — nothing to profile)\n");
+        return out;
+    }
+
+    let head = |names: &[&str]| names.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    let mut rows = Vec::new();
+    let mut flagged: Vec<(usize, f64)> = Vec::new();
+    let mut any_worker = false;
+    for (&slot, gens) in &slots {
+        let last = gens.last().expect("non-empty by construction");
+        let mut agg = WorkerStats::default();
+        let mut peak_imbalance = 0.0_f64;
+        let mut have = false;
+        for g in gens {
+            if let Some(ws) = g.worker {
+                agg.absorb(&ws);
+                peak_imbalance = peak_imbalance.max(ws.imbalance);
+                have = true;
+            }
+        }
+        if !have {
+            rows.push(vec![
+                slot.to_string(),
+                last.k.to_string(),
+                last.lambda.to_string(),
+                gens.len().to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]);
+            continue;
+        }
+        any_worker = true;
+        let straggling = peak_imbalance >= straggler_threshold;
+        if straggling {
+            flagged.push((slot, peak_imbalance));
+        }
+        rows.push(vec![
+            slot.to_string(),
+            last.k.to_string(),
+            last.lambda.to_string(),
+            gens.len().to_string(),
+            agg.workers.to_string(),
+            fmt_val(Some(agg.busy_s)),
+            fmt_val(Some(agg.idle_s)),
+            format!("{:.1}%", 100.0 * agg.utilization()),
+            agg.claims.to_string(),
+            fmt_val(Some(peak_imbalance)),
+            if straggling { "STRAGGLER".to_string() } else { "-".to_string() },
+        ]);
+    }
+
+    out.push_str(&ascii_table(
+        "Per-restart worker utilization",
+        &head(&[
+            "slot", "k", "lambda", "gens", "workers", "busy_s", "idle_s", "util", "claims",
+            "peak_imb", "flag",
+        ]),
+        &rows,
+    ));
+    if !any_worker {
+        out.push_str(
+            "\n(no worker blocks in this trace — record one with `optimize --profile`,\n \
+             or any run on a parallel virtual backend)\n",
+        );
+    }
+    for (slot, imb) in &flagged {
+        out.push_str(&format!(
+            "\nstraggler: slot {slot} peak imbalance {imb:.2}x (threshold \
+             {straggler_threshold:.2}x) — one worker's busy time dominates the mean; \
+             check the fault plan or host contention\n"
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -527,6 +691,16 @@ mod tests {
                     eig_s: 0.07,
                     eig_calls: 1,
                 }),
+                worker: Some(WorkerStats {
+                    workers: 4,
+                    busy_s: 0.18,
+                    idle_s: 0.02,
+                    claims: 8,
+                    eval_min_s: 0.01,
+                    eval_med_s: 0.02,
+                    eval_max_s: 0.05,
+                    imbalance: 1.25,
+                }),
             },
             Event::TargetHit { slot: 0, index: 0, target: 100.0, t_s: 0.5 },
             Event::DescentEnd { slot: 0, k: 1, replica: 0, stop: None, end_s: 0.5 },
@@ -554,6 +728,11 @@ mod tests {
         assert_eq!(g.gen_best, Some(2.25));
         assert_eq!(g.timings.sample_s, 0.1);
         assert_eq!(g.kernel.unwrap().gemm_calls, 1);
+        let ws = g.worker.expect("worker block round-trips");
+        assert_eq!((ws.workers, ws.claims), (4, 8));
+        assert_eq!(ws.busy_s, 0.18);
+        assert_eq!(ws.imbalance, 1.25);
+        assert!((ws.utilization() - 0.9).abs() < 1e-12);
         assert_eq!(tf.stops.get(&0), Some(&None)); // budget cut
         let _ = fs::remove_file(&path);
     }
@@ -576,12 +755,14 @@ mod tests {
             t_s: 0.1,
             timings: Timings::default(),
             kernel: None,
+            worker: None,
         });
         w.finish().unwrap();
         let tf = read_file(&path).unwrap();
         assert_eq!(tf.gens[0].gen_best, None);
         assert_eq!(tf.gens[0].best_so_far, None);
         assert!(tf.gens[0].kernel.is_none());
+        assert!(tf.gens[0].worker.is_none());
         let _ = fs::remove_file(&path);
     }
 
@@ -607,6 +788,96 @@ mod tests {
         assert!(s.contains("Fig. 5"), "{s}");
         assert!(s.contains("Table 2"), "{s}");
         assert!(s.contains("gens/restart"), "{s}");
+        let _ = fs::remove_file(&path);
+    }
+
+    /// The writer stamps v2, and the reader still accepts a v1 file:
+    /// the only schema change is the optional `worker` block.
+    #[test]
+    fn v1_files_still_parse() {
+        let path = tmp("v1compat.jsonl");
+        fs::write(
+            &path,
+            concat!(
+                "{\"row\":\"run_start\",\"schema\":\"run_trace/v1\",\"algo\":\"sequential\",\
+                 \"dim\":3,\"targets\":1}\n",
+                "{\"row\":\"gen\",\"slot\":0,\"k\":1,\"replica\":0,\"gen\":1,\"lambda\":8,\
+                 \"sigma\":1.5,\"gen_best\":2.0,\"best_so_far\":2.0,\"evals\":8,\"t_s\":0.5,\
+                 \"sample_s\":0.1,\"eval_s\":0.2,\"update_s\":0.3,\"eig_s\":0.4}\n",
+            ),
+        )
+        .unwrap();
+        let tf = read_file(&path).unwrap();
+        assert_eq!(tf.algo, "sequential");
+        assert_eq!(tf.gens.len(), 1);
+        assert!(tf.gens[0].worker.is_none(), "v1 rows parse with worker: None");
+        // And both renderers handle the v1 file.
+        assert!(summary(&tf).contains("Per-restart phase seconds"));
+        assert!(profile_summary(&tf, 1.5).contains("no worker blocks"));
+        let _ = fs::remove_file(&path);
+    }
+
+    /// Regression (satellite): a trace with zero `gen` rows — target hit
+    /// at generation 0 or a truncated file — must not panic and must not
+    /// print NaN from either renderer.
+    #[test]
+    fn zero_gen_trace_summarizes_without_nan() {
+        let path = tmp("zerogen.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        w.on_event(&Event::RunStart { algo: "sequential", dim: 2, targets: 1 });
+        w.on_event(&Event::RunEnd { best_delta: 0.0, end_s: 0.0, total_evals: 0, descents: 0 });
+        w.finish().unwrap();
+        let tf = read_file(&path).unwrap();
+        assert!(tf.gens.is_empty());
+        let s = summary(&tf);
+        assert!(s.contains("no generations recorded"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
+        let p = profile_summary(&tf, 1.5);
+        assert!(p.contains("no generations recorded"), "{p}");
+        assert!(!p.contains("NaN"), "{p}");
+        let _ = fs::remove_file(&path);
+    }
+
+    /// `profile_summary` renders the utilization table from worker
+    /// blocks and flags a high-imbalance restart as a straggler.
+    #[test]
+    fn profile_summary_flags_high_imbalance() {
+        let path = tmp("profstraggler.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        let mut events = sample_events();
+        // Second restart with a straggler-shaped worker block.
+        events.insert(
+            5,
+            Event::Generation {
+                slot: 1,
+                k: 2,
+                replica: 0,
+                gen: 1,
+                lambda: 16,
+                sigma: 1.0,
+                gen_best: 1.0,
+                best_so_far: 1.0,
+                evals: 16,
+                t_s: 1.0,
+                timings: Timings::default(),
+                kernel: None,
+                worker: Some(crate::prof::virtual_stats(6, 16, 1.0, 8.0)),
+            },
+        );
+        for e in events {
+            w.on_event(&e);
+        }
+        w.finish().unwrap();
+        let tf = read_file(&path).unwrap();
+        let p = profile_summary(&tf, 1.5);
+        assert!(p.contains("Per-restart worker utilization"), "{p}");
+        assert!(p.contains("STRAGGLER"), "{p}");
+        assert!(p.contains("straggler: slot 1"), "{p}");
+        assert!(!p.contains("straggler: slot 0"), "{p}");
+        assert!(!p.contains("NaN"), "{p}");
+        // An all-balanced trace below threshold raises no flag.
+        let calm = profile_summary(&tf, 10.0);
+        assert!(!calm.contains("STRAGGLER"), "{calm}");
         let _ = fs::remove_file(&path);
     }
 }

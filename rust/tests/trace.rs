@@ -1,9 +1,11 @@
-//! Acceptance tests for the `run_trace/v1` pipeline: the JSONL sink
+//! Acceptance tests for the `run_trace/v2` pipeline: the JSONL sink
 //! attached through `SolverBuilder::trace_path` must agree with the
 //! in-memory `RunReport` bit-for-bit, its deterministic fields must be
-//! bit-identical across `linalg_threads` settings, and a NaN objective
+//! bit-identical across `linalg_threads` settings, a NaN objective
 //! must terminate the descent restartably (leaving a `descent_end`
-//! annotation) while the IPOP run continues to the solution.
+//! annotation) while the IPOP run continues to the solution, and a
+//! teed trace sink must deliver every event to the other arm even when
+//! its own writes fail (the error surfacing at `finish()`).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -50,7 +52,7 @@ fn trace_rows_match_report() {
     // The first line is a schema-stamped run_start row.
     let text = std::fs::read_to_string(&path).unwrap();
     let first = text.lines().next().unwrap();
-    assert!(first.contains("run_start") && first.contains("run_trace/v1"), "{first}");
+    assert!(first.contains("run_start") && first.contains("run_trace/v2"), "{first}");
 
     let tf = read_file(&path).unwrap();
     assert_eq!(tf.algo, "sequential-ipop");
@@ -216,4 +218,73 @@ fn nan_objective_restarts_and_run_continues() {
     assert_eq!(slot0[0].gen_best, None);
 
     let _ = std::fs::remove_file(&path);
+}
+
+/// A trace sink whose device is full must not disturb the other arm of
+/// a `Tee`: every event still reaches the second observer, in order,
+/// and the deferred write error surfaces at `TraceWriter::finish()` —
+/// never mid-run. `/dev/full` accepts `File::create` but fails every
+/// write with ENOSPC; the failure is only seen when the writer's
+/// internal buffer (8 KiB) first spills, i.e. mid-stream.
+#[cfg(unix)]
+#[test]
+fn teed_trace_write_error_defers_to_finish() {
+    use ipopcma::core::{Event, Observer, Recorder, Tee};
+    use ipopcma::trace::TraceWriter;
+
+    if !std::path::Path::new("/dev/full").exists() {
+        eprintln!("skipping: no /dev/full on this host");
+        return;
+    }
+    let mut tw = TraceWriter::create("/dev/full").expect("open of /dev/full succeeds");
+    let mut rec = Recorder::new();
+    let n_gens = 300usize; // ≈90 KiB of rows — far past the first spill.
+    {
+        let mut tee = Tee(&mut tw, &mut rec);
+        tee.on_event(&Event::RunStart { algo: "sequential-ipop", dim: 4, targets: 2 });
+        for g in 0..n_gens {
+            tee.on_event(&Event::Generation {
+                slot: 0,
+                k: 1,
+                replica: 0,
+                gen: g,
+                lambda: 8,
+                sigma: 0.5,
+                gen_best: 1.0,
+                best_so_far: 0.5,
+                evals: 8 * (g + 1),
+                t_s: g as f64 * 0.01,
+                timings: Timings::default(),
+                kernel: None,
+                worker: None,
+            });
+        }
+        tee.on_event(&Event::RunEnd {
+            best_delta: 0.5,
+            end_s: 3.0,
+            total_evals: 8 * n_gens,
+            descents: 1,
+        });
+    }
+
+    // The healthy arm saw the complete stream, in order.
+    assert_eq!(rec.events.len(), n_gens + 2);
+    assert!(matches!(rec.events.first(), Some(Event::RunStart { .. })));
+    assert!(matches!(rec.events.last(), Some(Event::RunEnd { .. })));
+    for (i, e) in rec.events[1..=n_gens].iter().enumerate() {
+        match e {
+            Event::Generation { gen, .. } => assert_eq!(*gen, i, "generation order"),
+            other => panic!("event {i} is not a generation: {other:?}"),
+        }
+    }
+
+    // The sick arm reports its ENOSPC only now.
+    let err = tw.finish().expect_err("full device must surface a write error");
+    assert_eq!(err.raw_os_error(), Some(libc_enospc()), "{err}");
+}
+
+/// ENOSPC without libc: value is 28 on every Unix Rust targets.
+#[cfg(unix)]
+fn libc_enospc() -> i32 {
+    28
 }
