@@ -28,7 +28,9 @@ use crate::ipop::IpopConfig;
 use crate::metrics::{paper_targets, KernelTimings};
 use crate::persist::SnapshotStore;
 use crate::runtime::json::Json;
-use crate::strategies::{Algo, Checkpoint, Exec, RunTrace, SnapshotSink, VirtualConfig};
+use crate::strategies::{
+    Algo, Checkpoint, Exec, RetryPolicy, RunTrace, SnapshotSink, VirtualConfig,
+};
 use crate::trace::TraceWriter;
 
 use super::backend::Backend;
@@ -64,6 +66,8 @@ impl Solver {
             override_cfg: None,
             checkpoint_dir: None,
             checkpoint_every: 25,
+            checkpoint_sink: None,
+            checkpoint_retry: RetryPolicy::default(),
             resume_from: None,
             faults: None,
             trace_path: None,
@@ -93,6 +97,8 @@ pub struct SolverBuilder<P> {
     override_cfg: Option<VirtualConfig>,
     checkpoint_dir: Option<PathBuf>,
     checkpoint_every: usize,
+    checkpoint_sink: Option<Box<dyn SnapshotSink>>,
+    checkpoint_retry: RetryPolicy,
     resume_from: Option<PathBuf>,
     faults: Option<FaultPlan>,
     trace_path: Option<PathBuf>,
@@ -209,10 +215,32 @@ impl<P: Problem + 'static> SolverBuilder<P> {
     }
 
     /// Checkpoint cadence in engine iterations (default 25). Only takes
-    /// effect when [`SolverBuilder::checkpoint_dir`] is set.
+    /// effect when a checkpoint destination
+    /// ([`SolverBuilder::checkpoint_dir`] or
+    /// [`SolverBuilder::checkpoint_sink`]) is set.
     pub fn checkpoint_every(mut self, iters: usize) -> Self {
         assert!(iters >= 1, "checkpoint cadence must be at least 1");
         self.checkpoint_every = iters;
+        self
+    }
+
+    /// Send checkpoints to a custom [`SnapshotSink`] instead of an
+    /// on-disk [`SnapshotStore`] — fault injection for the degraded-mode
+    /// path (e.g. [`crate::strategies::FailingSink`]) or alternative
+    /// storage. Takes precedence over
+    /// [`SolverBuilder::checkpoint_dir`].
+    pub fn checkpoint_sink(mut self, sink: Box<dyn SnapshotSink>) -> Self {
+        self.checkpoint_sink = Some(sink);
+        self
+    }
+
+    /// Retry policy for failed checkpoint writes (default: 3 attempts,
+    /// 50 ms exponential backoff, real sleep). When every attempt fails
+    /// the run *continues* with checkpointing disabled, surfacing the
+    /// degradation through `Event::CheckpointDegraded` and
+    /// [`RunReport::checkpoint_degraded`].
+    pub fn checkpoint_retry(mut self, retry: RetryPolicy) -> Self {
+        self.checkpoint_retry = retry;
         self
     }
 
@@ -365,9 +393,12 @@ impl<P: Problem + 'static> SolverBuilder<P> {
             None => Some(self.config()),
         };
 
-        let mut store = match &self.checkpoint_dir {
-            Some(dir) => Some(SnapshotStore::open(dir).map_err(|e| e.to_string())?),
-            None => None,
+        // A custom sink (fault injection / alternative storage) beats
+        // the on-disk store.
+        let mut custom_sink = self.checkpoint_sink;
+        let mut store = match (&custom_sink, &self.checkpoint_dir) {
+            (None, Some(dir)) => Some(SnapshotStore::open(dir).map_err(|e| e.to_string())?),
+            _ => None,
         };
 
         let mut pool = match self.backend {
@@ -401,12 +432,19 @@ impl<P: Problem + 'static> SolverBuilder<P> {
             (None, None) => None,
         };
 
+        let sink: Option<&mut dyn SnapshotSink> = match (custom_sink.as_mut(), store.as_mut())
+        {
+            (Some(s), _) => Some(s.as_mut()),
+            (None, Some(st)) => Some(st as &mut dyn SnapshotSink),
+            (None, None) => None,
+        };
         let exec = Exec {
             eval: pool.as_mut().map(|p| p as &mut dyn BatchEvaluator),
             observer,
-            checkpoint: store.as_mut().map(|s| Checkpoint {
+            checkpoint: sink.map(|sink| Checkpoint {
                 every: self.checkpoint_every,
-                sink: s as &mut dyn SnapshotSink,
+                sink,
+                retry: self.checkpoint_retry,
             }),
             faults: self.faults.as_ref(),
         };
@@ -536,6 +574,13 @@ impl RunReport {
         self.trace.total_evals
     }
 
+    /// `Some(last sink error)` when checkpointing was disabled mid-run
+    /// after exhausting its retries (the run itself still completed);
+    /// `None` on a healthy run.
+    pub fn checkpoint_degraded(&self) -> Option<&str> {
+        self.trace.checkpoint_degraded.as_deref()
+    }
+
     /// Serialize the report (identity, hits, per-descent traces).
     pub fn to_json(&self) -> Json {
         fn num(v: f64) -> Json {
@@ -558,6 +603,11 @@ impl RunReport {
         obj.insert("wall_s".to_string(), num(self.wall_s));
         obj.insert("best_delta".to_string(), num(self.trace.best_delta));
         obj.insert("total_evals".to_string(), num(self.trace.total_evals as f64));
+        // Only surfaced when the run actually degraded, so healthy
+        // reports keep their exact key set.
+        if let Some(err) = &self.trace.checkpoint_degraded {
+            obj.insert("checkpoint_degraded".to_string(), Json::Str(err.clone()));
+        }
         obj.insert(
             "targets".to_string(),
             Json::Arr(self.targets.iter().map(|&t| num(t)).collect()),

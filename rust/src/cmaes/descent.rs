@@ -49,6 +49,14 @@ pub struct DescentState {
 /// threaded scatter/gather pool, or a virtual-cluster charger.
 pub trait BatchEvaluator {
     fn eval_batch(&mut self, xs: &Matrix, out: &mut [f64]);
+
+    /// Number of objective calls since the last drain whose panic was
+    /// contained and mapped to NaN fitness (see
+    /// [`crate::evaluator::ThreadPoolEvaluator`]). Draining resets the
+    /// counter. Evaluators that let panics propagate return 0.
+    fn take_panics(&mut self) -> usize {
+        0
+    }
 }
 
 /// Adapter: any point-wise closure is a (serial) batch evaluator.
@@ -111,6 +119,9 @@ pub struct IterationReport {
     pub best_so_far: f64,
     pub timings: Timings,
     pub stop: Option<StopReason>,
+    /// Objective panics contained during this generation's evaluation
+    /// (each one became NaN fitness); 0 on evaluators that don't catch.
+    pub eval_panics: usize,
 }
 
 /// One CMA-ES descent with population λ (Algorithm 1).
@@ -275,6 +286,7 @@ impl Descent {
                     best_so_far: self.best_f,
                     timings: t,
                     stop: self.stopped,
+                    eval_panics: 0,
                 };
             }
         }
@@ -294,9 +306,12 @@ impl Descent {
         }
         t.sample_s += t0.elapsed().as_secs_f64();
 
-        // Evaluate.
+        // Evaluate. Contained objective panics (mapped to NaN fitness by
+        // the evaluator) are drained here so they can't leak into a later
+        // generation's accounting.
         let t0 = Instant::now();
         eval.eval_batch(&self.xs, &mut self.fitness);
+        let eval_panics = eval.take_panics();
         t.eval_s += t0.elapsed().as_secs_f64();
         self.evals += lambda;
 
@@ -313,7 +328,14 @@ impl Descent {
             // instead (IPOP answers with a fresh descent at doubled λ)
             // and leave best_f/best_x untouched.
             t.update_s += t0.elapsed().as_secs_f64();
-            self.stopped = Some(StopReason::NonFiniteFitness);
+            // When contained panics alone account for the whole
+            // generation, name the cause precisely; either way the stop
+            // is restartable and best_f/best_x stay untouched.
+            self.stopped = Some(if eval_panics >= lambda {
+                StopReason::EvalPanic
+            } else {
+                StopReason::NonFiniteFitness
+            });
             self.timings.add(&t);
             return IterationReport {
                 gen: self.state.gen,
@@ -322,6 +344,7 @@ impl Descent {
                 best_so_far: self.best_f,
                 timings: t,
                 stop: self.stopped,
+                eval_panics,
             };
         }
         if gen_best < self.best_f {
@@ -446,6 +469,7 @@ impl Descent {
             best_so_far: self.best_f,
             timings: t,
             stop,
+            eval_panics,
         }
     }
 
@@ -658,6 +682,32 @@ mod tests {
         // Distribution state was not advanced with garbage.
         assert_eq!(d.state.gen, 0);
         assert!(d.state.mean.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn whole_generation_of_contained_panics_stops_with_evalpanic() {
+        // Mock of a panic-containing evaluator: every point's panic was
+        // contained to NaN, and take_panics reports a full generation.
+        struct AllPanics {
+            pending: usize,
+        }
+        impl BatchEvaluator for AllPanics {
+            fn eval_batch(&mut self, xs: &Matrix, out: &mut [f64]) {
+                out.fill(f64::NAN);
+                self.pending = xs.cols();
+            }
+            fn take_panics(&mut self) -> usize {
+                std::mem::take(&mut self.pending)
+            }
+        }
+        let mut d = make_descent(4, 8, 17);
+        let rep = d.run_iteration(&mut AllPanics { pending: 0 });
+        assert_eq!(rep.stop, Some(StopReason::EvalPanic));
+        assert_eq!(rep.eval_panics, 8);
+        assert!(rep.stop.unwrap().is_restartable());
+        // Same containment guarantees as the NaN path.
+        assert_eq!(d.best_f, f64::INFINITY);
+        assert_eq!(d.state.gen, 0);
     }
 
     #[test]

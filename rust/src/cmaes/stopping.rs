@@ -32,6 +32,11 @@ pub enum StopReason {
     /// objective), so ranking carries no information — recoverable by
     /// restarting the descent.
     NonFiniteFitness,
+    /// Every evaluation of a generation was lost to a panicking
+    /// objective (each contained panic becomes NaN fitness; this fires
+    /// instead of [`StopReason::NonFiniteFitness`] when the panics alone
+    /// account for the whole generation) — recoverable by restarting.
+    EvalPanic,
     /// Iteration budget of the descent exhausted.
     MaxIter,
     /// Evaluation budget exhausted.
@@ -58,6 +63,7 @@ impl StopReason {
             StopReason::Stagnation => "stagnation",
             StopReason::EigenFailure => "eigenfailure",
             StopReason::NonFiniteFitness => "nonfinitefitness",
+            StopReason::EvalPanic => "evalpanic",
             StopReason::MaxIter => "maxiter",
             StopReason::MaxEvals => "maxevals",
         }
@@ -77,6 +83,7 @@ impl StopReason {
             StopReason::Stagnation,
             StopReason::EigenFailure,
             StopReason::NonFiniteFitness,
+            StopReason::EvalPanic,
             StopReason::MaxIter,
             StopReason::MaxEvals,
         ];
@@ -442,6 +449,7 @@ mod tests {
             StopReason::Stagnation,
             StopReason::EigenFailure,
             StopReason::NonFiniteFitness,
+            StopReason::EvalPanic,
             StopReason::MaxIter,
             StopReason::MaxEvals,
         ] {
@@ -455,6 +463,7 @@ mod tests {
         assert!(StopReason::TolFun.is_restartable());
         assert!(StopReason::EigenFailure.is_restartable());
         assert!(StopReason::NonFiniteFitness.is_restartable());
+        assert!(StopReason::EvalPanic.is_restartable());
         assert!(!StopReason::MaxEvals.is_restartable());
         assert!(!StopReason::TargetReached.is_restartable());
     }

@@ -15,7 +15,10 @@
 //! * on a resumed run, `Restored` follows `RunStart` and precedes every
 //!   other event; `Checkpoint` events carry strictly increasing `seq`;
 //! * every `Fault` is immediately followed by its `Recovered` (or by the
-//!   `DescentEnd` of the slot when no cores survive).
+//!   `DescentEnd` of the slot when no cores survive);
+//! * `EvalPanic` precedes the `Iteration` of the generation whose
+//!   contained panics it reports; `CheckpointDegraded` is emitted at
+//!   most once per run, after which no further `Checkpoint` appears.
 
 use crate::cmaes::{StopReason, Timings};
 use crate::metrics::KernelTimings;
@@ -69,6 +72,17 @@ pub enum Event {
     /// Fault injection: a virtual rank of `slot`'s communicator died at
     /// virtual time `t_s`, losing the iteration in flight.
     Fault { slot: usize, core: usize, t_s: f64 },
+    /// Real-backend fault containment: `panics` objective calls of
+    /// `slot`'s generation (population `lambda`) panicked and were
+    /// contained to NaN fitness ([`crate::evaluator`]). The run
+    /// continues; when `panics == lambda` the descent stops with the
+    /// restartable `StopReason::EvalPanic`.
+    EvalPanic { slot: usize, panics: usize, lambda: usize, t_s: f64 },
+    /// Checkpointing was disabled for the rest of the run after a
+    /// snapshot write failed every retry ([`crate::strategies`]'
+    /// `RetryPolicy`); the run itself continues. `error` is the last
+    /// sink failure.
+    CheckpointDegraded { error: String, t_s: f64 },
     /// The engine recovered `slot` from its last in-memory snapshot onto
     /// `cores_left` surviving cores, charging `recovery_s` of virtual
     /// time for the state re-scatter (§4.1 comm model).
@@ -166,6 +180,8 @@ mod tests {
             Event::Checkpoint { .. } => "checkpoint",
             Event::Restored { .. } => "restored",
             Event::Fault { .. } => "fault",
+            Event::EvalPanic { .. } => "eval_panic",
+            Event::CheckpointDegraded { .. } => "checkpoint_degraded",
             Event::Recovered { .. } => "recovered",
             Event::RunEnd { .. } => "run_end",
         }

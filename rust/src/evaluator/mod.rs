@@ -16,7 +16,18 @@
 //! paper's scaling results — but the pool is the production path on real
 //! multi-core hosts and is exercised for correctness by the tests and the
 //! end-to-end example.
+//!
+//! **Panic containment.** Every objective call — both the serial scratch
+//! path and the dynamic-claim pool path — runs under
+//! `catch_unwind(AssertUnwindSafe(..))`: a panicking point becomes NaN
+//! fitness (which the NaN-safe ranking orders last) instead of poisoning
+//! the worker pool or unwinding through the solver. Contained panics are
+//! counted and drained per generation through
+//! [`BatchEvaluator::take_panics`]; when a whole generation is lost this
+//! way the descent stops with the restartable
+//! `StopReason::EvalPanic`.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -38,6 +49,25 @@ pub struct ThreadPoolEvaluator {
     /// every iteration through here, so this allocates once per run, not
     /// once per batch).
     scratch: Vec<f64>,
+    /// Objective panics contained since the last `take_panics` drain
+    /// (atomic: pool workers increment concurrently).
+    panics: AtomicUsize,
+}
+
+/// Call the objective with panic containment: a panicking point yields
+/// NaN fitness (ranked last by the NaN-safe ranking), bumps `panics`,
+/// and leaves a prof instant mark on the timeline when profiling is on.
+fn call_contained(obj: &SharedObjective, x: &[f64], panics: &AtomicUsize) -> f64 {
+    match catch_unwind(AssertUnwindSafe(|| obj(x))) {
+        Ok(f) => f,
+        Err(_) => {
+            panics.fetch_add(1, Ordering::Relaxed);
+            if crate::prof::active() {
+                crate::prof::mark("eval panic".to_string(), crate::prof::now_s());
+            }
+            f64::NAN
+        }
+    }
 }
 
 impl ThreadPoolEvaluator {
@@ -49,6 +79,7 @@ impl ThreadPoolEvaluator {
             workers,
             evals: Arc::new(AtomicUsize::new(0)),
             scratch: Vec::new(),
+            panics: AtomicUsize::new(0),
         }
     }
 
@@ -73,10 +104,10 @@ impl ThreadPoolEvaluator {
             // is one relaxed load when profiling is off.
             if crate::prof::active() {
                 let t0 = crate::prof::now_s();
-                *o = (self.objective)(&self.scratch);
+                *o = call_contained(&self.objective, &self.scratch, &self.panics);
                 crate::prof::eval_span(workers, 0, t0, crate::prof::now_s());
             } else {
-                *o = (self.objective)(&self.scratch);
+                *o = call_contained(&self.objective, &self.scratch, &self.panics);
             }
         }
         self.evals.fetch_add(out.len(), Ordering::Relaxed);
@@ -99,6 +130,7 @@ impl BatchEvaluator for ThreadPoolEvaluator {
         let next = AtomicUsize::new(0);
         let results = SharedMut::new(out);
         let obj = &self.objective;
+        let panics = &self.panics;
         // Note: `run`, not `run_labeled` — the per-point eval spans below
         // already account every busy second, so a job-level span would
         // double-count the pool workers' time.
@@ -115,19 +147,24 @@ impl BatchEvaluator for ThreadPoolEvaluator {
                 // SAFETY: index k was claimed by exactly one worker.
                 if crate::prof::active() {
                     let t0 = crate::prof::now_s();
-                    let f = obj(&point);
+                    let f = call_contained(obj, &point, panics);
                     unsafe {
                         results.slice(k, 1)[0] = f;
                     }
                     crate::prof::eval_span(workers, w, t0, crate::prof::now_s());
                 } else {
+                    let f = call_contained(obj, &point, panics);
                     unsafe {
-                        results.slice(k, 1)[0] = obj(&point);
+                        results.slice(k, 1)[0] = f;
                     }
                 }
             }
         });
         self.evals.fetch_add(lambda, Ordering::Relaxed);
+    }
+
+    fn take_panics(&mut self) -> usize {
+        self.panics.swap(0, Ordering::Relaxed)
     }
 }
 
@@ -176,6 +213,39 @@ mod tests {
         );
         let (reason, _) = d.run_to_stop(&mut pool);
         assert_eq!(reason, StopReason::TargetReached, "best={}", d.best_f);
+    }
+
+    #[test]
+    fn panicking_objective_is_contained_to_nan_on_both_paths() {
+        // Silence the default panic hook for the injected panics; the
+        // containment itself is what's under test.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let obj: SharedObjective = Arc::new(|x: &[f64]| {
+            if x[0] < 0.0 {
+                panic!("injected objective panic");
+            }
+            x.iter().map(|v| v * v).sum()
+        });
+
+        // Serial scratch path (workers = 1).
+        let mut serial = ThreadPoolEvaluator::new(obj.clone(), 1);
+        let xs = Matrix::from_fn(2, 6, |r, c| if r == 0 && c == 2 { -1.0 } else { 1.0 });
+        let mut out = vec![0.0; 6];
+        serial.eval_batch(&xs, &mut out);
+        assert!(out[2].is_nan(), "panicking point becomes NaN");
+        assert_eq!(out.iter().filter(|v| v.is_nan()).count(), 1);
+        assert_eq!(serial.take_panics(), 1);
+        assert_eq!(serial.take_panics(), 0, "drain resets the counter");
+
+        // Dynamic-claim pool path (λ ≥ 2·workers).
+        let mut pooled = ThreadPoolEvaluator::new(obj, 3);
+        let xs = Matrix::from_fn(2, 12, |r, c| if r == 0 && c % 4 == 0 { -1.0 } else { 1.0 });
+        let mut out = vec![0.0; 12];
+        pooled.eval_batch(&xs, &mut out);
+        assert_eq!(out.iter().filter(|v| v.is_nan()).count(), 3);
+        assert_eq!(pooled.take_panics(), 3);
+        std::panic::set_hook(prev);
     }
 
     #[test]

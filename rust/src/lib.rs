@@ -56,6 +56,38 @@
 //! the state re-scatter. See the "Durability & fault injection" section
 //! of the [`api`] module docs and `examples/checkpoint_resume.rs`.
 //!
+//! ## Robustness
+//!
+//! Real runs survive real failures; all of the following is enforced by
+//! `rust/tests/robustness.rs`:
+//!
+//! * **A panicking objective** (any backend that evaluates real code:
+//!   `Backend::Threads(n)` for every n) is contained per point —
+//!   `catch_unwind` maps the panic to NaN fitness, which the NaN-safe
+//!   ranking orders last, so a run that panics on 1% of its points is
+//!   bit-identical to one returning NaN on the same points. A fully
+//!   lost generation stops the descent with the restartable
+//!   `StopReason::EvalPanic` (IPOP answers with a fresh descent at
+//!   doubled λ); contained panics are announced as
+//!   [`api::Event::EvalPanic`] and `fault` trace rows. The worker pool
+//!   itself survives panicking jobs ([`linalg::pool::JobPanic`]) — no
+//!   dead workers, no deadlocked barriers, no poisoned locks.
+//! * **A corrupt snapshot** cannot hijack a resume: snapshots and the
+//!   manifest carry an FNV-1a checksum over their canonical JSON;
+//!   `.resume_from(dir)` verifies newest-first, quarantines each
+//!   corrupt file as `snap-NNNNNN.json.corrupt`, and walks back to the
+//!   newest snapshot that still verifies.
+//! * **A failing checkpoint write** is retried with exponential backoff
+//!   ([`strategies::RetryPolicy`], injectable clock); when retries are
+//!   exhausted the run *continues* with checkpointing disabled and the
+//!   degradation is surfaced — `Event::CheckpointDegraded`, a
+//!   `checkpoint_degraded` trace row, [`api::RunReport::checkpoint_degraded`],
+//!   and a CLI warning. [`strategies::FailingSink`] injects this path
+//!   in tests.
+//! * **A crash mid-write** never corrupts existing snapshots: writes go
+//!   through an fsync'd temp file, an atomic rename, and a directory
+//!   fsync (see [`persist`]).
+//!
 //! ## Threading model
 //!
 //! Two pools, one mechanism. All parallelism on the native tier runs

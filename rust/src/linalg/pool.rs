@@ -12,8 +12,19 @@
 //! partition by worker index (see [`chunk`] / [`chunk_aligned`]) into
 //! disjoint output regions, which is how every parallel kernel in
 //! [`crate::linalg`] stays bit-identical to its serial counterpart.
+//!
+//! Panic containment: every participant executes its job under
+//! `catch_unwind`, so a panicking closure can neither kill a pool worker
+//! nor skip the barrier bookkeeping and deadlock the submitter (the
+//! pre-containment failure mode: `pending` never reached zero and the
+//! `done` condvar waited forever). The first panic payload of a job is
+//! captured and surfaces as the typed [`JobPanic`] from
+//! [`WorkerPool::try_run`]; the payload-preserving [`WorkerPool::run`]
+//! re-raises it on the submitting thread once the barrier has completed.
+//! Worker threads survive and keep serving later jobs either way.
 
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
 
 /// A type-erased scoped job. The `'static` lifetime is a lie told only
@@ -29,8 +40,48 @@ struct Slot {
     job: Option<Job>,
     /// Participants (workers + submitting caller) still inside the job.
     pending: usize,
+    /// Participants whose closure panicked during the current epoch.
+    panicked: usize,
+    /// First panic payload of the current epoch (re-raised or returned
+    /// as [`JobPanic`] by the submitter).
+    payload: Option<Box<dyn std::any::Any + Send>>,
+    /// The finished epoch's (panicked, payload) outcome has not yet been
+    /// consumed by its submitter; the next submitter must wait so the
+    /// outcome can't be clobbered.
+    result_pending: bool,
     shutdown: bool,
 }
+
+/// Typed error from [`WorkerPool::try_run`]: one or more participants'
+/// job closure panicked. The barrier still completed and every worker
+/// thread survived to serve later jobs; the first panic payload is
+/// preserved and can be re-raised with [`JobPanic::resume`].
+pub struct JobPanic {
+    /// How many of the job's participants panicked.
+    pub participants: usize,
+    payload: Box<dyn std::any::Any + Send>,
+}
+
+impl JobPanic {
+    /// Re-raise the first captured panic on the current thread.
+    pub fn resume(self) -> ! {
+        std::panic::resume_unwind(self.payload)
+    }
+}
+
+impl std::fmt::Debug for JobPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobPanic").field("participants", &self.participants).finish()
+    }
+}
+
+impl std::fmt::Display for JobPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pool job panicked on {} participant(s)", self.participants)
+    }
+}
+
+impl std::error::Error for JobPanic {}
 
 struct Shared {
     slot: Mutex<Slot>,
@@ -61,6 +112,9 @@ impl WorkerPool {
                 done_epoch: 0,
                 job: None,
                 pending: 0,
+                panicked: 0,
+                payload: None,
+                result_pending: false,
                 shutdown: false,
             }),
             start: Condvar::new(),
@@ -89,9 +143,20 @@ impl WorkerPool {
     /// Work must be partitioned by the worker index into disjoint output
     /// regions; the pool imposes no ordering between participants within
     /// one job. Concurrent `run` calls from different threads serialise
-    /// on the job slot.
+    /// on the job slot. If a participant panics, the barrier still
+    /// completes and the first panic is re-raised here on the submitting
+    /// thread (use [`WorkerPool::try_run`] for a typed error instead).
     pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
-        self.run_inner(None, f);
+        if let Err(p) = self.run_inner(None, f) {
+            p.resume();
+        }
+    }
+
+    /// [`run`](WorkerPool::run), but a panicking participant surfaces as
+    /// the typed [`JobPanic`] instead of re-raising. The pool survives
+    /// either way.
+    pub fn try_run(&self, f: &(dyn Fn(usize) + Sync)) -> Result<(), JobPanic> {
+        self.run_inner(None, f)
     }
 
     /// [`run`](WorkerPool::run) with a profiling label: when the
@@ -101,10 +166,26 @@ impl WorkerPool {
     /// added cost is one relaxed atomic load per participant, no
     /// allocation and no extra lock.
     pub fn run_labeled(&self, kind: &'static str, f: &(dyn Fn(usize) + Sync)) {
-        self.run_inner(Some(kind), f);
+        if let Err(p) = self.run_inner(Some(kind), f) {
+            p.resume();
+        }
     }
 
-    fn run_inner(&self, kind: Option<&'static str>, f: &(dyn Fn(usize) + Sync)) {
+    /// [`run_labeled`](WorkerPool::run_labeled) with the typed-error
+    /// panic contract of [`try_run`](WorkerPool::try_run).
+    pub fn try_run_labeled(
+        &self,
+        kind: &'static str,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> Result<(), JobPanic> {
+        self.run_inner(Some(kind), f)
+    }
+
+    fn run_inner(
+        &self,
+        kind: Option<&'static str>,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> Result<(), JobPanic> {
         let width = self.threads;
         let wrapped = move |w: usize| match kind {
             Some(k) if crate::prof::active() => {
@@ -115,8 +196,10 @@ impl WorkerPool {
             _ => f(w),
         };
         if width == 1 {
-            wrapped(0);
-            return;
+            return match catch_unwind(AssertUnwindSafe(|| wrapped(0))) {
+                Ok(()) => Ok(()),
+                Err(payload) => Err(JobPanic { participants: 1, payload }),
+            };
         }
         let wrapped_ref: &(dyn Fn(usize) + Sync) = &wrapped;
         // SAFETY: the job reference is only reachable through the slot,
@@ -130,24 +213,65 @@ impl WorkerPool {
         };
         let my_epoch;
         {
-            let mut slot = self.shared.slot.lock().unwrap();
-            // Wait for any in-flight job (another submitter) to drain.
-            while slot.job.is_some() {
-                slot = self.shared.done.wait(slot).unwrap();
+            let mut slot = lock(&self.shared.slot);
+            // Wait for any in-flight job (another submitter) to drain
+            // *and* for its outcome to be consumed by its submitter.
+            while slot.job.is_some() || slot.result_pending {
+                slot = wait_done(&self.shared, slot);
             }
             slot.epoch += 1;
             my_epoch = slot.epoch;
             slot.job = Some(job);
             slot.pending = self.threads;
+            slot.panicked = 0;
+            slot.payload = None;
             self.shared.start.notify_all();
         }
-        // Participate as the highest worker index.
-        wrapped(width - 1);
-        let mut slot = self.shared.slot.lock().unwrap();
+        // Participate as the highest worker index. Contain a panic so
+        // finish_one always runs and the barrier cannot deadlock.
+        let mine = catch_unwind(AssertUnwindSafe(|| wrapped(width - 1)));
+        let mut slot = lock(&self.shared.slot);
+        if let Err(p) = mine {
+            record_panic(&mut slot, p);
+        }
         finish_one(&self.shared, &mut slot);
         while slot.done_epoch < my_epoch {
-            slot = self.shared.done.wait(slot).unwrap();
+            slot = wait_done(&self.shared, slot);
         }
+        // Take this epoch's outcome, then release the slot to the next
+        // submitter (who is blocked on result_pending).
+        let participants = slot.panicked;
+        let payload = slot.payload.take();
+        slot.result_pending = false;
+        drop(slot);
+        self.shared.done.notify_all();
+        match payload {
+            Some(payload) => Err(JobPanic { participants, payload }),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Poison-tolerant lock. Job closures run outside the lock and under
+/// `catch_unwind`, so a poisoned mutex could only come from a panic in
+/// this module's own bookkeeping; recovering the guard beats cascading
+/// a secondary panic through every pool user.
+fn lock(m: &Mutex<Slot>) -> MutexGuard<'_, Slot> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait_start<'a>(shared: &Shared, guard: MutexGuard<'a, Slot>) -> MutexGuard<'a, Slot> {
+    shared.start.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait_done<'a>(shared: &Shared, guard: MutexGuard<'a, Slot>) -> MutexGuard<'a, Slot> {
+    shared.done.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+fn record_panic(slot: &mut Slot, payload: Box<dyn std::any::Any + Send>) {
+    slot.panicked += 1;
+    if slot.payload.is_none() {
+        slot.payload = Some(payload);
     }
 }
 
@@ -156,6 +280,7 @@ fn finish_one(shared: &Shared, slot: &mut Slot) {
     if slot.pending == 0 {
         slot.job = None;
         slot.done_epoch = slot.epoch;
+        slot.result_pending = true;
         shared.done.notify_all();
     }
 }
@@ -169,7 +294,7 @@ fn worker_loop(shared: &Shared, worker: usize, width: usize) {
         // profiling off the hot path stays one relaxed load per wakeup.
         let mut idle_t0: Option<f64> = None;
         let job = {
-            let mut slot = shared.slot.lock().unwrap();
+            let mut slot = lock(&shared.slot);
             loop {
                 if slot.shutdown {
                     return;
@@ -181,14 +306,19 @@ fn worker_loop(shared: &Shared, worker: usize, width: usize) {
                 if idle_t0.is_none() && crate::prof::active() {
                     idle_t0 = Some(crate::prof::now_s());
                 }
-                slot = shared.start.wait(slot).unwrap();
+                slot = wait_start(shared, slot);
             }
         };
         if let Some(t0) = idle_t0 {
             crate::prof::idle_span(width, worker, t0, crate::prof::now_s());
         }
-        job(worker);
-        let mut slot = shared.slot.lock().unwrap();
+        // Contain a panicking job: the worker survives to serve later
+        // epochs and finish_one below keeps the barrier honest.
+        let result = catch_unwind(AssertUnwindSafe(|| job(worker)));
+        let mut slot = lock(&shared.slot);
+        if let Err(p) = result {
+            record_panic(&mut slot, p);
+        }
         finish_one(shared, &mut slot);
     }
 }
@@ -196,7 +326,7 @@ fn worker_loop(shared: &Shared, worker: usize, width: usize) {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut slot = self.shared.slot.lock().unwrap();
+            let mut slot = lock(&self.shared.slot);
             slot.shutdown = true;
             self.shared.start.notify_all();
         }
@@ -214,7 +344,9 @@ pub fn global(threads: usize) -> &'static WorkerPool {
     static POOLS: OnceLock<Mutex<Vec<(usize, &'static WorkerPool)>>> = OnceLock::new();
     let threads = threads.max(1);
     let registry = POOLS.get_or_init(|| Mutex::new(Vec::new()));
-    let mut pools = registry.lock().unwrap();
+    // Poison-tolerant for the same reason as the slot lock: nothing
+    // user-supplied ever runs while this registry lock is held.
+    let mut pools = registry.lock().unwrap_or_else(|e| e.into_inner());
     if let Some(&(_, pool)) = pools.iter().find(|(t, _)| *t == threads) {
         return pool;
     }
@@ -355,6 +487,55 @@ mod tests {
         });
         hits += cell.load(Ordering::Relaxed);
         assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn panicking_job_yields_typed_error_and_pool_survives() {
+        // Silence the default hook for the injected panics.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let pool = WorkerPool::new(4);
+
+        // One participant panics: typed error, barrier completes.
+        let err = pool
+            .try_run(&|w| {
+                if w == 1 {
+                    panic!("injected job panic");
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err.participants, 1, "{err}");
+
+        // Every participant panics: still no deadlock, count is honest.
+        let err = pool.try_run(&|_w| panic!("all panic")).unwrap_err();
+        assert_eq!(err.participants, 4);
+
+        // The pool keeps serving jobs afterwards — no dead workers, no
+        // stuck barrier.
+        let count = AtomicUsize::new(0);
+        pool.run(&|_w| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+
+        // `run` re-raises the original payload on the submitter.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|w| {
+                if w == 0 {
+                    panic!("payload survives");
+                }
+            });
+        }));
+        let payload = caught.expect_err("run must re-raise the job panic");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "payload survives");
+
+        // Width-1 pools contain inline jobs the same way.
+        let inline = WorkerPool::new(1);
+        let err = inline.try_run(&|_w| panic!("inline")).unwrap_err();
+        assert_eq!(err.participants, 1);
+        inline.run(&|_w| {});
+        std::panic::set_hook(prev);
     }
 
     #[test]

@@ -42,7 +42,7 @@ fn main() {
                  usage:\n\
                  \x20 ipopcma info\n\
                  \x20 ipopcma optimize --fid 10 --dim 10 [--lambda-start 8] [--kmax 16] [--target 1e-8] [--max-evals 500000] [--seed 0] [--workers 1] [--linalg-threads 1] [--json out.json]\n\
-                 \x20                  [--checkpoint-dir DIR] [--checkpoint-every 25] [--resume DIR|SNAP.json] [--trace out.jsonl] [--profile out.trace.json]\n\
+                 \x20                  [--checkpoint-dir DIR] [--checkpoint-every 25] [--checkpoint-retries 3] [--resume DIR|SNAP.json] [--trace out.jsonl] [--profile out.trace.json]\n\
                  \x20 ipopcma compare  --fid 7  --dim 10 [--cost-ms 1] [--seed 0]\n\
                  \x20 ipopcma suite    --dim 10 [--cost-ms 0] [--seed 0]\n\
                  \x20 ipopcma bench-diff --baseline benches/baseline/BENCH_linalg.json --current BENCH_linalg.json [--warn-pct 10]\n\
@@ -88,6 +88,7 @@ fn optimize(args: &Args) -> Result<(), String> {
     let json_path = args.get("json").map(str::to_string);
     let checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
     let checkpoint_every: usize = args.typed("checkpoint-every", 25)?;
+    let checkpoint_retries: usize = args.typed("checkpoint-retries", 3)?;
     let resume = args.get("resume").map(str::to_string);
     let trace_path = args.get("trace").map(str::to_string);
     let profile_path = args.get("profile").map(str::to_string);
@@ -112,6 +113,9 @@ fn optimize(args: &Args) -> Result<(), String> {
     if checkpoint_every < 1 {
         return Err(format!("--checkpoint-every must be >= 1, got {checkpoint_every}"));
     }
+    if checkpoint_retries < 1 {
+        return Err(format!("--checkpoint-retries must be >= 1, got {checkpoint_retries}"));
+    }
 
     let inst = Instance::new(fid, dim, seed + 1);
     let name = ipopcma::bbob::Instance::name(&inst);
@@ -130,7 +134,11 @@ fn optimize(args: &Args) -> Result<(), String> {
         .eval_budget(max_evals)
         .linalg_threads(linalg_threads)
         .seed(seed)
-        .checkpoint_every(checkpoint_every);
+        .checkpoint_every(checkpoint_every)
+        .checkpoint_retry(ipopcma::strategies::RetryPolicy {
+            attempts: checkpoint_retries,
+            ..Default::default()
+        });
     if let Some(dir) = &checkpoint_dir {
         builder = builder.checkpoint_dir(dir);
     }
@@ -161,6 +169,11 @@ fn optimize(args: &Args) -> Result<(), String> {
             d.iters,
             d.best_delta,
             d.stop.map(|s| s.name()).unwrap_or("budget")
+        );
+    }
+    if let Some(err) = report.checkpoint_degraded() {
+        println!(
+            "WARNING: checkpointing degraded mid-run ({err}) — later progress has no snapshots"
         );
     }
     if let Some(dir) = &checkpoint_dir {

@@ -36,6 +36,63 @@ fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json, PersistError> {
     j.get(key).ok_or_else(|| corrupt(format!("missing field '{key}'")))
 }
 
+// ---- integrity checksum ---------------------------------------------------
+
+/// FNV-1a 64-bit over the canonical JSON text. FNV is not cryptographic;
+/// it only needs to catch the storage faults resume cares about
+/// (truncation, bit flips, partial writes), and being dependency-free it
+/// matches the crate's no-deps rule.
+pub fn fnv1a(text: &str) -> u64 {
+    let mut hash: u64 = 0xcbf29ce484222325;
+    for b in text.as_bytes() {
+        hash ^= u64::from(*b);
+        hash = hash.wrapping_mul(0x100000001b3);
+    }
+    hash
+}
+
+/// Stamp a `"checksum"` field into a top-level JSON object: FNV-1a over
+/// the object's canonical text *without* the checksum field. Canonical
+/// here means this crate's own writer (sorted keys via `BTreeMap`,
+/// shortest-round-trip numbers), which is stable under
+/// `write ∘ parse ∘ write` — so the reader can re-render and compare.
+pub(crate) fn stamp_checksum(j: &mut Json) {
+    let mut text = String::new();
+    j.write(&mut text);
+    let sum = fnv1a(&text);
+    if let Json::Obj(m) = j {
+        m.insert("checksum".to_string(), Json::Str(format!("{sum:016x}")));
+    }
+}
+
+/// Verify an optionally-present `"checksum"` field. Objects without one
+/// (pre-robustness snapshots) pass; a present-but-wrong checksum is a
+/// typed [`PersistError::Corrupt`] so `load_resume` can quarantine the
+/// file and walk back to an older snapshot.
+pub(crate) fn verify_checksum(j: &Json) -> Result<(), PersistError> {
+    let m = match j {
+        Json::Obj(m) => m,
+        _ => return Err(corrupt("expected top-level object")),
+    };
+    let stored = match m.get("checksum") {
+        None => return Ok(()),
+        Some(c) => c.as_str().ok_or_else(|| corrupt("checksum: expected hex string"))?,
+    };
+    let want = u64::from_str_radix(stored, 16)
+        .map_err(|_| corrupt(format!("checksum: bad hex '{stored}'")))?;
+    let mut body = m.clone();
+    body.remove("checksum");
+    let mut text = String::new();
+    Json::Obj(body).write(&mut text);
+    let got = fnv1a(&text);
+    if got != want {
+        return Err(corrupt(format!(
+            "checksum mismatch: stored {stored}, computed {got:016x}"
+        )));
+    }
+    Ok(())
+}
+
 // ---- scalar encoders / decoders -----------------------------------------
 
 fn enc_f64(v: f64) -> Json {
@@ -491,9 +548,10 @@ fn dec_slot(j: &Json) -> Result<SlotSnapshot, PersistError> {
     })
 }
 
-/// Encode a full run snapshot, including the format version stamp.
+/// Encode a full run snapshot, including the format version stamp and
+/// an FNV-1a checksum over the canonical body text.
 pub fn encode_snapshot(snap: &RunSnapshot) -> Json {
-    obj(vec![
+    let mut body = obj(vec![
         ("format", Json::Num(FORMAT_VERSION as f64)),
         ("algo", Json::Str(snap.algo.name().to_string())),
         ("problem", Json::Str(snap.problem.clone())),
@@ -505,11 +563,15 @@ pub fn encode_snapshot(snap: &RunSnapshot) -> Json {
         ("cutoff", enc_f64(snap.cutoff)),
         ("spawn_counter", enc_u64(snap.spawn_counter)),
         ("iters_done", enc_u64(snap.iters_done)),
-    ])
+    ]);
+    stamp_checksum(&mut body);
+    body
 }
 
-/// Decode a full run snapshot, rejecting unknown format versions.
+/// Decode a full run snapshot, verifying the integrity checksum (when
+/// present) and rejecting unknown format versions.
 pub fn decode_snapshot(j: &Json) -> Result<RunSnapshot, PersistError> {
+    verify_checksum(j)?;
     let found = get(j, "format")?
         .as_f64()
         .ok_or_else(|| corrupt("format: expected number"))? as u64;
@@ -572,6 +634,31 @@ mod tests {
         let back = Json::parse(&text).unwrap();
         assert_eq!(dec_stop_reason(&back, "a").unwrap(), Some(StopReason::TolFun));
         assert_eq!(dec_stop_reason(&back, "b").unwrap(), None);
+    }
+
+    #[test]
+    fn checksum_round_trips_and_detects_corruption() {
+        let mut j = obj(vec![
+            ("format", Json::Num(FORMAT_VERSION as f64)),
+            ("x", enc_f64(1.5)),
+        ]);
+        stamp_checksum(&mut j);
+        let text = j.to_string();
+        assert!(text.contains("\"checksum\""));
+        let back = Json::parse(&text).unwrap();
+        verify_checksum(&back).unwrap();
+
+        // One flipped payload character must surface as a typed Corrupt
+        // error (1.5 encodes as hex-bits 3ff8...).
+        let flipped = text.replace("3ff8", "3ff9");
+        assert_ne!(flipped, text, "test flips a real payload character");
+        match verify_checksum(&Json::parse(&flipped).unwrap()) {
+            Err(PersistError::Corrupt(msg)) => assert!(msg.contains("checksum mismatch"), "{msg}"),
+            other => panic!("expected checksum mismatch, got {other:?}"),
+        }
+
+        // Snapshots written before the checksum existed stay loadable.
+        verify_checksum(&obj(vec![("format", Json::Num(1.0))])).unwrap();
     }
 
     #[test]

@@ -22,13 +22,23 @@
 //!   (σ can legitimately overflow to `inf` before TolUpSigma fires).
 //! * **Dependency-free.** Snapshots are JSON via the crate's own
 //!   [`crate::runtime::json`] writer/parser; no serde.
-//! * **Atomic.** [`SnapshotStore`] writes `snap-NNNNNN.json` through a
-//!   temp file + `rename` in the same directory, so a crash mid-write
-//!   never corrupts an existing snapshot; a `manifest.json` (also
-//!   written atomically) carries a human-readable index.
+//! * **Atomic and durable.** [`SnapshotStore`] writes `snap-NNNNNN.json`
+//!   through a temp file + `rename` in the same directory, with the temp
+//!   file fsync'd before the rename and the directory fsync'd after it
+//!   (on Unix), so a crash — including power loss — never corrupts an
+//!   existing snapshot; a `manifest.json` (also written atomically)
+//!   carries a human-readable index.
 //! * **Versioned.** Every file records [`FORMAT_VERSION`]; loading a
 //!   different version is a typed [`PersistError::Version`] error, not
 //!   a parse failure deep in some field.
+//! * **Checksummed and self-healing.** Every snapshot and the manifest
+//!   carry an FNV-1a checksum over their canonical text ([`fnv1a`]);
+//!   a mismatch is a typed [`PersistError::Corrupt`]. Resuming from a
+//!   directory ([`SnapshotStore::load_resume`]) verifies newest-first,
+//!   quarantines each corrupt file as `snap-NNNNNN.json.corrupt`, and
+//!   walks back to the newest snapshot that still verifies — one
+//!   bit-flipped file costs a few generations of progress, not the run.
+//!   Checksum-less snapshots from older builds still load.
 //!
 //! See the "Durability & fault injection" section of the [`crate::api`]
 //! docs for how this composes with fault injection
@@ -39,7 +49,7 @@ mod store;
 
 use std::fmt;
 
-pub use codec::{decode_descent, decode_snapshot, encode_descent, encode_snapshot};
+pub use codec::{decode_descent, decode_snapshot, encode_descent, encode_snapshot, fnv1a};
 pub use store::SnapshotStore;
 
 /// Version stamp written into every snapshot file and the manifest.

@@ -1,11 +1,15 @@
 //! Atomic on-disk snapshot store: numbered `snap-NNNNNN.json` files
-//! plus a human-readable `manifest.json`, all written via temp file +
-//! rename so a crash mid-write never corrupts existing snapshots.
+//! plus a human-readable `manifest.json`, all written via fsync'd temp
+//! file + rename so a crash mid-write — including power loss — never
+//! corrupts existing snapshots. Resuming from a directory self-heals:
+//! corrupt files are quarantined as `snap-NNNNNN.json.corrupt` and the
+//! newest snapshot that still verifies wins.
 
 use std::fs;
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
-use super::codec::{decode_snapshot, encode_snapshot};
+use super::codec::{decode_snapshot, encode_snapshot, stamp_checksum};
 use super::{PersistError, FORMAT_VERSION};
 use crate::runtime::json::Json;
 use crate::strategies::{RunSnapshot, SnapshotSink};
@@ -17,6 +21,12 @@ use crate::strategies::{RunSnapshot, SnapshotSink};
 pub struct SnapshotStore {
     dir: PathBuf,
     next_seq: u64,
+    /// `(seq, file name)` of every snapshot known to this handle,
+    /// ascending — seeded by one directory scan in [`SnapshotStore::open`]
+    /// and appended to incrementally, so writing the manifest is O(n) in
+    /// the snapshot count rather than re-scanning the directory on every
+    /// append (O(n²) over a long run).
+    files: Vec<(u64, String)>,
 }
 
 fn seq_of(name: &str) -> Option<u64> {
@@ -29,14 +39,18 @@ impl SnapshotStore {
     pub fn open(dir: impl Into<PathBuf>) -> Result<SnapshotStore, PersistError> {
         let dir = dir.into();
         fs::create_dir_all(&dir)?;
-        let mut next_seq = 0;
+        let mut files = Vec::new();
         for entry in fs::read_dir(&dir)? {
             let entry = entry?;
-            if let Some(seq) = entry.file_name().to_str().and_then(seq_of) {
-                next_seq = next_seq.max(seq + 1);
+            if let Some(name) = entry.file_name().to_str() {
+                if let Some(seq) = seq_of(name) {
+                    files.push((seq, name.to_string()));
+                }
             }
         }
-        Ok(SnapshotStore { dir, next_seq })
+        files.sort_by_key(|(seq, _)| *seq);
+        let next_seq = files.last().map_or(0, |(seq, _)| seq + 1);
+        Ok(SnapshotStore { dir, next_seq, files })
     }
 
     pub fn dir(&self) -> &Path {
@@ -44,6 +58,9 @@ impl SnapshotStore {
     }
 
     /// Sequence numbers + paths of every snapshot present, ascending.
+    /// Re-scans the directory (files may have been quarantined or
+    /// removed behind this handle's back); the incremental `files` list
+    /// is only trusted for manifest writing on the append path.
     pub fn snapshots(&self) -> Result<Vec<(u64, PathBuf)>, PersistError> {
         let mut out = Vec::new();
         for entry in fs::read_dir(&self.dir)? {
@@ -69,12 +86,15 @@ impl SnapshotStore {
         encode_snapshot(snap).write(&mut text);
         self.write_atomic(&name, &text)?;
         self.next_seq = seq + 1;
+        self.files.push((seq, name.clone()));
         self.write_manifest(snap, seq, &name)?;
         Ok(seq)
     }
 
     /// Write `manifest.json`: a decimal, human-readable index of the
-    /// directory (the snapshots themselves stay bit-exact hex).
+    /// directory (the snapshots themselves stay bit-exact hex), built
+    /// from the incrementally maintained file list and stamped with the
+    /// same FNV-1a checksum as the snapshots.
     fn write_manifest(
         &mut self,
         last: &RunSnapshot,
@@ -82,18 +102,16 @@ impl SnapshotStore {
         last_file: &str,
     ) -> Result<(), PersistError> {
         use std::collections::BTreeMap;
-        let mut files = Vec::new();
-        for (seq, path) in self.snapshots()? {
-            let name = path
-                .file_name()
-                .and_then(|n| n.to_str())
-                .unwrap_or("")
-                .to_string();
-            let mut e = BTreeMap::new();
-            e.insert("seq".to_string(), Json::Num(seq as f64));
-            e.insert("file".to_string(), Json::Str(name));
-            files.push(Json::Obj(e));
-        }
+        let files = self
+            .files
+            .iter()
+            .map(|(seq, name)| {
+                let mut e = BTreeMap::new();
+                e.insert("seq".to_string(), Json::Num(*seq as f64));
+                e.insert("file".to_string(), Json::Str(name.clone()));
+                Json::Obj(e)
+            })
+            .collect();
         let mut m = BTreeMap::new();
         m.insert("format".to_string(), Json::Num(FORMAT_VERSION as f64));
         m.insert("algo".to_string(), Json::Str(last.algo.name().to_string()));
@@ -104,22 +122,33 @@ impl SnapshotStore {
         m.insert("total_evals".to_string(), Json::Num(last.total_evals as f64));
         m.insert("iters_done".to_string(), Json::Num(last.iters_done as f64));
         m.insert("snapshots".to_string(), Json::Arr(files));
+        let mut manifest = Json::Obj(m);
+        stamp_checksum(&mut manifest);
         let mut text = String::new();
-        Json::Obj(m).write(&mut text);
+        manifest.write(&mut text);
         self.write_atomic("manifest.json", &text)
     }
 
-    /// Crash-safe write: temp file in the same directory, then rename
-    /// (atomic within one filesystem).
+    /// Crash-safe, durable write: temp file in the same directory,
+    /// fsync'd before an atomic rename, then (on Unix) the directory
+    /// itself fsync'd so the rename survives power loss. Without the
+    /// first fsync the rename can land before the data blocks and a
+    /// crash leaves a *complete-looking* empty/partial file — the one
+    /// failure mode rename alone cannot rule out.
     fn write_atomic(&self, name: &str, text: &str) -> Result<(), PersistError> {
         let tmp = self.dir.join(format!(".tmp-{name}"));
         let dst = self.dir.join(name);
-        fs::write(&tmp, text)?;
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+        drop(f);
         fs::rename(&tmp, &dst)?;
+        #[cfg(unix)]
+        fs::File::open(&self.dir)?.sync_all()?;
         Ok(())
     }
 
-    /// Load one snapshot file.
+    /// Load one snapshot file, verifying its checksum when present.
     pub fn load(path: &Path) -> Result<RunSnapshot, PersistError> {
         let text = fs::read_to_string(path)?;
         let json = Json::parse(&text)
@@ -127,15 +156,48 @@ impl SnapshotStore {
         decode_snapshot(&json)
     }
 
+    /// Move a snapshot that failed to load aside as `<name>.corrupt` so
+    /// the next scan skips it (the `.corrupt` suffix makes it invisible
+    /// to [`seq_of`]) while keeping the bytes for post-mortems.
+    fn quarantine(path: &Path, why: &PersistError) {
+        let mut to = path.as_os_str().to_owned();
+        to.push(".corrupt");
+        match fs::rename(path, &to) {
+            Ok(()) => eprintln!(
+                "warning: quarantined corrupt snapshot {} ({why})",
+                path.display()
+            ),
+            Err(e) => eprintln!(
+                "warning: corrupt snapshot {} could not be quarantined: {e}",
+                path.display()
+            ),
+        }
+    }
+
     /// Resolve a resume path: a snapshot file loads directly; a
-    /// directory loads its newest snapshot.
+    /// directory self-heals — snapshots are tried newest-first, each
+    /// corrupt one is quarantined as `snap-NNNNNN.json.corrupt`, and the
+    /// newest snapshot that still verifies wins. Only corruption is
+    /// healed this way; I/O and format-version errors still propagate.
     pub fn load_resume(path: &Path) -> Result<RunSnapshot, PersistError> {
         if path.is_dir() {
             let store = SnapshotStore::open(path)?;
-            match store.latest()? {
-                Some(p) => SnapshotStore::load(&p),
-                None => Err(PersistError::NotFound(path.display().to_string())),
+            let mut snaps = store.snapshots()?;
+            if snaps.is_empty() {
+                return Err(PersistError::NotFound(path.display().to_string()));
             }
+            let total = snaps.len();
+            while let Some((_, p)) = snaps.pop() {
+                match SnapshotStore::load(&p) {
+                    Ok(snap) => return Ok(snap),
+                    Err(e @ PersistError::Corrupt(_)) => SnapshotStore::quarantine(&p, &e),
+                    Err(e) => return Err(e),
+                }
+            }
+            Err(PersistError::Corrupt(format!(
+                "all {total} snapshot(s) in {} corrupt (quarantined)",
+                path.display()
+            )))
         } else if path.is_file() {
             SnapshotStore::load(path)
         } else {
@@ -237,6 +299,57 @@ mod tests {
             SnapshotStore::load_resume(&dir.join("nope.json")),
             Err(PersistError::NotFound(_))
         ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_quarantines_corrupt_newest_and_walks_back() {
+        let dir = tmp_dir("quarantine");
+        let snap = tiny_snapshot();
+        let mut store = SnapshotStore::open(&dir).unwrap();
+        store.append(&snap).unwrap();
+        store.append(&snap).unwrap();
+        // Truncate the newest snapshot to half its length.
+        let newest = dir.join("snap-000001.json");
+        let text = fs::read_to_string(&newest).unwrap();
+        fs::write(&newest, &text[..text.len() / 2]).unwrap();
+
+        let back = SnapshotStore::load_resume(&dir).unwrap();
+        assert_eq!(back.total_evals, snap.total_evals);
+        assert!(dir.join("snap-000001.json.corrupt").exists(), "bad file quarantined");
+        assert!(!newest.exists(), "bad file moved aside");
+        // The quarantined file no longer counts toward numbering.
+        let store = SnapshotStore::open(&dir).unwrap();
+        assert_eq!(store.snapshots().unwrap().len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn all_snapshots_corrupt_is_a_typed_error() {
+        let dir = tmp_dir("allcorrupt");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("snap-000000.json"), "").unwrap();
+        fs::write(dir.join("snap-000001.json"), "{ not json").unwrap();
+        match SnapshotStore::load_resume(&dir) {
+            Err(PersistError::Corrupt(msg)) => assert!(msg.contains("all 2"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        assert!(dir.join("snap-000000.json.corrupt").exists());
+        assert!(dir.join("snap-000001.json.corrupt").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_and_manifest_carry_verifying_checksums() {
+        let dir = tmp_dir("checksums");
+        let snap = tiny_snapshot();
+        let mut store = SnapshotStore::open(&dir).unwrap();
+        store.append(&snap).unwrap();
+        for name in ["snap-000000.json", "manifest.json"] {
+            let j = Json::parse(&fs::read_to_string(dir.join(name)).unwrap()).unwrap();
+            assert!(j.get("checksum").is_some(), "{name} has a checksum");
+            super::super::codec::verify_checksum(&j).unwrap();
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -160,6 +160,9 @@ pub struct RunTrace {
     pub comm: CommStats,
     /// Real CPU seconds consumed producing this virtual run.
     pub real_s: f64,
+    /// `Some(last sink error)` when checkpointing was disabled mid-run
+    /// after exhausting its [`RetryPolicy`]; the run itself completed.
+    pub checkpoint_degraded: Option<String>,
 }
 
 impl RunTrace {
@@ -219,12 +222,78 @@ pub trait SnapshotSink {
     fn write(&mut self, snap: &RunSnapshot) -> Result<u64, String>;
 }
 
+/// Fault-injection sink: accepts `ok_writes` snapshots, then fails every
+/// subsequent write — the real-backend analogue of
+/// [`crate::cluster::FaultPlan`] for exercising the degraded-mode
+/// checkpointing path in tests.
+pub struct FailingSink {
+    ok_left: usize,
+    seq: u64,
+}
+
+impl FailingSink {
+    pub fn new(ok_writes: usize) -> FailingSink {
+        FailingSink { ok_left: ok_writes, seq: 0 }
+    }
+}
+
+impl SnapshotSink for FailingSink {
+    fn write(&mut self, _snap: &RunSnapshot) -> Result<u64, String> {
+        if self.ok_left > 0 {
+            self.ok_left -= 1;
+            self.seq += 1;
+            Ok(self.seq - 1)
+        } else {
+            Err("injected sink failure".to_string())
+        }
+    }
+}
+
+fn real_sleep(s: f64) {
+    if s > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(s));
+    }
+}
+
+/// Bounded-backoff retry for checkpoint writes: a transient storage
+/// hiccup (ENOSPC clearing, NFS blip) gets `attempts` tries with
+/// exponential backoff before the engine gives up and degrades —
+/// disabling checkpointing for the rest of the run instead of aborting
+/// it. `sleep` is an injectable clock so tests drive the retry/degrade
+/// path without wall time.
+#[derive(Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total write attempts per snapshot (at least 1 is always made).
+    pub attempts: usize,
+    /// Backoff before retry `i` (1-based) is `backoff_s · 2^(i-1)`.
+    pub backoff_s: f64,
+    /// Clock used between attempts; tests pass a no-op `fn`.
+    pub sleep: fn(f64),
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { attempts: 3, backoff_s: 0.05, sleep: real_sleep }
+    }
+}
+
+impl std::fmt::Debug for RetryPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RetryPolicy")
+            .field("attempts", &self.attempts)
+            .field("backoff_s", &self.backoff_s)
+            .finish()
+    }
+}
+
 /// Checkpoint cadence + destination, threaded through [`Exec`].
 pub struct Checkpoint<'a> {
     /// Write a snapshot every this many committed engine iterations
     /// (across all slots). 0 disables.
     pub every: usize,
     pub sink: &'a mut dyn SnapshotSink,
+    /// What to do when a write fails (see [`RetryPolicy`]).
+    pub retry: RetryPolicy,
 }
 
 /// Execution context threaded from the [`crate::api::Solver`] facade
@@ -323,6 +392,9 @@ pub struct Engine<'a> {
     backups: Vec<Option<SlotBackup>>,
     /// Which scheduled faults already fired (each fires at most once).
     faults_used: Vec<bool>,
+    /// Last sink error once checkpointing was disabled mid-run
+    /// (surfaced in [`RunTrace::checkpoint_degraded`]).
+    checkpoint_degraded: Option<String>,
     exec: Exec<'a>,
 }
 
@@ -348,6 +420,7 @@ impl<'a> Engine<'a> {
             iters_done: 0,
             backups: Vec::new(),
             faults_used: Vec::new(),
+            checkpoint_degraded: None,
             exec: Exec::default(),
         }
     }
@@ -523,6 +596,7 @@ impl<'a> Engine<'a> {
             iters_done: snap.iters_done,
             backups,
             faults_used,
+            checkpoint_degraded: None,
             exec,
         };
         let resume_t = eng
@@ -541,24 +615,44 @@ impl<'a> Engine<'a> {
 
     fn write_checkpoint(&mut self) {
         let snap = self.snapshot();
-        let res = match self.exec.checkpoint.as_mut() {
-            Some(cp) => cp.sink.write(&snap),
+        let t_s = snap.slots.iter().map(|s| s.t).fold(0.0f64, f64::max);
+        let outcome = match self.exec.checkpoint.as_mut() {
             None => return,
-        };
-        match res {
-            Ok(seq) => {
-                let t_s = snap
-                    .slots
-                    .iter()
-                    .map(|s| s.t)
-                    .fold(0.0f64, f64::max);
-                self.exec.emit(&Event::Checkpoint { seq, t_s });
+            Some(cp) => {
+                // Transient storage hiccups get bounded-backoff retries
+                // before the run degrades.
+                let mut last_err = String::new();
+                let mut written = None;
+                for attempt in 0..cp.retry.attempts.max(1) {
+                    if attempt > 0 {
+                        let backoff =
+                            cp.retry.backoff_s * (1u64 << (attempt - 1).min(20)) as f64;
+                        (cp.retry.sleep)(backoff);
+                    }
+                    match cp.sink.write(&snap) {
+                        Ok(seq) => {
+                            written = Some(seq);
+                            break;
+                        }
+                        Err(e) => last_err = e,
+                    }
+                }
+                written.ok_or(last_err)
             }
+        };
+        match outcome {
+            Ok(seq) => self.exec.emit(&Event::Checkpoint { seq, t_s }),
             Err(e) => {
-                // A failed write must not kill hours of optimization:
-                // warn once and stop checkpointing.
-                eprintln!("ipopcma: checkpoint write failed ({e}); checkpointing disabled");
+                // Retries exhausted. A failed write must not kill hours
+                // of optimization: surface the degradation and carry on
+                // with checkpointing disabled.
+                eprintln!(
+                    "ipopcma: checkpoint write failed after retries ({e}); \
+                     checkpointing disabled, run continues"
+                );
                 self.exec.checkpoint = None;
+                self.checkpoint_degraded = Some(e.clone());
+                self.exec.emit(&Event::CheckpointDegraded { error: e, t_s });
             }
         }
     }
@@ -722,6 +816,17 @@ impl<'a> Engine<'a> {
             for index in hit_lo..hit_hi {
                 let target = self.cfg.targets[index];
                 self.exec.emit(&Event::TargetHit { slot, index, target, t_s: t_now });
+            }
+            if report.eval_panics > 0 {
+                // Contained objective panics (real backends only): the
+                // generation already ran with NaN fitness for the lost
+                // points; announce the fault before its Iteration row.
+                self.exec.emit(&Event::EvalPanic {
+                    slot,
+                    panics: report.eval_panics,
+                    lambda,
+                    t_s: t_now,
+                });
             }
             self.exec.emit(&Event::Iteration {
                 slot,
@@ -892,6 +997,7 @@ impl<'a> Engine<'a> {
             occupancy,
             comm: self.comm,
             real_s: real_t0.elapsed().as_secs_f64(),
+            checkpoint_degraded: self.checkpoint_degraded,
         }
     }
 }
@@ -996,7 +1102,11 @@ mod tests {
         let mut sink = MemSink { snaps: Vec::new() };
         let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed)
             .with_exec(Exec {
-                checkpoint: Some(Checkpoint { every: 5, sink: &mut sink }),
+                checkpoint: Some(Checkpoint {
+                    every: 5,
+                    sink: &mut sink,
+                    retry: RetryPolicy::default(),
+                }),
                 ..Exec::default()
             });
         eng.spawn(1, 0, Communicator::world(6), 0.0);
@@ -1017,6 +1127,44 @@ mod tests {
         for (a, b) in tr.hits.hits.iter().zip(&tr2.hits.hits) {
             assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits));
         }
+    }
+
+    #[test]
+    fn failing_sink_degrades_without_aborting() {
+        let inst = Instance::new(1, 4, 1);
+        let mut c = cfg(19);
+        c.cost =
+            crate::cluster::CostModel::deterministic(6, 0.0, crate::cluster::DetCost::default());
+        let mut sink = FailingSink::new(1); // first write lands, rest fail
+        let mut rec = crate::core::Recorder::new();
+        let mut eng = Engine::new(&inst, &c, Mode::Parallel, Algo::KDistributed)
+            .with_exec(Exec {
+                checkpoint: Some(Checkpoint {
+                    every: 3,
+                    sink: &mut sink,
+                    // Injectable clock: the test retries without wall time.
+                    retry: RetryPolicy { attempts: 2, backoff_s: 1e9, sleep: |_| {} },
+                }),
+                observer: Some(&mut rec),
+                ..Exec::default()
+            });
+        eng.spawn(1, 0, Communicator::world(6), 0.0);
+        eng.run(&mut NoContinuation);
+        let tr = eng.into_trace(Instant::now());
+        assert!(tr.hits.all_hit(), "run completes despite the dead sink");
+        let degraded = tr.checkpoint_degraded.as_deref().unwrap();
+        assert!(degraded.contains("injected sink failure"), "{degraded}");
+        assert_eq!(rec.count(|e| matches!(e, Event::Checkpoint { .. })), 1);
+        assert_eq!(rec.count(|e| matches!(e, Event::CheckpointDegraded { .. })), 1);
+        // Degradation disables checkpointing: no Checkpoint after it.
+        let degr_at = rec
+            .events
+            .iter()
+            .position(|e| matches!(e, Event::CheckpointDegraded { .. }))
+            .unwrap();
+        assert!(rec.events[degr_at..]
+            .iter()
+            .all(|e| !matches!(e, Event::Checkpoint { .. })));
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub mod k_replicated;
 pub mod sequential;
 
 pub use engine::{
-    Checkpoint, DescentTrace, Engine, Exec, Mode, NoContinuation, Policy, RunSnapshot,
-    RunTrace, SlotSnapshot, SnapshotSink, VirtualConfig,
+    Checkpoint, DescentTrace, Engine, Exec, FailingSink, Mode, NoContinuation, Policy,
+    RetryPolicy, RunSnapshot, RunTrace, SlotSnapshot, SnapshotSink, VirtualConfig,
 };
 pub use k_distributed::{run_k_distributed, run_k_distributed_exec, resume_k_distributed_exec};
 pub use k_replicated::{run_k_replicated, run_k_replicated_exec, resume_k_replicated_exec};

@@ -40,7 +40,13 @@
 //! * `descent_end` — `slot`, `k`, `replica`, `stop` (stop-reason name
 //!   or `null` for a budget cut), `end_s`.
 //! * `checkpoint` / `restored` / `fault` / `recovered` — durability and
-//!   fault-injection annotations, fields as on [`Event`].
+//!   fault annotations, fields as on [`Event`]. `fault` rows cover both
+//!   virtual rank failures (`slot`, `core`, `t_s`) and contained
+//!   objective panics on real backends (`kind: "eval_panic"`, `slot`,
+//!   `panics`, `lambda`, `t_s`).
+//! * `checkpoint_degraded` — `error`, `t_s`; emitted at most once, when
+//!   snapshot writes exhausted their retries and checkpointing was
+//!   disabled for the rest of the (still continuing) run.
 //! * `run_end` — `best_delta`, `end_s`, `total_evals`, `descents`.
 //!
 //! Determinism: every field except the wall-clock-derived ones — the
@@ -263,6 +269,23 @@ impl Observer for TraceWriter {
                 "fault",
                 vec![("slot", unum(slot)), ("core", unum(core)), ("t_s", num(t_s))],
             ),
+            // Contained objective panics share the `fault` row kind (so
+            // fault counters aggregate both real and virtual faults) with
+            // a `kind` discriminator telling them apart.
+            Event::EvalPanic { slot, panics, lambda, t_s } => self.row(
+                "fault",
+                vec![
+                    ("kind", Json::Str("eval_panic".to_string())),
+                    ("slot", unum(slot)),
+                    ("panics", unum(panics)),
+                    ("lambda", unum(lambda)),
+                    ("t_s", num(t_s)),
+                ],
+            ),
+            Event::CheckpointDegraded { ref error, t_s } => self.row(
+                "checkpoint_degraded",
+                vec![("error", Json::Str(error.clone())), ("t_s", num(t_s))],
+            ),
             Event::Recovered { slot, cores_left, recovery_s, t_s } => self.row(
                 "recovered",
                 vec![
@@ -317,9 +340,14 @@ pub struct TraceFile {
     /// Per-slot stop reason name from `descent_end` (`None` = budget cut).
     pub stops: BTreeMap<usize, Option<String>>,
     pub checkpoints: usize,
+    /// `fault` rows: virtual rank failures *and* contained objective
+    /// panics (`kind: "eval_panic"`).
     pub faults: usize,
     pub restored: usize,
     pub target_hits: usize,
+    /// Last `checkpoint_degraded` row's error, if the run disabled
+    /// checkpointing after exhausting its write retries.
+    pub checkpoint_degraded: Option<String>,
 }
 
 fn req(j: &Json, key: &str, ln: usize) -> Result<f64, String> {
@@ -428,6 +456,10 @@ pub fn read_file(path: impl AsRef<Path>) -> Result<TraceFile, String> {
             "checkpoint" => tf.checkpoints += 1,
             "restored" => tf.restored += 1,
             "fault" => tf.faults += 1,
+            "checkpoint_degraded" => {
+                tf.checkpoint_degraded =
+                    Some(j.get("error").and_then(Json::as_str).unwrap_or("").to_string());
+            }
             _ => {}
         }
     }
@@ -504,6 +536,11 @@ pub fn summary(tf: &TraceFile) -> String {
         tf.checkpoints,
         tf.faults,
     ));
+    if let Some(err) = &tf.checkpoint_degraded {
+        out.push_str(&format!(
+            "WARNING: checkpointing degraded mid-run ({err}) — later progress has no snapshots\n\n"
+        ));
+    }
     // Zero `gen` rows (target hit before the first generation, or a
     // truncated file) must not panic or render NaN averages — there is
     // nothing to tabulate, so say so and stop.
@@ -763,6 +800,23 @@ mod tests {
         assert_eq!(tf.gens[0].best_so_far, None);
         assert!(tf.gens[0].kernel.is_none());
         assert!(tf.gens[0].worker.is_none());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fault_and_degradation_rows_round_trip() {
+        let path = tmp("faultrows.jsonl");
+        let mut w = TraceWriter::create(&path).unwrap();
+        w.on_event(&Event::RunStart { algo: "x", dim: 2, targets: 1 });
+        w.on_event(&Event::EvalPanic { slot: 0, panics: 3, lambda: 8, t_s: 0.5 });
+        w.on_event(&Event::CheckpointDegraded { error: "disk on fire".to_string(), t_s: 0.7 });
+        w.finish().unwrap();
+        let tf = read_file(&path).unwrap();
+        assert_eq!(tf.faults, 1, "eval_panic lands in the fault counter");
+        assert_eq!(tf.checkpoint_degraded.as_deref(), Some("disk on fire"));
+        let s = summary(&tf);
+        assert!(s.contains("faults=1"), "{s}");
+        assert!(s.contains("checkpointing degraded"), "{s}");
         let _ = fs::remove_file(&path);
     }
 

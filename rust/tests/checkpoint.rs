@@ -12,7 +12,9 @@ use ipopcma::ipop::IpopConfig;
 use ipopcma::metrics::paper_targets;
 use ipopcma::persist::{decode_descent, decode_snapshot, encode_descent, encode_snapshot};
 use ipopcma::runtime::json::Json;
-use ipopcma::strategies::{Algo, Checkpoint, Exec, RunSnapshot, RunTrace, SnapshotSink, VirtualConfig};
+use ipopcma::strategies::{
+    Algo, Checkpoint, Exec, RetryPolicy, RunSnapshot, RunTrace, SnapshotSink, VirtualConfig,
+};
 
 /// In-memory sink capturing every snapshot the engine writes.
 #[derive(Default)]
@@ -116,7 +118,11 @@ fn run_with_snapshots(
         inst,
         cfg,
         Exec {
-            checkpoint: Some(Checkpoint { every: 3, sink: &mut sink }),
+            checkpoint: Some(Checkpoint {
+                every: 3,
+                sink: &mut sink,
+                retry: RetryPolicy::default(),
+            }),
             ..Exec::default()
         },
     );
